@@ -1,0 +1,149 @@
+"""LMS component benchmarks — one per paper table/figure/claim.
+
+The paper has no numeric tables; its measurable claims are architectural:
+(§I) "continuous monitoring ... might cause significant overhead" must be
+refuted, (§III.A) batched line-protocol transmission, (§III.B) router
+tagging cost, (§V/Fig. 4) rule evaluation, (§III.D/Fig. 2) dashboard
+generation.  Each benchmark prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (MonitoringStack, MetricsRouter, Point, StreamAnalyzer,
+                        TSDBServer, UserMetric, default_rules, now_ns)
+from repro.core.analysis import evaluate_rule
+from repro.core.line_protocol import decode_batch, encode_batch
+
+
+def _time(fn, n, *, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best / n * 1e6          # us per item
+
+
+def bench_line_protocol(n=20_000):
+    pts = [Point("hpm", {"hostname": f"h{i % 64}", "jobid": "j"},
+                 {"mfu": 0.41, "step": i, "gflops_per_s": 1234.5}, i)
+           for i in range(n)]
+    enc = encode_batch(pts)
+    us_enc = _time(lambda: encode_batch(pts), n)
+    us_dec = _time(lambda: decode_batch(enc), n)
+    return [("line_protocol_encode", us_enc, f"{1e6 / us_enc:.0f} pts/s"),
+            ("line_protocol_decode", us_dec, f"{1e6 / us_dec:.0f} pts/s")]
+
+
+def bench_ingest(n=20_000):
+    """usermetric -> router -> TSDB, batched (paper §IV) vs point-at-a-time."""
+    out = []
+    for batch_size, label in ((64, "batched64"), (1, "unbatched")):
+        router = MetricsRouter(TSDBServer())
+        um = UserMetric(router, batch_size=batch_size,
+                        flush_interval_s=9999, hostname="h0")
+
+        def run():
+            for i in range(n):
+                um.metric("pressure", float(i))
+            um.flush()
+        us = _time(run, n, reps=1)
+        out.append((f"ingest_{label}", us, f"{1e6 / us:.0f} pts/s"))
+    return out
+
+
+def bench_router_tagging(n=20_000):
+    """Tag-store enrichment cost (paper §I overhead concern)."""
+    out = []
+    for jobs, label in ((0, "untagged"), (1, "tagged")):
+        router = MetricsRouter(TSDBServer(), per_job_db=bool(jobs))
+        if jobs:
+            router.job_start("j1", "alice", ["h0"], {"arch": "x"})
+        pts = [Point("m", {"hostname": "h0"}, {"v": float(i)}, i)
+               for i in range(n)]
+
+        def run():
+            router.write(pts)
+        us = _time(run, n, reps=1)
+        out.append((f"router_{label}", us, f"{1e6 / us:.0f} pts/s"))
+    return out
+
+
+def bench_detection(n=100_000):
+    """Fig. 4 rule evaluation: offline series scan + streaming analyzer."""
+    times = [i * 10**9 for i in range(n)]
+    values = [0.5 if (i // 1000) % 2 else 0.01 for i in range(n)]
+    rule = default_rules()[0]
+    us_off = _time(lambda: evaluate_rule(rule, times, values), n, reps=1)
+
+    an = StreamAnalyzer(default_rules())
+    pts = [Point("hpm", {"hostname": "h0"},
+                 {"mfu": values[i], "mem_gb_per_s": 5.0,
+                  "data_stall_frac": 0.01}, times[i])
+           for i in range(0, n, 10)]
+
+    def run():
+        for p in pts:
+            an.observe(p)
+    us_stream = _time(run, len(pts), reps=1)
+    return [("detect_offline_scan", us_off, f"{1e6 / us_off:.0f} pts/s"),
+            ("detect_streaming", us_stream,
+             f"{1e6 / us_stream:.0f} pts/s")]
+
+
+def bench_dashboard(steps=2000):
+    """Fig. 2: dashboard JSON+HTML generation for a populated job."""
+    import tempfile
+    stack = MonitoringStack.inprocess(out_dir=tempfile.mkdtemp())
+    hosts = [f"h{i}" for i in range(4)]
+    with stack.job("bench", user="u", hosts=hosts) as job:
+        agents = [stack.host_agent(h, hlo_flops=1e15, model_flops=8e14,
+                                   hlo_bytes=1e12, collective_bytes=1e11,
+                                   tokens_per_step=1e6) for h in hosts]
+        t0 = now_ns()
+        for s in range(steps):
+            for a in agents:
+                a.collect_step(step=s, step_time_s=1.0,
+                               ts=t0 + s * 10**9)
+    us = _time(lambda: stack.dashboards.write_dashboard(job), 1, reps=2)
+    us_admin = _time(lambda: stack.dashboards.write_admin_view(
+        stack.router.jobs.all_jobs()), 1, reps=2)
+    return [("dashboard_generate", us,
+             f"{steps * len(hosts)} pts scanned"),
+            ("dashboard_admin_view", us_admin, "1 job")]
+
+
+def bench_monitoring_overhead(steps=30):
+    """THE paper claim: job monitoring must not slow the job down.
+
+    Trains lms-demo-smoke with the full stack on vs. off and reports the
+    step-time delta."""
+    import tempfile
+    from repro.configs import ShapeConfig, TrainConfig, get_config
+    from repro.train.loop import train
+
+    cfg = get_config("lms-demo", smoke=True)
+    shape = ShapeConfig("bench", seq_len=64, global_batch=8, kind="train")
+
+    def run(monitor: bool):
+        tcfg = TrainConfig(total_steps=steps, warmup_steps=1,
+                           monitor=monitor)
+        stack = MonitoringStack.inprocess(out_dir=tempfile.mkdtemp()) \
+            if monitor else None
+        t = []
+        train(cfg, tcfg, shape, stack=stack,
+              step_callback=lambda s, m: t.append(time.perf_counter()))
+        return (t[-1] - t[len(t) // 2]) / (len(t) - len(t) // 2 - 1)
+
+    base = min(run(False) for _ in range(2))
+    mon = min(run(True) for _ in range(2))
+    ovh = (mon - base) / base * 100
+    return [("train_step_unmonitored", base * 1e6, "baseline"),
+            ("train_step_monitored", mon * 1e6,
+             f"{ovh:+.1f}% overhead")]
+
+
+ALL = [bench_line_protocol, bench_ingest, bench_router_tagging,
+       bench_detection, bench_dashboard, bench_monitoring_overhead]

@@ -1,0 +1,86 @@
+"""§Roofline table: aggregate the dry-run artifacts into the per-cell
+three-term roofline report (also consumed by EXPERIMENTS.md).
+
+Reads ``results/dryrun/<mesh>/<arch>__<shape>.json`` (written by
+``repro.launch.dryrun``) — run that first.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(out_dir: str = "results/dryrun", mesh: str = "pod16x16"):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(out_dir, mesh, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:8.2f}s "
+    return f"{s * 1e3:8.2f}ms"
+
+
+def table(cells, *, md: bool = False) -> str:
+    rows = []
+    hdr = ("arch", "shape", "compute", "memory", "collective", "dominant",
+           "useful", "pattern")
+    for c in cells:
+        if c["status"] != "ok":
+            rows.append((c["arch"], c["shape"], "-", "-", "-",
+                         c["status"], "-",
+                         c.get("reason", "")[:40]))
+            continue
+        r = c["roofline"]
+        rows.append((c["arch"], c["shape"],
+                     fmt_seconds(r["compute_s"]).strip(),
+                     fmt_seconds(r["memory_s"]).strip(),
+                     fmt_seconds(r["collective_s"]).strip(),
+                     r["dominant"],
+                     f"{r['useful_flop_ratio']:.3f}",
+                     r["classification"]["pattern"]))
+    w = [max(len(str(r[i])) for r in rows + [hdr]) for i in range(len(hdr))]
+    sep = " | " if md else "  "
+    lines = []
+    if md:
+        lines.append("| " + " | ".join(h.ljust(w[i]) for i, h in
+                                       enumerate(hdr)) + " |")
+        lines.append("|" + "|".join("-" * (w[i] + 2) for i in
+                                    range(len(hdr))) + "|")
+        for r in rows:
+            lines.append("| " + " | ".join(str(x).ljust(w[i]) for i, x in
+                                           enumerate(r)) + " |")
+    else:
+        lines.append(sep.join(h.ljust(w[i]) for i, h in enumerate(hdr)))
+        for r in rows:
+            lines.append(sep.join(str(x).ljust(w[i]) for i, x in
+                                  enumerate(r)))
+    return "\n".join(lines)
+
+
+def summarize(out_dir: str = "results/dryrun") -> str:
+    parts = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        cells = load_cells(out_dir, mesh)
+        if not cells:
+            continue
+        ok = sum(1 for c in cells if c["status"] == "ok")
+        sk = sum(1 for c in cells if c["status"] == "skipped")
+        er = len(cells) - ok - sk
+        parts.append(f"== mesh {mesh}: {ok} ok / {sk} skipped / {er} error")
+        parts.append(table(cells))
+        parts.append("")
+    return "\n".join(parts)
+
+
+def main():
+    print(summarize())
+
+
+if __name__ == "__main__":
+    main()

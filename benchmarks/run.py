@@ -1,0 +1,31 @@
+"""Benchmark runner: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,us_per_call,derived`` CSV for every LMS benchmark (one per
+paper claim — see bench_lms), then the dry-run roofline summary if the
+dry-run artifacts exist.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import bench_lms, roofline
+
+    print("name,us_per_call,derived")
+    for bench in bench_lms.ALL:
+        for name, us, derived in bench():
+            print(f"{name},{us:.2f},{derived}")
+            sys.stdout.flush()
+
+    if os.path.isdir("results/dryrun"):
+        print()
+        print("# Roofline summary (from results/dryrun; see EXPERIMENTS.md)")
+        print(roofline.summarize())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""The paper's integration story: LMS components used WITHOUT the training
+framework — an HTTP router endpoint fed by external collectors.
+
+    PYTHONPATH=src python examples/standalone_stack.py
+
+Starts the router's HTTP face (the InfluxDB-compatible /write API plus the
+job-signal endpoint), then plays three external clients against it:
+
+  1. a "Diamond-style" host daemon POSTing batched system metrics,
+  2. the libusermetric CLI sending app metrics/events from a "batch
+     script" (paper §IV),
+  3. a raw ``urllib`` client standing in for "cronjobs sending metrics
+     with curl" (paper §III.A).
+
+Everything lands tagged in the TSDB; the dashboard agent renders the job.
+"""
+
+import sys
+import urllib.request
+
+sys.path.insert(0, "src")
+
+from repro.core import (HttpSink, LMSHttpServer, MetricsRouter,
+                        MonitoringStack, Point, UserMetric, now_ns)
+from repro.core.usermetric_cli import main as cli
+
+
+def main():
+    stack = MonitoringStack.inprocess(out_dir="standalone_out",
+                                      serve_http=True)
+    url = stack.http.url
+    print(f"LMS router HTTP endpoint: {url}")
+
+    # job allocation signal (normally sent by the scheduler prolog)
+    sink = HttpSink(url)
+    sink.job_start("batch-7", "carol", ["n01", "n02"],
+                   {"queue": "standard"})
+
+    # 1. Diamond-style daemon: batched system metrics over HTTP
+    daemon = UserMetric(HttpSink(url), hostname="n01", batch_size=32)
+    t0 = now_ns()
+    for i in range(100):
+        daemon.metric("system", {"cpu_load_1m": 3.5 + 0.01 * i,
+                                 "net_tx_bytes": 1e6 * i},
+                      ts=t0 + i * 10 ** 9)
+    daemon.flush()
+
+    # 2. the usermetric CLI, as a batch script would call it
+    cli(["--url", url, "--hostname", "n02",
+         "event", "run_state", "starting miniMD"])
+    cli(["--url", url, "--hostname", "n02",
+         "metric", "pressure", "41.7", "--tag", "region=init"])
+
+    # 3. raw curl-style POST of line protocol
+    body = f"temperature,hostname=n01 celsius=61.5 {now_ns()}".encode()
+    urllib.request.urlopen(urllib.request.Request(
+        f"{url}/write?db=global", data=body, method="POST"))
+
+    sink.job_end("batch-7")
+
+    db = stack.backend.db("global")
+    print(f"measurements: {db.measurements()}")
+    for meas in ("system", "pressure", "temperature"):
+        for s in db.select(meas):
+            print(f"  {meas:12s} tags={s.tags}")
+    job = stack.router.jobs.get("batch-7")
+    print(f"dashboard: {stack.dashboards.write_dashboard(job)}")
+    stack.close()
+
+
+if __name__ == "__main__":
+    main()

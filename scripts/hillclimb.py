@@ -1,0 +1,102 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb harness: lower a (cell x variant), report the three
+roofline terms + memory.  Results append to results/hillclimb.jsonl.
+
+    PYTHONPATH=src python scripts/hillclimb.py granite-3-8b train_4k \
+        baseline recursive remat_none nm4
+"""
+
+import dataclasses
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, TrainConfig, get_config  # noqa: E402
+from repro.core.perf_groups import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
+from repro.launch.dryrun import default_train_cfg, model_flops_for  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_bundle, lower_bundle  # noqa: E402
+
+
+def variant_cfg(name: str, base: TrainConfig) -> TrainConfig:
+    v = dataclasses.replace(base)
+    for part in name.split("+"):
+        if part == "baseline":
+            pass
+        elif part == "recursive":
+            v.attn_impl = "recursive"
+        elif part.startswith("remat_"):
+            v.remat_policy = part[len("remat_"):]
+        elif part.startswith("nm"):
+            v.num_microbatches = int(part[2:])
+        elif part.startswith("unroll"):
+            v.scan_unroll = int(part[len("unroll"):])
+        elif part.startswith("opt_"):
+            v.optimizer = part[len("opt_"):]
+        elif part == "gradbf16":
+            v.grad_sync_dtype = "bfloat16"
+        elif part == "sp":
+            v.seq_parallel = True
+        elif part == "moea2a":
+            pass  # handled at model-config level in run()
+        else:
+            raise ValueError(f"unknown variant part {part!r}")
+    return v
+
+
+def run(arch: str, shape_name: str, variant: str, multi_pod=False) -> dict:
+    cfg = get_config(arch)
+    if "moea2a" in variant.split("+"):
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, impl="a2a"))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    dp = chips // mesh.devices.shape[-1]
+    tc = variant_cfg(variant, default_train_cfg(cfg, shape, dp))
+
+    t0 = time.monotonic()
+    bundle = build_bundle(cfg, shape, mesh, train_cfg=tc)
+    compiled = lower_bundle(bundle, mesh).compile()
+    mem = compiled.memory_analysis()
+    hlo = analyze_hlo(compiled.as_text())
+    g = hlo["per_device"]
+    out = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "chips": chips,
+        "compute_s": g["flops"] / PEAK_FLOPS,
+        "memory_s": g["bytes_fused"] / HBM_BW,
+        "collective_s": g["collective_wire_bytes"] / ICI_BW,
+        "temp_gb": mem.temp_size_in_bytes / 1e9,
+        "useful": model_flops_for(cfg, shape) / chips / g["flops"]
+        if g["flops"] else 0.0,
+        "compile_s": round(time.monotonic() - t0, 1),
+        "train_cfg": {"nm": tc.num_microbatches, "remat": tc.remat_policy,
+                      "attn": tc.attn_impl, "opt": tc.optimizer},
+    }
+    return out
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    variants = sys.argv[3:] or ["baseline"]
+    os.makedirs("results", exist_ok=True)
+    for v in variants:
+        r = run(arch, shape, v)
+        with open("results/hillclimb.jsonl", "a") as f:
+            f.write(json.dumps(r) + "\n")
+        print(f"{r['arch']:18s} {r['shape']:12s} {v:28s} "
+              f"c={r['compute_s']:8.3f} m={r['memory_s']:8.3f} "
+              f"x={r['collective_s']:8.3f} temp={r['temp_gb']:6.1f}GB "
+              f"useful={r['useful']:.3f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

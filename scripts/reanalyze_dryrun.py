@@ -1,0 +1,54 @@
+"""Re-run the HLO cost walker over saved dry-run HLO (no recompilation) and
+rewrite the per-cell JSONs (hlo_analysis + roofline sections)."""
+import glob
+import gzip
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.analysis import RooflineAnalyzer
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def main():
+    for path in sorted(glob.glob("results/dryrun/*/*.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        hlo_path = path.replace(".json", ".hlo.txt.gz")
+        try:
+            text = gzip.open(hlo_path, "rt").read()
+        except FileNotFoundError:
+            print(f"no HLO for {path}; skipping")
+            continue
+        hlo = analyze_hlo(text)
+        rec["hlo_analysis"] = hlo
+        chips = rec["roofline"]["chips"]
+        model_flops = rec["roofline"]["model_flops"]
+        roof = RooflineAnalyzer().analyze(
+            arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+            chips=chips, hlo_flops=hlo["global"]["flops"],
+            hbm_bytes=hlo["global"]["bytes_fused"],
+            collective_bytes=hlo["global"]["collective_wire_bytes"],
+            model_flops=model_flops)
+        rec["roofline"].update({
+            "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s, "dominant": roof.dominant,
+            "bound_step_s": roof.bound_s, "hlo_flops": roof.hlo_flops,
+            "useful_flop_ratio": roof.useful_flop_ratio,
+            "collective_operand_bytes_global":
+                hlo["global"]["collective_operand_bytes"],
+            "classification": roof.classify(),
+        })
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        r = rec["roofline"]
+        print(f"{rec['mesh']:11s} {rec['arch']:24s} {rec['shape']:12s} "
+              f"c={r['compute_s']:.3f} m={r['memory_s']:.3f} "
+              f"x={r['collective_s']:.3f} dom={r['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

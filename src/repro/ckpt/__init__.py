@@ -1,0 +1,7 @@
+"""Fault-tolerant checkpointing."""
+
+from repro.ckpt.checkpoint import (CheckpointManager, latest_step,
+                                   load_checkpoint, save_checkpoint)
+
+__all__ = ["CheckpointManager", "latest_step", "load_checkpoint",
+           "save_checkpoint"]

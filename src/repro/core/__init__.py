@@ -1,0 +1,125 @@
+"""LIKWID Monitoring Stack (LMS), TPU-native — the paper's contribution.
+
+``MonitoringStack`` wires the components of paper Fig. 1 together for the
+common case (in-process stack inside a training/serving job); every
+component also works standalone, which is the paper's headline design goal
+("components can be used as a complete stack, standalone or in parts").
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import uuid
+from typing import Optional
+
+from repro.core.analysis import (
+    DEFAULT_TREE, Finding, RooflineAnalyzer, RooflineResult, StreamAnalyzer,
+    ThresholdRule, classify_job, default_rules, evaluate_rules_on_db)
+from repro.core.dashboard import DashboardAgent
+from repro.core.host_agent import HostAgent
+from repro.core.httpd import HttpSink, LMSHttpServer
+from repro.core.jobs import JobInfo, JobRegistry
+from repro.core.line_protocol import (Point, decode_batch, decode_line,
+                                      encode_batch, encode_point, now_ns)
+from repro.core.perf_groups import (GROUPS, HBM_BW, ICI_BW, PEAK_FLOPS,
+                                    PerfGroup, derive_all, parse_group)
+from repro.core.router import MetricsRouter
+from repro.core.tsdb import Database, TSDBServer
+from repro.core.usermetric import UserMetric
+
+__all__ = [
+    "DEFAULT_TREE", "Database", "DashboardAgent", "Finding", "GROUPS",
+    "HBM_BW", "HostAgent", "HttpSink", "ICI_BW", "JobInfo", "JobRegistry",
+    "LMSHttpServer", "MetricsRouter", "MonitoringStack", "PEAK_FLOPS",
+    "PerfGroup", "Point", "RooflineAnalyzer", "RooflineResult",
+    "StreamAnalyzer", "TSDBServer", "ThresholdRule", "UserMetric",
+    "classify_job", "decode_batch", "decode_line", "default_rules",
+    "derive_all", "encode_batch", "encode_point", "evaluate_rules_on_db",
+    "now_ns", "parse_group",
+]
+
+
+class MonitoringStack:
+    """The full Fig. 1 stack, in-process: TSDB + router + agents + analysis.
+
+    Usage::
+
+        stack = MonitoringStack.inprocess(out_dir="runs/lms")
+        with stack.job("train-1", user="alice", hosts=hosts,
+                       tags={"arch": "lms-demo"}) as job:
+            um = stack.usermetric(host=hosts[0])
+            agent = stack.host_agent(hosts[0])
+            ... per step: agent.collect_step(...), um.metric(...)
+        stack.dashboards.write_dashboard(job)
+    """
+
+    def __init__(self, *, per_job_db: bool = True, per_user_db: bool = False,
+                 rules: Optional[list] = None, out_dir: str = "lms_out",
+                 persist_dir: Optional[str] = None,
+                 serve_http: bool = False):
+        self.backend = TSDBServer(persist_dir=persist_dir)
+        self.router = MetricsRouter(self.backend, per_job_db=per_job_db,
+                                    per_user_db=per_user_db)
+        self.analyzer = StreamAnalyzer(
+            rules if rules is not None else default_rules(),
+            on_finding=self._on_finding)
+        self.router.subscribe(self.analyzer)
+        self.dashboards = DashboardAgent(self.backend, out_dir=out_dir,
+                                         rules=self.analyzer.rules)
+        self.roofline = RooflineAnalyzer()
+        self.http: Optional[LMSHttpServer] = None
+        if serve_http:
+            self.http = LMSHttpServer(self.router).start()
+        self._finding_cbs = []
+
+    @classmethod
+    def inprocess(cls, **kw) -> "MonitoringStack":
+        return cls(**kw)
+
+    # -- findings fan-out ------------------------------------------------------
+
+    def on_finding(self, cb):
+        self._finding_cbs.append(cb)
+        return cb
+
+    def _on_finding(self, f: Finding):
+        for cb in self._finding_cbs:
+            try:
+                cb(f)
+            except Exception:
+                pass
+
+    # -- components --------------------------------------------------------------
+
+    def usermetric(self, host: Optional[str] = None, **tags) -> UserMetric:
+        return UserMetric(self.router, hostname=host,
+                          default_tags=tags or None)
+
+    def host_agent(self, hostname: str, **consts) -> HostAgent:
+        return HostAgent(self.router, hostname, consts or None)
+
+    # -- job lifecycle --------------------------------------------------------------
+
+    def job(self, job_id: Optional[str] = None, *, user: str = "user",
+            hosts: Optional[list] = None, tags: Optional[dict] = None):
+        stack = self
+        job_id = job_id or uuid.uuid4().hex[:8]
+        hosts = hosts or ["host0"]
+
+        class _JobCtx:
+            def __enter__(self):
+                self.info = stack.router.job_start(job_id, user, hosts, tags)
+                return self.info
+
+            def __exit__(self, exc_type, exc, tb):
+                stack.router.job_end(job_id)
+                return False
+        return _JobCtx()
+
+    def findings(self) -> list:
+        return list(self.analyzer.findings)
+
+    def close(self):
+        if self.http:
+            self.http.stop()

@@ -1,0 +1,346 @@
+"""Data-analysis methodology (paper §V).
+
+Three analysis layers, exactly as the paper structures them:
+
+1. **Pathological-job detection** — simple rules over resource-utilization
+   metrics using *thresholds and timeouts* (paper Fig. 4: FP rate and memory
+   bandwidth below thresholds for more than 10 minutes => "break in
+   computation").  Implemented as :class:`ThresholdRule` evaluated over TSDB
+   series, plus a streaming evaluator subscribed to the router for instant
+   feedback.
+
+2. **Performance-pattern decision tree** — marking applications with
+   significant optimization potential (Treibig/Hager performance patterns,
+   refined into a decision tree in the FEPA project).  Implemented as a data-
+   driven tree over derived metrics; on the TPU the discriminating metrics
+   are the three roofline terms, so the tree classifies jobs as compute-,
+   memory- or collective-bound (+ load imbalance / ingest-stall branches)
+   and attaches a remedy.
+
+3. **RooflineAnalyzer** — the assignment's three-term roofline, computed per
+   (arch x shape x mesh) cell from the dry-run's compiled artifact.  It both
+   fills EXPERIMENTS.md §Roofline and feeds layer 2.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.line_protocol import Point, now_ns
+from repro.core.perf_groups import HBM_BW, ICI_BW, PEAK_FLOPS
+
+# ==========================================================================
+# 1. Threshold + timeout rules
+# ==========================================================================
+
+_OPS = {
+    "<": lambda a, b: a < b,
+    ">": lambda a, b: a > b,
+    "<=": lambda a, b: a <= b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+@dataclass(frozen=True)
+class ThresholdRule:
+    """``metric op threshold`` sustained for ``min_duration_s`` => finding."""
+
+    name: str
+    measurement: str
+    metric: str
+    op: str
+    threshold: float
+    min_duration_s: float
+    severity: str = "warning"          # warning | critical
+    description: str = ""
+
+    def check(self, value: float) -> bool:
+        if value is None or (isinstance(value, float) and math.isnan(value)):
+            return self.op in ("<", "<=")   # NaN counts as "below threshold"
+        return _OPS[self.op](value, self.threshold)
+
+
+@dataclass
+class Finding:
+    rule: str
+    severity: str
+    host: str
+    start_ns: int
+    end_ns: int
+    evidence: str
+
+    @property
+    def duration_s(self) -> float:
+        return (self.end_ns - self.start_ns) / 1e9
+
+
+# Default rule set: the paper's elementary resource-utilization checks,
+# translated to TPU-job metrics (DESIGN.md §2).  Thresholds are config knobs.
+def default_rules(*, mfu_floor: float = 0.02, mem_floor_gbs: float = 1.0,
+                  idle_timeout_s: float = 60.0,
+                  straggler_skew: float = 0.15) -> list:
+    return [
+        ThresholdRule("compute_break", "hpm", "mfu", "<", mfu_floor,
+                      idle_timeout_s, "critical",
+                      "FP rate below threshold for too long -> break in "
+                      "computation (paper Fig. 4)"),
+        ThresholdRule("membw_break", "hpm", "mem_gb_per_s", "<",
+                      mem_floor_gbs, idle_timeout_s, "warning",
+                      "memory bandwidth below threshold -> idle/stalled"),
+        ThresholdRule("data_stall", "hpm", "data_stall_frac", ">", 0.3,
+                      idle_timeout_s, "warning",
+                      "input pipeline starves the accelerator"),
+        ThresholdRule("step_time_straggler", "hpm", "straggler_skew", ">",
+                      straggler_skew, idle_timeout_s / 2, "warning",
+                      "per-host step time skew -> straggler"),
+    ]
+
+
+def evaluate_rule(rule: ThresholdRule, times: list, values: list,
+                  host: str = "") -> list:
+    """Offline evaluation over one series -> list of Finding.
+
+    A finding opens when the condition first holds and closes when it stops;
+    only stretches longer than the rule's timeout are reported (Fig. 4).
+    """
+    findings = []
+    open_start = None
+    last_t = None
+    for t, v in zip(times, values):
+        if rule.check(v):
+            if open_start is None:
+                open_start = t
+        else:
+            if open_start is not None and \
+                    (t - open_start) / 1e9 >= rule.min_duration_s:
+                findings.append(Finding(rule.name, rule.severity, host,
+                                        open_start, t, rule.description))
+            open_start = None
+        last_t = t
+    if open_start is not None and last_t is not None and \
+            (last_t - open_start) / 1e9 >= rule.min_duration_s:
+        findings.append(Finding(rule.name, rule.severity, host, open_start,
+                                last_t, rule.description))
+    return findings
+
+
+def evaluate_rules_on_db(db, rules: list, *, jobid: Optional[str] = None,
+                         group_by_tag: str = "hostname") -> list:
+    """Run every rule over every matching host series in a Database."""
+    findings = []
+    for rule in rules:
+        tags = {"jobid": jobid} if jobid else None
+        for series in db.select(rule.measurement, [rule.metric], tags):
+            vals = series.values.get(rule.metric)
+            if not vals:
+                continue
+            host = series.tags.get(group_by_tag, "")
+            findings.extend(evaluate_rule(rule, series.times, vals, host))
+    return findings
+
+
+class StreamAnalyzer:
+    """Online rule evaluation — subscribes to the router (ZeroMQ analogue).
+
+    Keeps per-(rule, host) condition state and fires ``on_finding`` the
+    moment a threshold+timeout trips: the paper's "detect badly behaving
+    jobs directly for instant user feedback".
+    """
+
+    def __init__(self, rules: Optional[list] = None,
+                 on_finding: Optional[Callable] = None):
+        self.rules = rules if rules is not None else default_rules()
+        self.on_finding = on_finding
+        self._open: dict = {}            # (rule, host) -> start ns
+        self._fired: dict = {}
+        self.findings: list = []
+
+    def __call__(self, kind: str, payload):
+        if kind != "points":
+            return
+        for p in payload:
+            self.observe(p)
+
+    def observe(self, p: Point):
+        host = p.tags.get("hostname", "")
+        ts = p.timestamp if p.timestamp is not None else now_ns()
+        for rule in self.rules:
+            if rule.measurement != p.measurement or \
+                    rule.metric not in p.fields:
+                continue
+            key = (rule.name, host)
+            if rule.check(p.fields[rule.metric]):
+                start = self._open.setdefault(key, ts)
+                if (ts - start) / 1e9 >= rule.min_duration_s and \
+                        not self._fired.get(key):
+                    f = Finding(rule.name, rule.severity, host, start, ts,
+                                rule.description)
+                    self.findings.append(f)
+                    self._fired[key] = True
+                    if self.on_finding:
+                        self.on_finding(f)
+            else:
+                self._open.pop(key, None)
+                self._fired.pop(key, None)
+
+
+# ==========================================================================
+# 2. Performance-pattern decision tree
+# ==========================================================================
+
+
+@dataclass
+class PatternNode:
+    """Internal node: test ``metric op threshold``; leaf: pattern+remedy."""
+
+    pattern: Optional[str] = None
+    remedy: Optional[str] = None
+    metric: Optional[str] = None
+    op: Optional[str] = None
+    threshold: Optional[float] = None
+    if_true: Optional["PatternNode"] = None
+    if_false: Optional["PatternNode"] = None
+
+    def classify(self, metrics: dict, path: Optional[list] = None):
+        path = path if path is not None else []
+        if self.pattern is not None:
+            return self.pattern, self.remedy, path
+        v = metrics.get(self.metric, 0.0)
+        taken = _OPS[self.op](v, self.threshold)
+        path.append(f"{self.metric}={v:.3g} {self.op} {self.threshold}"
+                    f" -> {taken}")
+        nxt = self.if_true if taken else self.if_false
+        return nxt.classify(metrics, path)
+
+
+def leaf(pattern, remedy):
+    return PatternNode(pattern=pattern, remedy=remedy)
+
+
+def node(metric, op, threshold, if_true, if_false):
+    return PatternNode(metric=metric, op=op, threshold=threshold,
+                       if_true=if_true, if_false=if_false)
+
+
+# TPU adaptation of the FEPA decision tree: discriminate on the roofline
+# term fractions + goodput metrics.  Inputs (all in [0, ~1]):
+#   compute_frac / memory_frac / collective_frac : term_i / sum(terms)
+#   mfu            : model FLOPs utilization
+#   useful_flop_ratio : model_flops / hlo_flops
+#   data_stall_frac, straggler_skew
+DEFAULT_TREE = node(
+    "data_stall_frac", ">", 0.3,
+    leaf("ingest-bound",
+         "input pipeline too slow: add prefetch/workers, shard files"),
+    node("straggler_skew", ">", 0.15,
+         leaf("load-imbalance",
+              "straggler host: checkpoint-restart without it (elastic), "
+              "check MoE expert balance"),
+         node("collective_frac", ">", 0.4,
+              leaf("collective-bound",
+                   "overlap collectives with compute, rethink sharding axes, "
+                   "gradient compression, larger per-device batch"),
+              node("memory_frac", ">", 0.5,
+                   node("useful_flop_ratio", "<", 0.6,
+                        leaf("recompute-heavy memory-bound",
+                             "relax remat policy; fuse attention (flash) to "
+                             "cut activation traffic"),
+                        leaf("memory-bound",
+                             "increase arithmetic intensity: fuse ops, "
+                             "quantize weights/cache, batch decode requests")),
+                   node("mfu", "<", 0.25,
+                        leaf("latency/overhead-bound",
+                             "kernel launch / small-batch overheads: grow "
+                             "per-device batch, unroll scan, check host "
+                             "callbacks"),
+                        leaf("compute-bound",
+                             "good: push block shapes / MXU alignment; "
+                             "consider int8/fp8 matmuls"))))))
+
+
+def classify_job(metrics: dict, tree: PatternNode = DEFAULT_TREE) -> dict:
+    pattern, remedy, path = tree.classify(dict(metrics))
+    return {"pattern": pattern, "remedy": remedy, "path": path}
+
+
+# ==========================================================================
+# 3. Roofline analyzer (assignment §Roofline; feeds the tree above)
+# ==========================================================================
+
+
+@dataclass
+class RooflineResult:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    hbm_bytes: float
+    collective_bytes: float
+
+    @property
+    def terms(self) -> dict:
+        return {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+
+    @property
+    def dominant(self) -> str:
+        return max(self.terms, key=self.terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline lower bound on step time (max of the three terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / bound — 1.0 means perfectly compute-limited."""
+        return self.compute_s / self.bound_s if self.bound_s else 0.0
+
+    def fractions(self) -> dict:
+        tot = sum(self.terms.values()) or 1.0
+        return {f"{k}_frac": v / tot for k, v in self.terms.items()}
+
+    def classify(self, extra_metrics: Optional[dict] = None) -> dict:
+        m = {**self.fractions(),
+             "useful_flop_ratio": self.useful_flop_ratio,
+             "mfu": self.roofline_fraction,   # upper-bound MFU from terms
+             "data_stall_frac": 0.0, "straggler_skew": 0.0}
+        if extra_metrics:
+            m.update(extra_metrics)
+        return classify_job(m)
+
+
+class RooflineAnalyzer:
+    """Three-term roofline from dry-run artifacts (per-chip quantities)."""
+
+    def __init__(self, peak_flops: float = PEAK_FLOPS,
+                 hbm_bw: float = HBM_BW, ici_bw: float = ICI_BW):
+        self.peak_flops = peak_flops
+        self.hbm_bw = hbm_bw
+        self.ici_bw = ici_bw
+
+    def analyze(self, *, arch: str, shape: str, mesh: str, chips: int,
+                hlo_flops: float, hbm_bytes: float, collective_bytes: float,
+                model_flops: float) -> RooflineResult:
+        """All inputs are *global* (whole-program) quantities; terms are
+        per-chip seconds assuming perfect balance (cost_analysis reports the
+        SPMD-partitioned module, i.e. per-device work, times 1; we pass
+        per-device numbers scaled up by ``chips`` for clarity)."""
+        return RooflineResult(
+            arch=arch, shape=shape, mesh=mesh, chips=chips,
+            compute_s=hlo_flops / (chips * self.peak_flops),
+            memory_s=hbm_bytes / (chips * self.hbm_bw),
+            collective_s=collective_bytes / (chips * self.ici_bw),
+            model_flops=model_flops, hlo_flops=hlo_flops,
+            hbm_bytes=hbm_bytes, collective_bytes=collective_bytes)

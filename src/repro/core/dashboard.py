@@ -1,0 +1,251 @@
+"""Dashboard agent (paper §III.D).
+
+The paper's agent generates Grafana dashboards *from templates* based on the
+databases and the metrics available in them: dashboard, row and panel
+templates are combined into a full dashboard, settings adjusted for the
+current job, and an analysis header shows badly-behaving jobs on the initial
+view (Fig. 2).  The admin view lists all running jobs with thumbnails.
+
+Air-gapped adaptation (DESIGN.md §10): we emit (a) Grafana-compatible
+dashboard JSON using the same template mechanism and (b) a self-contained
+static HTML rendering with inline SVG sparklines, so the dashboards are
+viewable without any external service.
+"""
+
+from __future__ import annotations
+
+import html
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.analysis import evaluate_rules_on_db, default_rules
+from repro.core.jobs import JobInfo
+from repro.core.tsdb import Database, TSDBServer
+
+# --------------------------------------------------------------------------
+# Templates (Grafana-style JSON fragments with ${...} placeholders)
+# --------------------------------------------------------------------------
+
+PANEL_TEMPLATES = {
+    "timeseries": {
+        "type": "timeseries",
+        "title": "${title}",
+        "datasource": "${db}",
+        "targets": [{"measurement": "${measurement}",
+                     "field": "${field}",
+                     "groupBy": "hostname",
+                     "tags": {"jobid": "${jobid}"}}],
+        "gridPos": {"h": 8, "w": 12},
+    },
+    "stat": {
+        "type": "stat",
+        "title": "${title}",
+        "datasource": "${db}",
+        "targets": [{"measurement": "${measurement}", "field": "${field}",
+                     "agg": "last", "tags": {"jobid": "${jobid}"}}],
+        "gridPos": {"h": 4, "w": 6},
+    },
+    "annotations": {
+        "type": "annotations",
+        "datasource": "${db}",
+        "targets": [{"measurement": "job_event", "field": "event",
+                     "tags": {"jobid": "${jobid}"}}],
+    },
+}
+
+# Default row templates: which measurements/fields become panels when the
+# metrics exist in the database (agent selects applicable templates).
+DEFAULT_ROWS = [
+    ("Analysis", [("stat", "hpm", "mfu", "MFU"),
+                  ("stat", "hpm", "tokens_per_s", "tokens/s"),
+                  ("stat", "hpm", "step_time_s", "step time")]),
+    ("HPM", [("timeseries", "hpm", "mfu", "Model FLOPs utilization"),
+             ("timeseries", "hpm", "mem_gb_per_s", "Memory bandwidth"),
+             ("timeseries", "hpm", "ici_gb_per_s", "Interconnect traffic"),
+             ("timeseries", "hpm", "step_time_s", "Step time")]),
+    ("Application", [("timeseries", "usermetric", "value", "App metrics")]),
+    ("System", [("timeseries", "system", "cpu_load_1m", "CPU load"),
+                ("timeseries", "system", "rss_bytes", "Memory allocated"),
+                ("timeseries", "system", "net_tx_bytes", "Network I/O"),
+                ("timeseries", "system", "write_bytes", "File I/O")]),
+]
+
+
+def _subst(obj, mapping: dict):
+    if isinstance(obj, str):
+        for k, v in mapping.items():
+            obj = obj.replace("${" + k + "}", str(v))
+        return obj
+    if isinstance(obj, dict):
+        return {k: _subst(v, mapping) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_subst(v, mapping) for v in obj]
+    return obj
+
+
+@dataclass
+class DashboardAgent:
+    backend: TSDBServer
+    out_dir: str = "dashboards"
+    rows: list = field(default_factory=lambda: list(DEFAULT_ROWS))
+    panel_templates: dict = field(
+        default_factory=lambda: dict(PANEL_TEMPLATES))
+    rules: list = field(default_factory=default_rules)
+
+    def __post_init__(self):
+        os.makedirs(self.out_dir, exist_ok=True)
+
+    # -- template assembly (the paper's core mechanism) -----------------------
+
+    def build_dashboard(self, job: JobInfo, db_name: str = "global") -> dict:
+        """Combine templates into a Grafana-style dashboard for one job."""
+        db = self.backend.db(db_name)
+        available = set(db.measurements())
+        mapping = {"jobid": job.job_id, "db": db_name,
+                   "user": job.user}
+        findings = evaluate_rules_on_db(db, self.rules, jobid=job.job_id)
+        rows_out = []
+        for row_title, panels in self.rows:
+            panels_out = []
+            for ptype, meas, fieldname, title in panels:
+                if meas not in available:
+                    continue        # agent selects templates by availability
+                if fieldname not in db.field_keys(meas) and \
+                        fieldname != "value":
+                    continue
+                tpl = self.panel_templates[ptype]
+                panels_out.append(_subst(tpl, {**mapping, "title": title,
+                                               "measurement": meas,
+                                               "field": fieldname}))
+            if panels_out:
+                rows_out.append({"title": row_title, "panels": panels_out})
+        # app-level metrics beyond the defaults (paper §IV: extra metrics may
+        # be available with application-level monitoring)
+        extra = sorted(available - {"hpm", "system", "job_event"})
+        for meas in extra:
+            panels_out = [
+                _subst(self.panel_templates["timeseries"],
+                       {**mapping, "title": f"{meas}.{fk}",
+                        "measurement": meas, "field": fk})
+                for fk in db.field_keys(meas)
+                if fk not in ("event",)]
+            if panels_out:
+                rows_out.append({"title": f"app:{meas}",
+                                 "panels": panels_out})
+        return {
+            "dashboard": {
+                "title": f"Job {job.job_id} ({job.user})",
+                "tags": ["lms", job.user],
+                "annotations": _subst(self.panel_templates["annotations"],
+                                      mapping),
+                "header": {
+                    "analysis": [
+                        {"rule": f.rule, "severity": f.severity,
+                         "host": f.host, "duration_s": f.duration_s,
+                         "evidence": f.evidence}
+                        for f in findings],
+                    "status": ("unhealthy" if any(
+                        f.severity == "critical" for f in findings)
+                        else "ok"),
+                },
+                "rows": rows_out,
+                "time": {"from": job.start_ns, "to": job.end_ns or "now"},
+            },
+        }
+
+    def write_dashboard(self, job: JobInfo, db_name: str = "global") -> str:
+        dash = self.build_dashboard(job, db_name)
+        path = os.path.join(self.out_dir, f"job_{job.job_id}.json")
+        with open(path, "w") as f:
+            json.dump(dash, f, indent=1, default=str)
+        html_path = os.path.join(self.out_dir, f"job_{job.job_id}.html")
+        with open(html_path, "w") as f:
+            f.write(self.render_html(job, dash, db_name))
+        return path
+
+    # -- admin view (all running jobs + thumbnails, Fig. 2) ---------------------
+
+    def build_admin_view(self, jobs: list, db_name: str = "global") -> dict:
+        db = self.backend.db(db_name)
+        out = []
+        for job in jobs:
+            findings = evaluate_rules_on_db(db, self.rules, jobid=job.job_id)
+            thumb = self._series_for(db, "hpm", "mfu", job.job_id)
+            out.append({"jobid": job.job_id, "user": job.user,
+                        "hosts": len(job.hosts),
+                        "running": job.running,
+                        "alerts": len(findings),
+                        "status": "unhealthy" if any(
+                            f.severity == "critical" for f in findings)
+                        else "ok",
+                        "thumbnail_mfu": thumb[1][-50:]})
+        return {"jobs": out}
+
+    def write_admin_view(self, jobs: list, db_name: str = "global") -> str:
+        view = self.build_admin_view(jobs, db_name)
+        path = os.path.join(self.out_dir, "admin.json")
+        with open(path, "w") as f:
+            json.dump(view, f, indent=1, default=str)
+        return path
+
+    # -- static HTML rendering ---------------------------------------------------
+
+    def _series_for(self, db: Database, meas: str, fieldname: str,
+                    jobid: str, host: Optional[str] = None):
+        tags = {"jobid": jobid}
+        if host:
+            tags["hostname"] = host
+        ts, vs = [], []
+        for s in db.select(meas, [fieldname], tags):
+            ts.extend(s.times)
+            vs.extend(v for v in s.values.get(fieldname, []))
+        pairs = sorted((t, v) for t, v in zip(ts, vs)
+                       if isinstance(v, (int, float)))
+        return [t for t, _ in pairs], [v for _, v in pairs]
+
+    @staticmethod
+    def _sparkline(times, values, w=600, h=80) -> str:
+        if len(values) < 2:
+            return "<svg/>"
+        vmin, vmax = min(values), max(values)
+        rng = (vmax - vmin) or 1.0
+        t0, t1 = times[0], times[-1]
+        trng = (t1 - t0) or 1
+        pts = " ".join(
+            f"{(t - t0) / trng * w:.1f},{h - (v - vmin) / rng * (h - 4) - 2:.1f}"
+            for t, v in zip(times, values))
+        return (f'<svg width="{w}" height="{h}">'
+                f'<polyline fill="none" stroke="#2a7" stroke-width="1.5" '
+                f'points="{pts}"/>'
+                f'<text x="2" y="12" font-size="10">{vmax:.4g}</text>'
+                f'<text x="2" y="{h-2}" font-size="10">{vmin:.4g}</text>'
+                f'</svg>')
+
+    def render_html(self, job: JobInfo, dash: dict,
+                    db_name: str = "global") -> str:
+        db = self.backend.db(db_name)
+        head = dash["dashboard"]["header"]
+        parts = [f"<html><head><title>{html.escape(dash['dashboard']['title'])}"
+                 "</title></head><body style='font-family:monospace'>",
+                 f"<h1>{html.escape(dash['dashboard']['title'])}</h1>",
+                 f"<h2>Status: {head['status']}</h2>"]
+        if head["analysis"]:
+            parts.append("<ul>")
+            for a in head["analysis"]:
+                parts.append(
+                    f"<li><b>{a['severity']}</b> {a['rule']} on "
+                    f"{a['host'] or 'job'} for {a['duration_s']:.0f}s — "
+                    f"{html.escape(a['evidence'])}</li>")
+            parts.append("</ul>")
+        for row in dash["dashboard"]["rows"]:
+            parts.append(f"<h3>{html.escape(row['title'])}</h3>")
+            for panel in row["panels"]:
+                tgt = panel["targets"][0]
+                ts, vs = self._series_for(db, tgt["measurement"],
+                                          tgt["field"], job.job_id)
+                parts.append(f"<div><b>{html.escape(panel['title'])}</b><br>"
+                             f"{self._sparkline(ts, vs)}</div>")
+        parts.append("</body></html>")
+        return "\n".join(parts)

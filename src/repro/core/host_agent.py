@@ -1,0 +1,122 @@
+"""Host agent — per-node metric collection (paper §III.A).
+
+Gathers (a) system-level metrics from the OS (CPU load, RSS, I/O counters —
+the things Diamond/Ganglia collected in the paper's setup) and (b) the
+TPU/XLA-derived HPM events described in DESIGN.md §2 (FLOPs, bytes,
+collective traffic per step from the compiled artifact, plus step
+wall-times).  Raw events go through the LIKWID-style performance groups to
+produce derived metrics, and everything is emitted to the router with the
+mandatory ``hostname`` tag.
+
+On a real multi-host pod slice each process runs one agent (hostname =
+worker name); single-process simulations can run several agents with
+synthetic hostnames — that is what the straggler tests do.
+"""
+
+from __future__ import annotations
+
+import os
+import resource
+import socket
+import time
+from typing import Optional
+
+from repro.core.line_protocol import Point, now_ns
+from repro.core.perf_groups import derive_all
+
+
+def _read_proc_io() -> dict:
+    try:
+        out = {}
+        with open("/proc/self/io") as f:
+            for line in f:
+                k, _, v = line.partition(":")
+                out[k.strip()] = int(v)
+        return {"read_bytes": out.get("read_bytes", 0),
+                "write_bytes": out.get("write_bytes", 0)}
+    except OSError:
+        return {"read_bytes": 0, "write_bytes": 0}
+
+
+def _read_net_dev() -> dict:
+    try:
+        rx = tx = 0
+        with open("/proc/net/dev") as f:
+            for line in f.readlines()[2:]:
+                name, _, rest = line.partition(":")
+                cols = rest.split()
+                if name.strip() == "lo":
+                    continue
+                rx += int(cols[0])
+                tx += int(cols[8])
+        return {"net_rx_bytes": rx, "net_tx_bytes": tx}
+    except OSError:
+        return {"net_rx_bytes": 0, "net_tx_bytes": 0}
+
+
+class HostAgent:
+    """Collects system + XLA-HPM metrics for one (possibly simulated) host."""
+
+    def __init__(self, router, hostname: Optional[str] = None,
+                 device_constants: Optional[dict] = None):
+        self.router = router
+        self.hostname = hostname or socket.gethostname()
+        # static per-step facts from the compiled artifact (set once after
+        # compile): hlo_flops, hlo_bytes, collective_bytes, model_flops,
+        # tokens_per_step, hbm_bytes_in_use
+        self.step_constants = dict(device_constants or {})
+        self._last_sys: Optional[dict] = None
+        self._last_t = time.monotonic()
+
+    # -- compiled-artifact facts ------------------------------------------------
+
+    def set_step_constants(self, **kwargs):
+        self.step_constants.update(kwargs)
+
+    # -- system metrics (Diamond/Ganglia analogue) -------------------------------
+
+    def collect_system(self) -> Point:
+        ru = resource.getrusage(resource.RUSAGE_SELF)
+        try:
+            load1, load5, load15 = os.getloadavg()
+        except OSError:
+            load1 = load5 = load15 = 0.0
+        fields = {
+            "cpu_load_1m": load1,
+            "cpu_user_s": ru.ru_utime,
+            "cpu_sys_s": ru.ru_stime,
+            "rss_bytes": ru.ru_maxrss * 1024,
+            **{k: float(v) for k, v in _read_proc_io().items()},
+            **{k: float(v) for k, v in _read_net_dev().items()},
+        }
+        return Point("system", {"hostname": self.hostname}, fields, now_ns())
+
+    # -- per-step HPM ------------------------------------------------------------
+
+    def collect_step(self, *, step: int, step_time_s: float,
+                     extra_events: Optional[dict] = None,
+                     emit: bool = True, ts: Optional[int] = None) -> dict:
+        """Build raw events for one step, derive groups, emit to router.
+
+        Returns the derived metrics dict (also used by the live analyzers).
+        ``ts`` overrides the point timestamp (simulated hosts in tests).
+        """
+        raw = dict(self.step_constants)
+        raw["step_time_s"] = max(step_time_s, 1e-9)
+        raw["step"] = step
+        if extra_events:
+            raw.update(extra_events)
+        derived = derive_all(raw)
+        if emit:
+            fields = {"step": step, "step_time_s": step_time_s}
+            fields.update({k: float(v) for k, v in derived.items()})
+            if extra_events:
+                fields.update({k: float(v) for k, v in extra_events.items()
+                               if k not in fields})
+            self.router.write(Point("hpm", {"hostname": self.hostname},
+                                    fields, ts if ts is not None
+                                    else now_ns()))
+        return derived
+
+    def emit_system(self):
+        self.router.write(self.collect_system())

@@ -1,0 +1,165 @@
+"""HTTP face of the LMS (paper §III: "the communication protocol inside the
+whole system (HTTP) is commonly available on all machines").
+
+Server: mimics the InfluxDB 1.x write API plus the router's job-signal
+endpoint, so any existing collector that can POST line protocol (Diamond,
+curl cronjobs, Ganglia pull-proxies in the paper) integrates unchanged:
+
+    POST /write?db=global           body: line protocol (batched)
+    POST /job/start                 body: JSON {jobid, user, hosts, tags}
+    POST /job/end                   body: JSON {jobid}
+    GET  /ping
+    GET  /query?db=&m=&field=&agg=  simple JSON query (dashboards/tests)
+    GET  /dbs                       list databases
+
+Client: :class:`HttpSink` POSTs batched lines — the transport used by the
+out-of-process ``usermetric_cli`` and by forward agents.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import urllib.parse
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from repro.core.line_protocol import Point, encode_batch
+from repro.core.router import MetricsRouter
+
+
+class LMSRequestHandler(BaseHTTPRequestHandler):
+    router: MetricsRouter = None      # set by make_server
+
+    def log_message(self, fmt, *args):   # quiet
+        pass
+
+    def _send(self, code: int, payload: Optional[dict] = None):
+        body = json.dumps(payload or {}).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _body(self) -> bytes:
+        n = int(self.headers.get("Content-Length", 0))
+        return self.rfile.read(n) if n else b""
+
+    def do_GET(self):
+        url = urllib.parse.urlparse(self.path)
+        q = dict(urllib.parse.parse_qsl(url.query))
+        if url.path == "/ping":
+            self._send(204)
+        elif url.path == "/dbs":
+            self._send(200, {"databases": self.router.backend.databases()})
+        elif url.path == "/query":
+            db = self.router.backend.db(q.get("db", "global"))
+            meas = q.get("m", "")
+            fieldname = q.get("field", "value")
+            tags = {k[4:]: v for k, v in q.items() if k.startswith("tag_")}
+            if "agg" in q:
+                out = db.aggregate(meas, fieldname, agg=q["agg"], tags=tags,
+                                   group_by_tag=q.get("group_by"))
+                self._send(200, {"result": out})
+            else:
+                series = db.select(meas, [fieldname], tags)
+                self._send(200, {"series": [
+                    {"tags": s.tags, "times": s.times,
+                     "values": s.values.get(fieldname, [])}
+                    for s in series]})
+        else:
+            self._send(404, {"error": "not found"})
+
+    def do_POST(self):
+        url = urllib.parse.urlparse(self.path)
+        body = self._body()
+        try:
+            if url.path == "/write":
+                n = self.router.write_lines(body.decode())
+                self._send(204 if n else 200, {"written": n})
+            elif url.path == "/job/start":
+                d = json.loads(body)
+                self.router.job_start(d["jobid"], d.get("user", "unknown"),
+                                      d.get("hosts", []), d.get("tags"))
+                self._send(200, {"ok": True})
+            elif url.path == "/job/end":
+                d = json.loads(body)
+                self.router.job_end(d["jobid"])
+                self._send(200, {"ok": True})
+            else:
+                self._send(404, {"error": "not found"})
+        except Exception as e:                      # noqa: BLE001
+            self._send(400, {"error": str(e)})
+
+
+def make_server(router: MetricsRouter, host: str = "127.0.0.1",
+                port: int = 0) -> ThreadingHTTPServer:
+    """Create (but do not start) the HTTP endpoint; port=0 picks a free one."""
+    handler = type("BoundHandler", (LMSRequestHandler,), {"router": router})
+    return ThreadingHTTPServer((host, port), handler)
+
+
+class LMSHttpServer:
+    """Server lifecycle helper (background thread)."""
+
+    def __init__(self, router: MetricsRouter, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.httpd = make_server(router, host, port)
+        self._thread = threading.Thread(target=self.httpd.serve_forever,
+                                        daemon=True)
+
+    @property
+    def url(self) -> str:
+        h, p = self.httpd.server_address[:2]
+        return f"http://{h}:{p}"
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self.httpd.shutdown()
+        self.httpd.server_close()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+        return False
+
+
+class HttpSink:
+    """Batched line-protocol POST client (forward agent / CLI transport)."""
+
+    def __init__(self, url: str, db: str = "global", timeout_s: float = 5.0):
+        self.url = url.rstrip("/")
+        self.db = db
+        self.timeout_s = timeout_s
+
+    def write(self, points):
+        if isinstance(points, Point):
+            points = [points]
+        data = encode_batch(points).encode()
+        req = urllib.request.Request(
+            f"{self.url}/write?db={self.db}", data=data, method="POST",
+            headers={"Content-Type": "text/plain"})
+        with urllib.request.urlopen(req, timeout=self.timeout_s) as r:
+            return r.status
+
+    def job_start(self, jobid: str, user: str, hosts: list,
+                  tags: Optional[dict] = None):
+        self._post_json("/job/start", {"jobid": jobid, "user": user,
+                                       "hosts": hosts, "tags": tags or {}})
+
+    def job_end(self, jobid: str):
+        self._post_json("/job/end", {"jobid": jobid})
+
+    def _post_json(self, path: str, payload: dict):
+        req = urllib.request.Request(
+            self.url + path, data=json.dumps(payload).encode(),
+            method="POST", headers={"Content-Type": "application/json"})
+        with urllib.request.urlopen(req, timeout=self.timeout_s) as r:
+            return r.status

@@ -1,0 +1,80 @@
+"""Job registry: (de)allocation signals and the tags they carry (§III.A-B).
+
+In the paper, compute nodes (or the scheduler) send signals at job
+(de)allocation; the router keeps a *tag store* keyed by hostname so every
+metric arriving from a participating host is enriched with the job's tags.
+A TPU-pod training/serving run is one job; hosts are the per-process workers
+(one per TPU VM host at scale, simulated hostnames on CPU).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.line_protocol import now_ns
+
+
+@dataclass
+class JobInfo:
+    job_id: str
+    user: str
+    hosts: list
+    tags: dict = field(default_factory=dict)
+    start_ns: int = 0
+    end_ns: Optional[int] = None
+
+    @property
+    def running(self) -> bool:
+        return self.end_ns is None
+
+    def all_tags(self) -> dict:
+        return {"jobid": self.job_id, "username": self.user, **self.tags}
+
+
+class JobRegistry:
+    """Tracks jobs + the host->tags store used by the router."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._jobs: dict = {}
+        self._host_tags: dict = {}        # hostname -> tags dict
+
+    def start(self, job_id: str, user: str, hosts: list,
+              tags: Optional[dict] = None, ts: Optional[int] = None) -> JobInfo:
+        with self._lock:
+            job = JobInfo(job_id, user, list(hosts), dict(tags or {}),
+                          ts if ts is not None else now_ns())
+            self._jobs[job_id] = job
+            for h in hosts:
+                self._host_tags[h] = job.all_tags()
+            return job
+
+    def end(self, job_id: str, ts: Optional[int] = None) -> Optional[JobInfo]:
+        with self._lock:
+            job = self._jobs.get(job_id)
+            if job is None:
+                return None
+            job.end_ns = ts if ts is not None else now_ns()
+            for h in job.hosts:
+                if self._host_tags.get(h, {}).get("jobid") == job_id:
+                    del self._host_tags[h]
+            return job
+
+    def tags_for_host(self, hostname: str) -> dict:
+        with self._lock:
+            return dict(self._host_tags.get(hostname, {}))
+
+    def get(self, job_id: str) -> Optional[JobInfo]:
+        with self._lock:
+            return self._jobs.get(job_id)
+
+    def running_jobs(self) -> list:
+        with self._lock:
+            return [j for j in self._jobs.values() if j.running]
+
+    def all_jobs(self) -> list:
+        with self._lock:
+            return list(self._jobs.values())

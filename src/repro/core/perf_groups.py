@@ -1,0 +1,196 @@
+"""LIKWID performance groups, TPU-native (paper §V; hardware adaptation §2).
+
+LIKWID abstracts HPM portability behind named *performance groups*: a group
+lists the raw counter events to program and formulas for derived metrics.
+TPUs expose no user MSRs; the raw "events" here come from the compiled XLA
+artifact (cost/memory analysis, HLO collective parse) plus step wall-times —
+see DESIGN.md §2 for the full source mapping.
+
+Groups are defined in a LIKWID-like text format::
+
+    GROUP FLOPS
+    EVENTSET
+      hlo_flops
+      step_time_s
+    METRICS
+      gflops_per_s  hlo_flops / step_time_s / 1e9
+      mfu           model_flops / step_time_s / PEAK_FLOPS
+
+and evaluated with a tiny safe arithmetic evaluator (no eval()).
+"""
+
+from __future__ import annotations
+
+import ast
+import operator
+from dataclasses import dataclass, field
+from typing import Optional
+
+# --------------------------------------------------------------------------
+# Hardware constants (assignment: TPU v5e-class chip)
+# --------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~ per chip per direction)
+
+HW_CONSTANTS = {
+    "PEAK_FLOPS": PEAK_FLOPS,
+    "HBM_BW": HBM_BW,
+    "ICI_BW": ICI_BW,
+}
+
+
+# --------------------------------------------------------------------------
+# Safe formula evaluation
+# --------------------------------------------------------------------------
+
+_BINOPS = {ast.Add: operator.add, ast.Sub: operator.sub,
+           ast.Mult: operator.mul, ast.Div: operator.truediv,
+           ast.Pow: operator.pow, ast.Mod: operator.mod}
+_UNOPS = {ast.USub: operator.neg, ast.UAdd: operator.pos}
+_FUNCS = {"min": min, "max": max, "abs": abs}
+
+
+def eval_formula(expr: str, env: dict) -> float:
+    """Evaluate an arithmetic expression over ``env`` (names -> numbers)."""
+    def ev(node):
+        if isinstance(node, ast.Expression):
+            return ev(node.body)
+        if isinstance(node, ast.Constant):
+            if isinstance(node.value, (int, float)):
+                return float(node.value)
+            raise ValueError(f"bad constant {node.value!r}")
+        if isinstance(node, ast.Name):
+            if node.id in env:
+                return float(env[node.id])
+            if node.id in HW_CONSTANTS:
+                return HW_CONSTANTS[node.id]
+            raise KeyError(node.id)
+        if isinstance(node, ast.BinOp) and type(node.op) in _BINOPS:
+            return _BINOPS[type(node.op)](ev(node.left), ev(node.right))
+        if isinstance(node, ast.UnaryOp) and type(node.op) in _UNOPS:
+            return _UNOPS[type(node.op)](ev(node.operand))
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in _FUNCS:
+            return _FUNCS[node.func.id](*[ev(a) for a in node.args])
+        raise ValueError(f"disallowed syntax: {ast.dump(node)}")
+    return ev(ast.parse(expr, mode="eval"))
+
+
+# --------------------------------------------------------------------------
+# Group definitions
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class PerfGroup:
+    name: str
+    events: list                       # required raw event names
+    metrics: list                      # (metric name, formula) pairs
+    description: str = ""
+
+    def derive(self, raw_events: dict, strict: bool = False) -> dict:
+        """raw events -> derived metrics; missing events skip the metric."""
+        out = {}
+        for mname, formula in self.metrics:
+            try:
+                out[mname] = eval_formula(formula, raw_events)
+            except (KeyError, ZeroDivisionError):
+                if strict:
+                    raise
+        return out
+
+
+def parse_group(text: str) -> PerfGroup:
+    """Parse the LIKWID-like group format (GROUP/EVENTSET/METRICS)."""
+    name, desc = "", ""
+    events, metrics = [], []
+    section = None
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("GROUP"):
+            name = line.split(None, 1)[1].strip()
+        elif line == "EVENTSET":
+            section = "events"
+        elif line == "METRICS":
+            section = "metrics"
+        elif line.startswith("DESC"):
+            desc = line.split(None, 1)[1].strip()
+        elif section == "events":
+            events.append(line.split()[0])
+        elif section == "metrics":
+            parts = line.split(None, 1)
+            if len(parts) == 2:
+                metrics.append((parts[0], parts[1]))
+    if not name:
+        raise ValueError("group text missing GROUP header")
+    return PerfGroup(name, events, metrics, desc)
+
+
+# The built-in groups (TPU analogues of the paper's §V metric list).
+_GROUP_TEXTS = [
+    """
+    GROUP FLOPS
+    DESC floating point throughput and machine utilization (IPC analogue)
+    EVENTSET
+      hlo_flops
+      model_flops
+      step_time_s
+    METRICS
+      gflops_per_s        hlo_flops / step_time_s / 1e9
+      hw_flops_util       hlo_flops / step_time_s / PEAK_FLOPS
+      mfu                 model_flops / step_time_s / PEAK_FLOPS
+      useful_flop_ratio   model_flops / hlo_flops
+    """,
+    """
+    GROUP MEM
+    DESC memory bandwidth and footprint
+    EVENTSET
+      hlo_bytes
+      step_time_s
+      hbm_bytes_in_use
+    METRICS
+      mem_gb_per_s        hlo_bytes / step_time_s / 1e9
+      hbm_bw_util         hlo_bytes / step_time_s / HBM_BW
+      hbm_used_gb         hbm_bytes_in_use / 1e9
+    """,
+    """
+    GROUP ICI
+    DESC interconnect (collective) traffic — the QPI/network analogue
+    EVENTSET
+      collective_bytes
+      step_time_s
+    METRICS
+      ici_gb_per_s        collective_bytes / step_time_s / 1e9
+      ici_bw_util         collective_bytes / step_time_s / ICI_BW
+    """,
+    """
+    GROUP GOODPUT
+    DESC end-to-end job progress (the "CPU load" analogue for a TPU job)
+    EVENTSET
+      step_time_s
+      tokens_per_step
+      data_wait_s
+    METRICS
+      tokens_per_s        tokens_per_step / step_time_s
+      data_stall_frac     data_wait_s / step_time_s
+      steps_per_s         1.0 / step_time_s
+    """,
+]
+
+GROUPS = {g.name: g for g in (parse_group(t) for t in _GROUP_TEXTS)}
+
+
+def available_groups() -> list:
+    return sorted(GROUPS)
+
+
+def derive_all(raw_events: dict) -> dict:
+    """Run every group whose event set is (partially) satisfied."""
+    out = {}
+    for g in GROUPS.values():
+        out.update(g.derive(raw_events))
+    return out

@@ -1,0 +1,144 @@
+"""Metrics router — the central LMS component (paper §III.B).
+
+Responsibilities (all from the paper):
+
+* mimic the InfluxDB write interface plus an endpoint for job start/end
+  signals (the HTTP face lives in ``repro.core.httpd``; this class is the
+  in-process engine both faces share);
+* keep a *tag store* keyed by the mandatory ``hostname`` tag and enrich every
+  incoming metric with the owning job's tags;
+* forward enriched points to the database back-end, duplicating them into
+  per-user databases when configured;
+* store job signals as events so the dashboards can render annotations;
+* publish metrics + meta information to attached subscribers — the ZeroMQ
+  fan-out of the paper becomes an in-process subscriber registry with the
+  same semantics (stream analyzers, aggregators).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional, Union
+
+from repro.core.jobs import JobRegistry
+from repro.core.line_protocol import (Point, decode_batch, encode_point,
+                                      now_ns)
+from repro.core.tsdb import TSDBServer
+
+
+@dataclass
+class RouterStats:
+    points_in: int = 0
+    points_out: int = 0
+    signals: int = 0
+    parse_errors: int = 0
+    dropped_no_host: int = 0
+
+
+class MetricsRouter:
+    """Tag-enriching, duplicating, publishing metrics router."""
+
+    HOST_TAG = "hostname"
+
+    def __init__(self, backend: TSDBServer, *, global_db: str = "global",
+                 per_user_db: bool = False, per_job_db: bool = False,
+                 require_host_tag: bool = True):
+        self.backend = backend
+        self.jobs = JobRegistry()
+        self.global_db = global_db
+        self.per_user_db = per_user_db
+        self.per_job_db = per_job_db
+        self.require_host_tag = require_host_tag
+        self.stats = RouterStats()
+        self._subs: list = []
+        self._lock = threading.RLock()
+
+    # -- pub-sub (ZeroMQ analogue) -------------------------------------------
+
+    def subscribe(self, fn: Callable) -> Callable:
+        """fn(kind, payload): kind in {"points", "job_start", "job_end"}."""
+        with self._lock:
+            self._subs.append(fn)
+        return fn
+
+    def unsubscribe(self, fn: Callable):
+        with self._lock:
+            if fn in self._subs:
+                self._subs.remove(fn)
+
+    def _publish(self, kind: str, payload):
+        with self._lock:
+            subs = list(self._subs)
+        for fn in subs:
+            try:
+                fn(kind, payload)
+            except Exception:       # a broken analyzer must not stall ingest
+                pass
+
+    # -- job signals -----------------------------------------------------------
+
+    def job_start(self, job_id: str, user: str, hosts: list,
+                  tags: Optional[dict] = None, ts: Optional[int] = None):
+        job = self.jobs.start(job_id, user, hosts, tags, ts)
+        self.stats.signals += 1
+        # signals are stored as events -> dashboard annotations (paper §III.B)
+        self.backend.write([Point(
+            "job_event", {"jobid": job_id, "username": user},
+            {"event": "start", "hosts": ",".join(hosts)},
+            job.start_ns)], self.global_db)
+        self._publish("job_start", job)
+        return job
+
+    def job_end(self, job_id: str, ts: Optional[int] = None):
+        job = self.jobs.end(job_id, ts)
+        self.stats.signals += 1
+        if job is not None:
+            self.backend.write([Point(
+                "job_event", {"jobid": job_id, "username": job.user},
+                {"event": "end"}, job.end_ns)], self.global_db)
+            self._publish("job_end", job)
+        return job
+
+    # -- ingest ------------------------------------------------------------------
+
+    def write_lines(self, data: str):
+        """HTTP body (line protocol, possibly batched) -> route."""
+        try:
+            points = decode_batch(data)
+        except Exception:
+            self.stats.parse_errors += 1
+            raise
+        self.write(points)
+        return len(points)
+
+    def write(self, points: Union[Point, Iterable[Point]]):
+        if isinstance(points, Point):
+            points = [points]
+        enriched = []
+        for p in points:
+            self.stats.points_in += 1
+            host = p.tags.get(self.HOST_TAG)
+            if host is None and self.require_host_tag:
+                self.stats.dropped_no_host += 1
+                continue
+            if p.timestamp is None:
+                p = Point(p.measurement, p.tags, p.fields, now_ns())
+            job_tags = self.jobs.tags_for_host(host) if host else {}
+            enriched.append(p.with_tags(job_tags))
+        if not enriched:
+            return
+        self.stats.points_out += len(enriched)
+        self.backend.write(enriched, self.global_db)
+        # duplication into user/job scoped databases (paper §III.B)
+        if self.per_user_db or self.per_job_db:
+            by_db: dict = {}
+            for p in enriched:
+                if self.per_user_db and "username" in p.tags:
+                    by_db.setdefault("user_" + p.tags["username"],
+                                     []).append(p)
+                if self.per_job_db and "jobid" in p.tags:
+                    by_db.setdefault("job_" + p.tags["jobid"], []).append(p)
+            for db, pts in by_db.items():
+                self.backend.write(pts, db)
+        self._publish("points", enriched)

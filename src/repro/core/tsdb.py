@@ -1,0 +1,269 @@
+"""Embedded time-series database — the LMS DB back-end (paper §III.C).
+
+The paper uses InfluxDB; an air-gapped TPU pod slice gets an embedded
+equivalent with the properties the paper relies on:
+
+* floats *and* strings as input values (metrics + events),
+* tag-indexed storage with time-range / tag-filter / windowed-aggregation
+  queries (what the dashboard agent and the analysis rules consume),
+* multiple named databases (global + per-user/per-job duplication, §III.B),
+* a retention policy to keep the generated data volume under control (§II),
+* optional write-ahead persistence (JSONL) so dashboards survive restarts.
+
+Thread-safe: the router may write from the training thread while the HTTP
+endpoint and analyzers read concurrently.
+"""
+
+from __future__ import annotations
+
+import bisect
+import json
+import os
+import threading
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Callable, Iterable, Optional
+
+from repro.core.line_protocol import Point, now_ns
+
+
+@dataclass
+class Series:
+    """One (measurement, tags) series: parallel time/values columns."""
+
+    measurement: str
+    tags: dict
+    times: list
+    values: dict                     # field name -> list
+
+
+def _tags_key(tags: dict) -> tuple:
+    return tuple(sorted(tags.items()))
+
+
+class Database:
+    """One named database: measurement -> {tags_key -> _SeriesStore}."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.RLock()
+        self._meas: dict = defaultdict(dict)     # meas -> tags_key -> store
+        self._count = 0
+
+    # -- write --------------------------------------------------------------
+
+    def write(self, points: Iterable[Point]):
+        with self._lock:
+            for p in points:
+                key = _tags_key(p.tags)
+                store = self._meas[p.measurement].get(key)
+                if store is None:
+                    store = _SeriesStore(dict(p.tags))
+                    self._meas[p.measurement][key] = store
+                store.append(p.timestamp if p.timestamp is not None
+                             else now_ns(), p.fields)
+                self._count += 1
+
+    # -- introspection -------------------------------------------------------
+
+    def measurements(self) -> list:
+        with self._lock:
+            return sorted(self._meas)
+
+    def field_keys(self, measurement: str) -> list:
+        with self._lock:
+            keys = set()
+            for store in self._meas.get(measurement, {}).values():
+                keys.update(store.values)
+            return sorted(keys)
+
+    def tag_values(self, measurement: str, tag: str) -> list:
+        with self._lock:
+            vals = {store.tags.get(tag)
+                    for store in self._meas.get(measurement, {}).values()}
+            return sorted(v for v in vals if v is not None)
+
+    def point_count(self) -> int:
+        with self._lock:
+            return self._count
+
+    # -- query ---------------------------------------------------------------
+
+    def select(self, measurement: str, fields: Optional[list] = None,
+               tags: Optional[dict] = None, t_min: Optional[int] = None,
+               t_max: Optional[int] = None) -> list:
+        """Return matching Series (copies, safe to use lock-free)."""
+        with self._lock:
+            out = []
+            for store in self._meas.get(measurement, {}).values():
+                if tags and any(store.tags.get(k) != str(v)
+                                for k, v in tags.items()):
+                    continue
+                s = store.slice(t_min, t_max, fields)
+                if s is not None:
+                    out.append(Series(measurement, dict(store.tags),
+                                      s[0], s[1]))
+            return out
+
+    def aggregate(self, measurement: str, field: str, *, agg: str = "mean",
+                  tags: Optional[dict] = None, t_min: Optional[int] = None,
+                  t_max: Optional[int] = None,
+                  group_by_tag: Optional[str] = None,
+                  window_ns: Optional[int] = None):
+        """InfluxDB-style aggregation.
+
+        Without ``window_ns``: scalar per group (dict group -> value).
+        With ``window_ns``: dict group -> (window_starts, values).
+        agg: mean | max | min | sum | count | last.
+        """
+        series = self.select(measurement, [field], tags, t_min, t_max)
+        groups: dict = defaultdict(lambda: ([], []))
+        for s in series:
+            g = s.tags.get(group_by_tag, "") if group_by_tag else ""
+            ts, vs = groups[g]
+            ts.extend(s.times)
+            vs.extend(s.values.get(field, []))
+        out = {}
+        for g, (ts, vs) in groups.items():
+            pairs = sorted((t, v) for t, v in zip(ts, vs)
+                           if isinstance(v, (int, float)) and
+                           not isinstance(v, bool))
+            if not pairs:
+                continue
+            if window_ns is None:
+                out[g] = _agg([v for _, v in pairs], agg)
+            else:
+                w0 = pairs[0][0] - pairs[0][0] % window_ns
+                wins: dict = defaultdict(list)
+                for t, v in pairs:
+                    wins[(t - w0) // window_ns].append(v)
+                starts = sorted(wins)
+                out[g] = ([w0 + i * window_ns for i in starts],
+                          [_agg(wins[i], agg) for i in starts])
+        return out
+
+    # -- retention ------------------------------------------------------------
+
+    def enforce_retention(self, max_age_ns: Optional[int] = None,
+                          max_points_per_series: Optional[int] = None):
+        """Drop old data (paper §II: keep data volume under control)."""
+        cutoff = now_ns() - max_age_ns if max_age_ns else None
+        with self._lock:
+            for stores in self._meas.values():
+                for store in stores.values():
+                    store.trim(cutoff, max_points_per_series)
+
+
+def _agg(vals: list, agg: str):
+    if agg == "mean":
+        return sum(vals) / len(vals)
+    if agg == "max":
+        return max(vals)
+    if agg == "min":
+        return min(vals)
+    if agg == "sum":
+        return sum(vals)
+    if agg == "count":
+        return float(len(vals))
+    if agg == "last":
+        return vals[-1]
+    raise ValueError(f"unknown agg {agg!r}")
+
+
+class _SeriesStore:
+    """Columnar store for one series; times kept sorted."""
+
+    __slots__ = ("tags", "times", "values")
+
+    def __init__(self, tags: dict):
+        self.tags = tags
+        self.times: list = []
+        self.values: dict = defaultdict(list)
+
+    def append(self, ts: int, fields: dict):
+        if self.times and ts < self.times[-1]:
+            idx = bisect.bisect_right(self.times, ts)
+            self.times.insert(idx, ts)
+            for k in self.values:
+                self.values[k].insert(idx, fields.get(k))
+            for k, v in fields.items():
+                if k not in self.values:
+                    col = [None] * (len(self.times))
+                    col[idx] = v
+                    self.values[k] = col
+            return
+        self.times.append(ts)
+        n = len(self.times)
+        for k in set(self.values) | set(fields):
+            col = self.values[k]
+            while len(col) < n - 1:
+                col.append(None)
+            col.append(fields.get(k))
+
+    def slice(self, t_min, t_max, fields):
+        lo = bisect.bisect_left(self.times, t_min) if t_min else 0
+        hi = bisect.bisect_right(self.times, t_max) if t_max \
+            else len(self.times)
+        if lo >= hi:
+            return None
+        names = fields if fields else list(self.values)
+        vals = {k: self.values[k][lo:hi] for k in names if k in self.values}
+        if not vals:
+            return None
+        return self.times[lo:hi], vals
+
+    def trim(self, cutoff, max_points):
+        lo = 0
+        if cutoff is not None:
+            lo = bisect.bisect_left(self.times, cutoff)
+        if max_points is not None:
+            lo = max(lo, len(self.times) - max_points)
+        if lo > 0:
+            self.times = self.times[lo:]
+            self.values = {k: v[lo:] for k, v in self.values.items()}
+
+
+class TSDBServer:
+    """Named-database manager (the "database back-end" box in Fig. 1)."""
+
+    def __init__(self, persist_dir: Optional[str] = None):
+        self._dbs: dict = {}
+        self._lock = threading.RLock()
+        self._persist_dir = persist_dir
+        if persist_dir:
+            os.makedirs(persist_dir, exist_ok=True)
+
+    def db(self, name: str = "global") -> Database:
+        with self._lock:
+            if name not in self._dbs:
+                self._dbs[name] = Database(name)
+            return self._dbs[name]
+
+    def databases(self) -> list:
+        with self._lock:
+            return sorted(self._dbs)
+
+    def write(self, points: Iterable[Point], db: str = "global"):
+        points = list(points)
+        self.db(db).write(points)
+        if self._persist_dir:
+            path = os.path.join(self._persist_dir, f"{db}.jsonl")
+            with open(path, "a") as f:
+                for p in points:
+                    f.write(json.dumps({
+                        "m": p.measurement, "t": p.tags, "f": p.fields,
+                        "ts": p.timestamp}) + "\n")
+
+    def load_persisted(self):
+        if not self._persist_dir:
+            return
+        for fn in os.listdir(self._persist_dir):
+            if not fn.endswith(".jsonl"):
+                continue
+            name = fn[:-len(".jsonl")]
+            with open(os.path.join(self._persist_dir, fn)) as f:
+                pts = []
+                for line in f:
+                    d = json.loads(line)
+                    pts.append(Point(d["m"], d["t"], d["f"], d["ts"]))
+            self.db(name).write(pts)

@@ -1,0 +1,130 @@
+"""libusermetric — application-level monitoring (paper §IV).
+
+A lightweight library that buffers and sends batched messages in the
+InfluxDB line protocol.  Default tags can be specified and are added to each
+message; besides metric name, value, default tags and time stamp, arbitrary
+tags can be supplied (e.g. a thread identifier).
+
+Sinks: an in-process :class:`~repro.core.router.MetricsRouter` or an HTTP
+endpoint (``repro.core.httpd.HttpSink``) — the same code path either way,
+mirroring how the paper's libusermetric talks to the router over HTTP.
+A command-line tool for batch scripts lives in ``usermetric_cli``.
+"""
+
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Callable, Optional, Union
+
+from repro.core.line_protocol import Point, now_ns
+
+
+class UserMetric:
+    """Buffered, batched metric/event emitter with default tags."""
+
+    def __init__(self, sink, *, default_tags: Optional[dict] = None,
+                 batch_size: int = 64, flush_interval_s: float = 5.0,
+                 hostname: Optional[str] = None,
+                 auto_flush_thread: bool = False):
+        """sink: callable(list[Point]) or an object with .write(points)."""
+        self._sink = sink.write if hasattr(sink, "write") else sink
+        self.default_tags = dict(default_tags or {})
+        self.default_tags.setdefault(
+            "hostname", hostname or socket.gethostname())
+        self.batch_size = batch_size
+        self.flush_interval_s = flush_interval_s
+        self._buf: list = []
+        self._lock = threading.Lock()
+        self._last_flush = time.monotonic()
+        self._sent_points = 0
+        self._sent_batches = 0
+        self._stop = threading.Event()
+        self._thread = None
+        if auto_flush_thread:
+            self._thread = threading.Thread(target=self._flush_loop,
+                                            daemon=True)
+            self._thread.start()
+
+    # -- emit -----------------------------------------------------------------
+
+    def metric(self, name: str, value: Union[float, int, dict],
+               tags: Optional[dict] = None, ts: Optional[int] = None):
+        """Numeric metric; ``value`` may be a dict of field -> value."""
+        fields = value if isinstance(value, dict) else {"value": value}
+        fields = {k: (float(v) if not isinstance(v, (bool, int, str))
+                      else v) for k, v in fields.items()}
+        self._push(Point(name, self._tags(tags), fields,
+                         ts if ts is not None else now_ns()))
+
+    def event(self, name: str, text: str, tags: Optional[dict] = None,
+              ts: Optional[int] = None):
+        """String-valued event (paper Fig. 3 start/end markers)."""
+        self._push(Point(name, self._tags(tags), {"event": text},
+                         ts if ts is not None else now_ns()))
+
+    def region(self, name: str, tags: Optional[dict] = None):
+        """Context manager timing a code region -> <name>_time_s metric."""
+        um = self
+
+        class _Region:
+            def __enter__(self):
+                self.t0 = time.monotonic()
+                return self
+
+            def __exit__(self, *exc):
+                um.metric(f"{name}_time_s", time.monotonic() - self.t0, tags)
+                return False
+        return _Region()
+
+    # -- buffering --------------------------------------------------------------
+
+    def _tags(self, tags):
+        out = dict(self.default_tags)
+        if tags:
+            out.update(tags)
+        return out
+
+    def _push(self, p: Point):
+        flush_now = False
+        with self._lock:
+            self._buf.append(p)
+            if len(self._buf) >= self.batch_size or \
+                    time.monotonic() - self._last_flush \
+                    >= self.flush_interval_s:
+                flush_now = True
+        if flush_now:
+            self.flush()
+
+    def flush(self):
+        with self._lock:
+            buf, self._buf = self._buf, []
+            self._last_flush = time.monotonic()
+        if buf:
+            self._sink(buf)
+            self._sent_points += len(buf)
+            self._sent_batches += 1
+
+    def _flush_loop(self):
+        while not self._stop.wait(self.flush_interval_s):
+            self.flush()
+
+    def close(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2 * self.flush_interval_s)
+        self.flush()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    @property
+    def stats(self) -> dict:
+        return {"sent_points": self._sent_points,
+                "sent_batches": self._sent_batches,
+                "buffered": len(self._buf)}

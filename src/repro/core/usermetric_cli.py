@@ -1,0 +1,78 @@
+"""Command-line metric/event sender (paper §IV: "For use in batch scripts,
+a command line application can send metrics and events from the shell").
+
+Examples (against a running LMS HTTP endpoint)::
+
+    python -m repro.core.usermetric_cli --url http://127.0.0.1:8086 \
+        metric loss 1.234 --tag phase=warmup
+    python -m repro.core.usermetric_cli --url $LMS_URL \
+        event run_state "starting miniMD"
+    python -m repro.core.usermetric_cli --url $LMS_URL \
+        job-start --jobid 42 --user alice --hosts h1,h2
+"""
+
+from __future__ import annotations
+
+import argparse
+import socket
+import sys
+
+from repro.core.httpd import HttpSink
+from repro.core.line_protocol import Point, now_ns
+
+
+def _tags(args) -> dict:
+    tags = {"hostname": args.hostname}
+    for t in args.tag or []:
+        k, _, v = t.partition("=")
+        tags[k] = v
+    return tags
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="usermetric")
+    ap.add_argument("--url", required=True, help="LMS router HTTP endpoint")
+    ap.add_argument("--db", default="global")
+    ap.add_argument("--hostname", default=socket.gethostname())
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    m = sub.add_parser("metric", help="send one numeric metric")
+    m.add_argument("name")
+    m.add_argument("value", type=float)
+    m.add_argument("--tag", action="append")
+
+    e = sub.add_parser("event", help="send one string event")
+    e.add_argument("name")
+    e.add_argument("text")
+    e.add_argument("--tag", action="append")
+
+    js = sub.add_parser("job-start")
+    js.add_argument("--jobid", required=True)
+    js.add_argument("--user", required=True)
+    js.add_argument("--hosts", required=True,
+                    help="comma-separated hostnames")
+    js.add_argument("--tag", action="append")
+
+    je = sub.add_parser("job-end")
+    je.add_argument("--jobid", required=True)
+
+    args = ap.parse_args(argv)
+    sink = HttpSink(args.url, db=args.db)
+
+    if args.cmd == "metric":
+        sink.write(Point(args.name, _tags(args), {"value": args.value},
+                         now_ns()))
+    elif args.cmd == "event":
+        sink.write(Point(args.name, _tags(args), {"event": args.text},
+                         now_ns()))
+    elif args.cmd == "job-start":
+        tags = {k: v for k, v in
+                (t.partition("=")[::2] for t in (args.tag or []))}
+        sink.job_start(args.jobid, args.user, args.hosts.split(","), tags)
+    elif args.cmd == "job-end":
+        sink.job_end(args.jobid)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+"""Data pipeline: synthetic + memmap token streams with prefetch."""
+
+from repro.data.pipeline import (DataLoader, MemmapTokenSource,
+                                 SyntheticTokenSource, make_batch_fn)
+
+__all__ = ["DataLoader", "MemmapTokenSource", "SyntheticTokenSource",
+           "make_batch_fn"]

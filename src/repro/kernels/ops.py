@@ -1,0 +1,47 @@
+"""Jit'd wrappers: model-layout adapters over the Pallas kernels.
+
+Models store activations as (B, S, H, D); the kernels want (B, H, S, D).
+These wrappers do the transposes, pick block sizes, and expose the
+``interpret`` switch (CPU validation; compiled Mosaic on TPU).  They are the
+only entry points the model code and the tests use.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd import ssd_scan
+
+
+def flash_attention_bshd(q, k, v, *, causal: bool = True, window: int = 0,
+                         bq: int = 128, bk: int = 128,
+                         interpret: bool = False):
+    """q: (B, S, H, D); k/v: (B, S, KV, D) -> (B, S, H, D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention(qt, kt, vt, causal=causal, window=window, bq=bq,
+                        bk=bk, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)
+
+
+def fused_rmsnorm(x, scale, *, eps: float = 1e-5, interpret: bool = False):
+    return rmsnorm(x, scale, eps=eps, interpret=interpret)
+
+
+def ssd_chunked_kernel(x, dt_log_decay, b_mat, c_mat, *, chunk: int = 128,
+                       interpret: bool = False):
+    """Kernel-backed drop-in for models.ssm.ssd_chunked (zero init state).
+
+    x: (B, L, H, P); dt_log_decay: (B, L, H); b/c: (B, L, H, N).
+    Returns y: (B, L, H, P) (no final state — training path).
+    """
+    xt = x.transpose(0, 2, 1, 3)
+    at = dt_log_decay.transpose(0, 2, 1)
+    bt = b_mat.transpose(0, 2, 1, 3)
+    ct = c_mat.transpose(0, 2, 1, 3)
+    y = ssd_scan(xt, at, bt, ct, chunk=chunk, interpret=interpret)
+    return y.transpose(0, 2, 1, 3)

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Written independently of the kernels (straightforward dense math, no
+blocking) so a kernel bug cannot hide in shared code.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, H, S, D); k/v: (B, KV, S, D) -> (B, H, S, D).  fp32 softmax."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    scores = jnp.where(ok, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no valid key (shouldn't happen causally) -> zeros
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_ref(x, a, b, c):
+    """Sequential SSD recurrence (the definitional oracle).
+
+    x: (B, H, L, P); a: (B, H, L) log decays; b/c: (B, H, L, N).
+    S_t = exp(a_t) S_{t-1} + b_t x_t^T ; y_t = S_t^T c_t.
+    """
+    bsz, h, l, p = x.shape
+    n = b.shape[-1]
+
+    def step(s, inp):
+        xt, at, bt, ct = inp                     # (B,H,P) (B,H) (B,H,N) ...
+        s = s * jnp.exp(at)[..., None, None] + \
+            jnp.einsum("bhn,bhp->bhnp", bt, xt)
+        y = jnp.einsum("bhnp,bhn->bhp", s, ct)
+        return s, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(a.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 2, 0))
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """Sequential RWKV6 WKV recurrence (oracle for models.ssm.wkv6_chunked).
+
+    r/k/v: (B, L, H, D); logw: (B, L, H, D); u: (H, D).
+    o_t = r_t . (S_t + diag(u) k_t v_t^T); S_{t+1} = diag(w_t) S_t + k_t v_t^T
+    """
+    bsz, l, h, dh = r.shape
+
+    def step(s, inp):
+        rt, kt, vt, wt = (t.astype(jnp.float32) for t in inp)
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        o = jnp.einsum("bhd,bhde->bhe", rt,
+                       s + u.astype(jnp.float32)[..., None] * kv)
+        s = s * jnp.exp(wt)[..., None] + kv
+        return s, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, logw))
+    s0 = jnp.zeros((bsz, h, dh, dh), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), None

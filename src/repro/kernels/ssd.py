@@ -1,0 +1,101 @@
+"""Mamba2 SSD chunk scan — Pallas TPU kernel.
+
+The SSD recurrence is the throughput hot-spot of the SSM/hybrid archs
+(zamba2 long-context).  TPU mapping: the chunk dimension is a *sequential*
+grid axis carrying the (P, N) state in VMEM scratch; per chunk, the three
+contractions (intra-chunk C B^T, state write B^T x, state read C S) are MXU
+matmuls on (C, N)x(C, P) tiles, and the decay weights come from a cumulative
+log-sum built in-register.  This keeps the state resident in VMEM for the
+whole sequence — the chunked-scan analogue of flash attention's accumulator.
+
+Layout: one (batch, head) pair per grid row; inputs pre-transposed to
+(B, H, L, ...) by ``ops.ssd_chunked_kernel``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *,
+                chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)                   # (C, P)
+    a = a_ref[0, 0].astype(jnp.float32)                   # (C,)
+    b = b_ref[0, 0].astype(jnp.float32)                   # (C, N)
+    c = c_ref[0, 0].astype(jnp.float32)                   # (C, N)
+
+    a_cs = jnp.cumsum(a)                                  # (C,)
+    a_total = a_cs[-1]
+
+    # intra-chunk: pair[i, j] = exp(a_cs_i - a_cs_j) for i >= j else 0
+    diff = a_cs[:, None] - a_cs[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    pair = jnp.where(ii >= jj, jnp.exp(diff), 0.0)        # (C, C)
+
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (C, C)
+    y_diag = jax.lax.dot_general(cb * pair, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_off = (C . S_prev) * exp(a_cs)
+    s_prev = state_ref[...]                               # (N, P)
+    y_off = jax.lax.dot_general(c, s_prev, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_off = y_off * jnp.exp(a_cs)[:, None]
+
+    o_ref[0, 0] = (y_diag + y_off).astype(o_ref.dtype)
+
+    # state update: S_new = exp(a_total) S_prev + B^T (x * decay_to_end)
+    decay_to_end = jnp.exp(a_total - a_cs)                # (C,), <= 1
+    xw = x * decay_to_end[:, None]
+    s_chunk = jax.lax.dot_general(b, xw, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    state_ref[...] = s_prev * jnp.exp(a_total) + s_chunk
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, a, b, c, *, chunk: int = 128, interpret: bool = False):
+    """Chunked SSD scan.
+
+    x: (B, H, L, P) — dt-premultiplied inputs;
+    a: (B, H, L)    — per-step log decays (dt * A, <= 0);
+    b/c: (B, H, L, N) — input/output projections (groups pre-broadcast).
+    Returns y: (B, H, L, P).
+    """
+    bsz, h, l, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, c_: (b_, h_, c_)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, c_: (b_, h_, c_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda b_, h_, c_: (b_, h_, c_, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, l, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="ssd_scan",
+    )(x, a, b, c)

@@ -1,0 +1,1 @@
+"""Launcher: production meshes, AOT dry-run, train/serve drivers."""

@@ -1,0 +1,38 @@
+"""Production meshes.
+
+``make_production_mesh`` is a *function* (never a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init, and smoke tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading "pod"
+    axis (DP spans pod x data; TP spans model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(devices: Optional[int] = None, *, model: int = 0):
+    """Elastic mesh for whatever devices this process actually has.
+
+    Picks the largest power-of-two TP ("model") axis <= requested (or 1/4 of
+    the device count) and puts the rest on "data" — the restart path after a
+    node failure builds its mesh through here.
+    """
+    n = devices if devices is not None else len(jax.devices())
+    if model <= 0:
+        model = 1
+        while model * model * 4 <= n:
+            model *= 2
+    while n % model != 0:
+        model //= 2
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,441 @@
+"""State-space sequence mixers: Mamba2 (SSD) and RWKV6 ("Finch").
+
+Both are implemented in *chunked* parallel form for train/prefill (work
+O(L * C) with sequential depth L / C) and in *recurrent* form for decode
+(O(1) per token, which is what makes ``long_500k`` runnable).
+
+Numerical-safety invariants (property-tested):
+
+* Mamba2 decay is a per-head scalar, so intra-chunk pairwise decays use the
+  "segsum" trick — differences of within-chunk cumulative log-decays, which
+  are always <= 0 before ``exp``.
+* RWKV6 decay is per *channel*; the intra-chunk pairwise tensor
+  ``exp(lp_i - lp_{j+1})`` (i > j) is likewise a difference of cumulative
+  log-decays with the larger index first, hence <= 0.  No ``exp`` in either
+  path ever sees a positive argument, so neither overflows regardless of how
+  aggressive the learned decay is.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm_gated
+from repro.models.params import spec
+
+
+# ==========================================================================
+# Mamba2 (SSD)
+# ==========================================================================
+
+
+def mamba2_specs(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    gn = s.n_groups * s.state_dim
+    conv_dim = di + 2 * gn
+    return {
+        # in_proj -> [z (di), x (di), B (gn), C (gn), dt (nh)]
+        "in_proj": spec((d, 2 * di + 2 * gn + nh), ("embed", "inner")),
+        "conv_w": spec((s.conv_width, conv_dim), (None, "inner"), scale=0.5),
+        "conv_b": spec((conv_dim,), ("inner",), init="zeros"),
+        "dt_bias": spec((nh,), ("ssm_heads",), init="zeros"),
+        "A_log": spec((nh,), ("ssm_heads",), init="constant", value=0.0),
+        "D": spec((nh,), ("ssm_heads",), init="ones"),
+        "norm_scale": spec((di,), ("inner",), init="ones"),
+        "out_proj": spec((di, d), ("inner", "embed")),
+    }
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < s <= i} x[..., s].
+
+    Entries with j > i are -inf (masked).  x: (..., C) -> (..., C, C).
+    """
+    c = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # lp_i - lp_j
+    mask = jnp.tril(jnp.ones((c, c), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _causal_conv(xbc, w, b, init_state=None):
+    """Depth-wise causal conv1d.  xbc: (B, L, C); w: (W, C); b: (C,).
+
+    init_state: (B, W-1, C) tail of the previous segment (decode/prefill
+    chaining) or None for zero history.  Returns (y, new_state)."""
+    bsz, l, c = xbc.shape
+    width = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((bsz, width - 1, c), xbc.dtype)
+    ext = jnp.concatenate([init_state, xbc], axis=1)     # (B, W-1+L, C)
+    y = sum(ext[:, i:i + l] * w[i][None, None, :] for i in range(width))
+    new_state = ext[:, -(width - 1):] if width > 1 else init_state
+    return jax.nn.silu(y + b[None, None, :]), new_state
+
+
+def ssd_chunked(x, dt_log_decay, b_mat, c_mat, *, chunk: int,
+                init_state=None):
+    """Chunked SSD scan (Mamba2 alg. 1, jnp).
+
+    x:  (B, L, H, P)   already multiplied by dt (i.e. dB x uses dt)
+    dt_log_decay: (B, L, H)  = dt * A  (negative log decays)
+    b_mat/c_mat: (B, L, H, N)  (groups already broadcast to heads)
+    init_state: (B, H, P, N) or None.
+    Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    if l % chunk != 0:
+        chunk = math.gcd(l, chunk) or l
+    nc = l // chunk
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:])
+
+    xc, ac, bc, cc = map(to_chunks, (x, dt_log_decay, b_mat, c_mat))
+    ac = jnp.moveaxis(ac.astype(jnp.float32), -1, 2)     # (B, nc, H, C)
+    a_cs = jnp.cumsum(ac, axis=-1)                       # within-chunk cumsum
+    a_total = a_cs[..., -1]                              # (B, nc, H)
+
+    # ---- intra-chunk (parallel over chunks) ------------------------------
+    pair = jnp.exp(_segsum(ac))                          # (B,nc,H,C,C), <=1
+    # strictly causal including the diagonal (SSD includes j == i term)
+    y_diag = jnp.einsum("bzihn,bzjhn,bzhij,bzjhp->bzihp",
+                        cc, bc, pair.astype(cc.dtype), xc)
+
+    # ---- per-chunk input states (fp32 carry for stability) ---------------
+    decay_to_end = jnp.exp(a_cs[..., -1:] - a_cs)        # (B,nc,H,C), <=1
+    states = jnp.einsum("bzjhn,bzhj,bzjhp->bzhpn",
+                        bc, decay_to_end.astype(bc.dtype), xc
+                        ).astype(jnp.float32)
+
+    # ---- inter-chunk recurrence (sequential over nc) ---------------------
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    init_state = init_state.astype(jnp.float32)
+
+    def body(s_prev, inp):
+        s_chunk, a_tot = inp                             # (B,H,P,N), (B,H)
+        s_new = s_prev * jnp.exp(a_tot)[..., None, None].astype(s_prev.dtype) \
+            + s_chunk
+        return s_new, s_prev
+
+    (final_state, prev_states) = jax.lax.scan(
+        body, init_state,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(a_total, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (B,nc,H,P,N)
+
+    # ---- inter-chunk output contribution ---------------------------------
+    decay_from_start = jnp.exp(a_cs)                     # (B,nc,H,C), <=1
+    y_off = jnp.einsum("bzihn,bzhi,bzhpn->bzihp",
+                       cc, decay_from_start.astype(cc.dtype), prev_states)
+
+    y = (y_diag.astype(jnp.float32) + y_off.astype(jnp.float32))
+    return y.reshape(bsz, l, h, p).astype(x.dtype), final_state
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    conv_dim = di + 2 * s.n_groups * s.state_dim
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+    }
+
+
+def mamba2_block(p, x, cfg: ModelConfig, *, mode="train", cache=None):
+    """Mamba2 mixer.  x: (B, L, d) -> (y, new_cache).
+
+    train: chunked, no cache io.  prefill: chunked, emits final state.
+    decode: recurrent single (or few) token update using the cache.
+    """
+    s = cfg.ssm
+    dt_ = x.dtype
+    bsz, l, d = x.shape
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    gn = s.n_groups * s.state_dim
+
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt_raw = zxbcdt[..., -nh:]
+
+    conv_state = cache["conv"] if cache is not None else None
+    if mode == "decode":
+        xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(dt_),
+                                       p["conv_b"].astype(dt_), conv_state)
+    else:
+        xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(dt_),
+                                       p["conv_b"].astype(dt_), None)
+
+    xin = xbc[..., :di]
+    b_mat = xbc[..., di:di + gn]
+    c_mat = xbc[..., di + gn:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,L,H)
+    a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))           # (H,) < 0
+
+    xh = xin.reshape(bsz, l, nh, s.head_dim)
+    heads_per_group = nh // s.n_groups
+    bh = jnp.repeat(b_mat.reshape(bsz, l, s.n_groups, s.state_dim),
+                    heads_per_group, axis=2)
+    ch = jnp.repeat(c_mat.reshape(bsz, l, s.n_groups, s.state_dim),
+                    heads_per_group, axis=2)
+
+    if mode == "decode":
+        # recurrent: h' = exp(dt*A) h + (dt * B) x ; y = C . h' + D x
+        ssm = cache["ssm"]                                     # (B,H,P,N)
+        da = jnp.exp(dt * a_neg)                               # (B,L,H)
+        y_steps = []
+        for t in range(l):                                     # l is 1 for decode
+            upd = jnp.einsum("bh,bhp,bhn->bhpn", dt[:, t],
+                             xh[:, t].astype(jnp.float32),
+                             bh[:, t].astype(jnp.float32))
+            ssm = ssm * da[:, t][..., None, None] + upd
+            y_t = jnp.einsum("bhpn,bhn->bhp", ssm,
+                             ch[:, t].astype(jnp.float32))
+            y_steps.append(y_t)
+        y = jnp.stack(y_steps, axis=1).astype(dt_)             # (B,L,H,P)
+        new_cache = {"conv": conv_state, "ssm": ssm}
+    else:
+        xdt = xh * dt[..., None].astype(dt_)
+        init = cache["ssm"] if cache is not None else None
+        y, final_state = ssd_chunked(xdt, dt * a_neg, bh, ch,
+                                     chunk=s.chunk_size, init_state=init)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": conv_state, "ssm": final_state}
+
+    y = y + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(bsz, l, di)
+    y = rmsnorm_gated(p["norm_scale"], y, z, eps=cfg.norm_eps)
+    return y @ p["out_proj"].astype(dt_), new_cache
+
+
+# ==========================================================================
+# RWKV6 ("Finch") — data-dependent per-channel decay
+# ==========================================================================
+
+
+def rwkv6_specs(cfg: ModelConfig):
+    r = cfg.rwkv
+    d = cfg.d_model
+    nh = d // r.head_dim
+    return {
+        # sublayer layernorms (RWKV uses LN, not RMSNorm)
+        "ln_tm_scale": spec((d,), ("norm",), init="ones"),
+        "ln_tm_bias": spec((d,), ("norm",), init="zeros"),
+        "ln_cm_scale": spec((d,), ("norm",), init="ones"),
+        "ln_cm_bias": spec((d,), ("norm",), init="zeros"),
+        # token-shift ddlerp: base mus + shared low-rank mixer
+        "mu_x": spec((d,), ("embed",), init="zeros"),
+        "mu_rkvwg": spec((5, d), (None, "embed"), init="zeros"),
+        "mix_w1": spec((d, 5 * r.mix_lora), ("embed", None), scale=0.02),
+        "mix_w2": spec((5, r.mix_lora, d), (None, None, "embed"), scale=0.02),
+        # projections
+        "wr": spec((d, d), ("embed", "inner")),
+        "wk": spec((d, d), ("embed", "inner")),
+        "wv": spec((d, d), ("embed", "inner")),
+        "wg": spec((d, d), ("embed", "inner")),
+        "wo": spec((d, d), ("inner", "embed")),
+        # data-dependent decay lora: w = exp(-exp(w0 + tanh(xw W1) W2))
+        "w0": spec((d,), ("embed",), init="constant", value=-0.7),
+        "decay_w1": spec((d, r.decay_lora), ("embed", None), scale=0.02),
+        "decay_w2": spec((r.decay_lora, d), (None, "embed"), scale=0.02),
+        "bonus_u": spec((nh, r.head_dim), ("ssm_heads", None), scale=0.5),
+        # per-head groupnorm
+        "ln_x_scale": spec((d,), ("inner",), init="ones"),
+        "ln_x_bias": spec((d,), ("inner",), init="zeros"),
+        # channel-mix
+        "cm_mu_k": spec((d,), ("embed",), init="zeros"),
+        "cm_mu_r": spec((d,), ("embed",), init="zeros"),
+        "cm_wk": spec((d, cfg.d_ff), ("embed", "mlp")),
+        "cm_wv": spec((cfg.d_ff, d), ("mlp", "embed")),
+        "cm_wr": spec((d, d), ("embed", "inner")),
+    }
+
+
+def _token_shift(x, last=None):
+    """x_{t-1} with the previous segment's final token (or 0) at t=0."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    else:
+        last = last[:, None] if last.ndim == 2 else last
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def wkv6_chunked(r, k, v, logw, u, *, chunk: int, init_state=None):
+    """Chunked WKV6.
+
+    r/k/v: (B, L, H, D); logw: (B, L, H, D) (log decay, <= 0);
+    u: (H, D) bonus.  State S: (B, H, D, D) with S_{t+1} = diag(w_t) S_t +
+    k_t v_t^T and o_t = r_t . S_t + (r_t . (u * k_t)) v_t.
+    Returns (o (B,L,H,D), final_state).
+    """
+    bsz, l, h, dh = r.shape
+    if l % chunk != 0:
+        chunk = math.gcd(l, chunk) or l
+    nc = l // chunk
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, h, dh)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw.astype(jnp.float32)))
+    lp = jnp.cumsum(wc, axis=2)                            # inclusive cumsum
+    lp_excl = lp - wc                                      # exclusive: sum_{s<t}
+    lp_end = lp[:, :, -1]                                  # (B,nc,H,D)
+
+    # ---- intra-chunk: A_ij = sum_d r_id k_jd exp(lp_excl_i - lp_j), j < i
+    # exponent = lp_excl[i] - lp[j] = sum_{j < s < i} logw_s  <= 0  (i > j)
+    expo = lp_excl[:, :, :, None] - lp[:, :, None, :]      # (B,nc,Ci,Cj,H,D)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strictly lower
+    expo = jnp.where(mask[None, None, :, :, None, None], expo, -jnp.inf)
+    a_intra = jnp.einsum("bzihd,bzjhd,bzijhd->bzijh",
+                         rc.astype(jnp.float32), kc.astype(jnp.float32),
+                         jnp.exp(expo))
+    a_diag = jnp.einsum("bzihd,bzihd,hd->bzih",
+                        rc.astype(jnp.float32), kc.astype(jnp.float32),
+                        u.astype(jnp.float32))
+    eye = jnp.eye(chunk, dtype=a_intra.dtype)
+    a_full = a_intra + a_diag[:, :, :, None, :] * eye[None, None, :, :, None]
+    y_intra = jnp.einsum("bzijh,bzjhd->bzihd", a_full,
+                         vc.astype(jnp.float32))
+
+    # ---- per-chunk state contribution: sum_j diag(exp(lp_end - lp_j)) k v^T
+    k_dec = kc.astype(jnp.float32) * jnp.exp(
+        lp_end[:, :, None] - lp)                            # <= 1
+    s_chunk = jnp.einsum("bzjhd,bzjhe->bzhde", k_dec, vc.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence ------------------------------------------
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, dh, dh), jnp.float32)
+
+    def body(s_prev, inp):
+        s_c, lpe = inp
+        s_new = s_prev * jnp.exp(lpe)[..., None] + s_c
+        return s_new, s_prev
+
+    final_state, prev_states = jax.lax.scan(
+        body, init_state,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(lp_end, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (B,nc,H,D,D)
+
+    # ---- inter-chunk output: r_i decayed from chunk start ----------------
+    r_dec = rc.astype(jnp.float32) * jnp.exp(lp_excl)      # <= 1
+    y_inter = jnp.einsum("bzihd,bzhde->bzihe", r_dec, prev_states)
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, dh)
+    return y.astype(r.dtype), final_state
+
+
+def rwkv6_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    nh = d // cfg.rwkv.head_dim
+    return {
+        "shift_tm": jnp.zeros((batch, d), dtype),
+        "shift_cm": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, nh, cfg.rwkv.head_dim, cfg.rwkv.head_dim),
+                         jnp.float32),
+    }
+
+
+def _rwkv_groupnorm(x, scale, bias, nh, eps=64e-5):
+    """Per-head LayerNorm over head_dim (RWKV ln_x)."""
+    bsz, l, d = x.shape
+    xh = x.reshape(bsz, l, nh, d // nh).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    y = (xh - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(bsz, l, d) * scale.astype(jnp.float32) \
+        + bias.astype(jnp.float32)
+    return y
+
+
+def rwkv6_time_mix(p, x, cfg: ModelConfig, *, mode="train", cache=None,
+                   chunk: int = 32):
+    """RWKV6 time-mix.  x: (B, L, d) -> (y, partial new cache)."""
+    r_cfg = cfg.rwkv
+    dt_ = x.dtype
+    bsz, l, d = x.shape
+    nh = d // r_cfg.head_dim
+
+    last = cache["shift_tm"] if cache is not None else None
+    xprev = _token_shift(x, last)
+    sx = xprev - x
+
+    # ddlerp mixing coefficients
+    xxx = x + sx * p["mu_x"].astype(dt_)
+    mix = jnp.tanh(xxx @ p["mix_w1"].astype(dt_))
+    mix = mix.reshape(bsz, l, 5, r_cfg.mix_lora)
+    mus = jnp.einsum("blfm,fmd->blfd", mix, p["mix_w2"].astype(dt_))
+    mus = mus + p["mu_rkvwg"].astype(dt_)[None, None]
+    xr = x + sx * mus[:, :, 0]
+    xk = x + sx * mus[:, :, 1]
+    xv = x + sx * mus[:, :, 2]
+    xw = x + sx * mus[:, :, 3]
+    xg = x + sx * mus[:, :, 4]
+
+    r = (xr @ p["wr"].astype(dt_)).reshape(bsz, l, nh, r_cfg.head_dim)
+    k = (xk @ p["wk"].astype(dt_)).reshape(bsz, l, nh, r_cfg.head_dim)
+    v = (xv @ p["wv"].astype(dt_)).reshape(bsz, l, nh, r_cfg.head_dim)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt_))
+
+    w_raw = p["w0"].astype(jnp.float32) + \
+        jnp.tanh(xw @ p["decay_w1"].astype(dt_)).astype(jnp.float32) \
+        @ p["decay_w2"].astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(w_raw, -20.0, 10.0))          # <= 0
+    logw = logw.reshape(bsz, l, nh, r_cfg.head_dim)
+
+    if mode == "decode":
+        s = cache["wkv"]                                    # (B,H,D,D)
+        outs = []
+        for t in range(l):
+            rt = r[:, t].astype(jnp.float32)
+            kt = k[:, t].astype(jnp.float32)
+            vt = v[:, t].astype(jnp.float32)
+            kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+            o = jnp.einsum("bhd,bhde->bhe", rt,
+                           s + p["bonus_u"].astype(jnp.float32)[..., None] * kv)
+            s = s * jnp.exp(logw[:, t])[..., None] + kv
+            outs.append(o)
+        y = jnp.stack(outs, axis=1)                         # (B,L,H,D) fp32
+        new_wkv = s
+    else:
+        init = cache["wkv"] if cache is not None else None
+        y, new_wkv = wkv6_chunked(r, k, v, logw, p["bonus_u"], chunk=chunk,
+                                  init_state=init)
+
+    y = _rwkv_groupnorm(y.reshape(bsz, l, d).astype(jnp.float32),
+                        p["ln_x_scale"], p["ln_x_bias"], nh)
+    y = (y * g.astype(jnp.float32)).astype(dt_)
+    out = y @ p["wo"].astype(dt_)
+    partial = None
+    if mode in ("prefill", "decode"):
+        partial = {"shift_tm": x[:, -1], "wkv": new_wkv}
+    return out, partial
+
+
+def rwkv6_channel_mix(p, x, cfg: ModelConfig, *, mode="train", cache=None):
+    dt_ = x.dtype
+    last = cache["shift_cm"] if cache is not None else None
+    sx = _token_shift(x, last) - x
+    xk = x + sx * p["cm_mu_k"].astype(dt_)
+    xr = x + sx * p["cm_mu_r"].astype(dt_)
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(dt_)))
+    v = k @ p["cm_wv"].astype(dt_)
+    out = jax.nn.sigmoid(xr @ p["cm_wr"].astype(dt_)) * v
+    partial = {"shift_cm": x[:, -1]} if mode in ("prefill", "decode") else None
+    return out, partial

@@ -1,0 +1,21 @@
+"""Distribution: logical-axis sharding rules, constraints, pipeline."""
+
+from repro.parallel.sharding import (
+    PartitionConstraints,
+    ShardingRules,
+    TRAIN_RULES,
+    SERVE_RULES,
+    logical_to_pspec,
+    shardings_for_specs,
+    rules_for,
+)
+
+__all__ = [
+    "PartitionConstraints",
+    "ShardingRules",
+    "TRAIN_RULES",
+    "SERVE_RULES",
+    "logical_to_pspec",
+    "shardings_for_specs",
+    "rules_for",
+]

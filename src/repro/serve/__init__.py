@@ -1,0 +1,5 @@
+"""Serving: prefill/decode step builders + batched engine."""
+
+from repro.serve.engine import ServingEngine, make_serve_fns
+
+__all__ = ["ServingEngine", "make_serve_fns"]

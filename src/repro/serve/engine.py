@@ -1,0 +1,158 @@
+"""Serving layer: jitted prefill/decode steps + a batched request engine.
+
+``make_serve_fns`` builds the two step functions the dry-run lowers for the
+``prefill_32k`` / ``decode_32k`` / ``long_500k`` cells; :class:`ServingEngine`
+is the runnable engine used by the serving example — batched greedy decoding
+with per-request and per-step metrics emitted to the LMS (time-to-first-token,
+decode throughput), so a *serving* job is monitored exactly like a training
+job (paper's "jobs" are agnostic to what runs inside).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import forward, init_cache
+
+
+def make_serve_fns(cfg: ModelConfig, *, pc=None, donate_cache: bool = True):
+    """Returns (prefill_fn, decode_fn), both jit-able.
+
+    prefill(params, tokens, cache, extras) -> (last_logits, cache)
+    decode(params, cache, tokens, pos, extras) -> (logits, cache)
+    """
+
+    def prefill(params, tokens, cache, extras=None):
+        logits, cache, _ = forward(params, cfg, tokens=tokens,
+                                   mode="prefill", cache=cache, pc=pc,
+                                   extras=extras or {})
+        return logits[:, -1], cache
+
+    def decode(params, cache, tokens, pos, extras=None):
+        logits, cache, _ = forward(params, cfg, tokens=tokens, mode="decode",
+                                   cache=cache, pos=pos, pc=pc,
+                                   extras=extras or {})
+        return logits[:, -1], cache
+
+    return prefill, decode
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int = 16
+    submitted_at: float = field(default_factory=time.monotonic)
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    output: list = field(default_factory=list)
+
+
+class ServingEngine:
+    """Static-batch engine: collect up to ``max_batch`` requests, left-pad
+    prompts to a common length, batched prefill, batched greedy decode.
+
+    Padding note: prompts are right-aligned so every row's *last* prompt
+    token lands at position plen-1 (where the first sampled logit is read);
+    the left padding is BOS (token 0) and is attended — the demo-engine
+    simplification vs. per-row attention masks, documented here.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_len: int = 256, usermetric=None, jit: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.um = usermetric
+        self._queue: list = []
+        self._next_rid = 0
+        prefill, decode = make_serve_fns(cfg)
+        self.prefill = jax.jit(prefill) if jit else prefill
+        self.decode = jax.jit(decode, donate_argnums=(1,)) if jit else decode
+
+    # -- request api -----------------------------------------------------------
+
+    def submit(self, prompt_tokens, max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, np.asarray(prompt_tokens,
+                                                   np.int32),
+                                   max_new_tokens))
+        return rid
+
+    def _metric(self, name, value, **tags):
+        if self.um is not None:
+            self.um.metric(name, value, tags=tags or None)
+
+    # -- batch step ---------------------------------------------------------------
+
+    def run_batch(self) -> list:
+        """Serve one batch from the queue; returns finished Requests."""
+        if not self._queue:
+            return []
+        reqs = self._queue[:self.max_batch]
+        self._queue = self._queue[self.max_batch:]
+        b = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(reqs):                 # right-align prompts
+            toks[i, plen - len(r.prompt):] = r.prompt
+
+        t0 = time.monotonic()
+        cache = init_cache(self.cfg, b, self.max_len)
+        last_logits, cache = self.prefill(self.params, jnp.asarray(toks),
+                                          cache)
+        next_tok = jnp.argmax(last_logits, axis=-1)
+        prefill_s = time.monotonic() - t0
+        self._metric("serve_prefill", {"batch": b, "prompt_len": plen,
+                                       "prefill_time_s": prefill_s})
+        now = time.monotonic()
+        tk0 = np.asarray(next_tok)
+        for i, r in enumerate(reqs):
+            r.first_token_at = now
+            r.output.append(int(tk0[i]))
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        pos = plen
+        t_dec = time.monotonic()
+        for step in range(max_new - 1):
+            logits, cache = self.decode(self.params, cache,
+                                        next_tok[:, None],
+                                        jnp.int32(pos))
+            next_tok = jnp.argmax(logits, axis=-1)
+            pos += 1
+            tk = np.asarray(next_tok)
+            for i, r in enumerate(reqs):
+                if len(r.output) < r.max_new_tokens:
+                    r.output.append(int(tk[i]))
+        decode_s = time.monotonic() - t_dec
+        n_tok = sum(len(r.output) for r in reqs)
+        self._metric("serve_decode", {
+            "batch": b, "new_tokens": n_tok,
+            "decode_time_s": decode_s,
+            "tokens_per_s": n_tok / max(decode_s, 1e-9)})
+        done = []
+        now = time.monotonic()
+        for r in reqs:
+            r.finished_at = now
+            self._metric("serve_request", {
+                "ttft_s": r.first_token_at - r.submitted_at,
+                "latency_s": r.finished_at - r.submitted_at,
+                "new_tokens": len(r.output)}, rid=str(r.rid))
+            done.append(r)
+        return done
+
+    def run_until_empty(self) -> list:
+        out = []
+        while self._queue:
+            out.extend(self.run_batch())
+        return out

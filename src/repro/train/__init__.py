@@ -1,0 +1,8 @@
+"""Training substrate: optimizers, gradient compression, steps, loop."""
+
+from repro.train.optim import (adafactor, adamw, clip_by_global_norm,
+                               get_optimizer, global_norm, lr_schedule)
+from repro.train.step import make_train_step
+
+__all__ = ["adafactor", "adamw", "clip_by_global_norm", "get_optimizer",
+           "global_norm", "lr_schedule", "make_train_step"]

@@ -1,0 +1,215 @@
+"""Monitored training loop — where the paper's stack becomes load-bearing.
+
+The loop is a *job* in the LMS sense (DESIGN.md §4):
+
+* job start/end signals bracket the run (router tag store tags every metric);
+* one :class:`HostAgent` per host emits the XLA-derived HPM metrics each
+  step (FLOPs/bytes/collective counters come from the compiled step's cost
+  analysis, set once after compile);
+* ``libusermetric`` carries application-level series (loss, grad norm,
+  tokens/s — the paper's Fig. 3 analogue) and events (checkpoint saved,
+  restart, failure injected);
+* the stream analyzer watches for pathological behaviour (NaN loss, idle,
+  straggler skew) and the loop *reacts*: NaN -> halt + checkpoint skip,
+  straggler finding -> recorded for the elastic-restart decision.
+
+Fault tolerance: auto-resume from the latest checkpoint, atomic keep-k
+saves, deterministic data replay (step-keyed source), optional failure
+injection to exercise the restart path end-to-end.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core import MonitoringStack
+from repro.core.line_protocol import now_ns
+from repro.data import DataLoader, SyntheticTokenSource, make_batch_fn
+from repro.models.transformer import init_model_params, model_specs
+from repro.train.optim import get_optimizer
+from repro.train.step import make_train_step
+
+
+class InjectedFailure(RuntimeError):
+    """Raised by the failure-injection hook (restart-path testing)."""
+
+
+@dataclass
+class TrainResult:
+    steps_run: int
+    final_step: int
+    last_loss: float
+    findings: list
+    resumed_from: Optional[int]
+
+
+def train(model_cfg: ModelConfig, train_cfg: TrainConfig,
+          shape: ShapeConfig, *, stack: Optional[MonitoringStack] = None,
+          hosts: Optional[list] = None, jit: bool = True,
+          pc=None, mesh=None, in_shardings=None,
+          fail_at_step: Optional[int] = None,
+          step_callback: Optional[Callable] = None,
+          user: str = "user", job_id: Optional[str] = None) -> TrainResult:
+    """Run (or resume) a monitored training job on the current devices."""
+    stack = stack or MonitoringStack.inprocess(out_dir="lms_out")
+    hosts = hosts or [f"host{i}" for i in range(jax.process_count())]
+    host = hosts[jax.process_index() % len(hosts)]
+    job_id = job_id or f"{model_cfg.name}-{int(time.time())}"
+
+    # ---- data (deterministic, resumable) ---------------------------------
+    source = SyntheticTokenSource(model_cfg.vocab_size, seed=train_cfg.seed)
+    batch_fn = make_batch_fn(source, model_cfg, shape,
+                             extras_fn=_extras_fn(model_cfg, shape))
+
+    # ---- params / resume ---------------------------------------------------
+    opt = get_optimizer(train_cfg)
+    ckpt = CheckpointManager(train_cfg.ckpt_dir, keep=train_cfg.ckpt_keep) \
+        if train_cfg.ckpt_dir else None
+    resumed_from = None
+    start_step = 0
+    params = init_model_params(model_cfg, seed=train_cfg.seed)
+    opt_state = opt.init(params)
+    if ckpt and ckpt.latest_step() is not None:
+        start_step, trees = ckpt.restore(
+            {"params": params, "opt_state": opt_state})
+        params, opt_state = trees["params"], trees["opt_state"]
+        resumed_from = start_step
+
+    loader = DataLoader(batch_fn, global_batch=shape.global_batch,
+                        start_step=start_step)
+
+    # ---- step fn -------------------------------------------------------------
+    train_step, _ = make_train_step(model_cfg, train_cfg, pc=pc, mesh=mesh)
+    if jit:
+        train_step = jax.jit(train_step, donate_argnums=(0, 1),
+                             in_shardings=in_shardings)
+
+    # ---- LMS wiring -------------------------------------------------------------
+    tokens_per_step = shape.global_batch * shape.seq_len
+    model_flops = 6 * _active_params(model_cfg) * tokens_per_step
+    agent = stack.host_agent(host)
+    um = stack.usermetric(host=host)
+    halted = {"reason": None}
+
+    @stack.on_finding
+    def _react(finding):
+        if finding.rule == "nan_loss":
+            halted["reason"] = "nan_loss"
+        # monitoring is load-bearing: a sustained straggler finding asks the
+        # launcher for an elastic restart without the slow host (checkpoints
+        # are mesh-independent, so the restarted job reshapes freely)
+        if finding.rule == "step_time_straggler" and \
+                getattr(train_cfg, "halt_on_straggler", False):
+            halted["reason"] = f"straggler:{finding.host}"
+
+    last_loss = float("nan")
+    steps_run = 0
+    step = start_step
+    try:
+        with stack.job(job_id, user=user, hosts=hosts,
+                       tags={"arch": model_cfg.name, "shape": shape.name}):
+            um.event("run_state", f"starting {model_cfg.name} at step "
+                     f"{start_step}")
+            compiled_consts_set = False
+            while step < train_cfg.total_steps:
+                step_idx, np_batch = next(loader)
+                data_wait = loader.wait_time_s
+                batch = {k: jax.numpy.asarray(v) for k, v in
+                         np_batch.items()}
+                if jit and not compiled_consts_set:
+                    # one-time (pre-execution, params still alive despite
+                    # donation): compiled-artifact HPM constants -> agent
+                    try:
+                        ca = train_step.lower(
+                            params, opt_state, batch, step_idx
+                        ).compile().cost_analysis()
+                    except Exception:
+                        ca = {}
+                    agent.set_step_constants(
+                        hlo_flops=float(ca.get("flops", 0.0)),
+                        hlo_bytes=float(ca.get("bytes accessed", 0.0)),
+                        collective_bytes=0.0,
+                        model_flops=model_flops,
+                        tokens_per_step=tokens_per_step)
+                    compiled_consts_set = True
+
+                t0 = time.monotonic()
+                params, opt_state, metrics = train_step(
+                    params, opt_state, batch, step_idx)
+                loss = float(metrics["loss"])
+                step_time = time.monotonic() - t0
+
+                # LMS per-step emission
+                if train_cfg.monitor and \
+                        step_idx % train_cfg.monitor_interval == 0:
+                    agent.collect_step(step=step_idx, step_time_s=step_time,
+                                       extra_events={"data_wait_s":
+                                                     data_wait})
+                    um.metric("train",
+                              {"loss": loss,
+                               "grad_norm": float(metrics["grad_norm"]),
+                               "lr": float(metrics["lr"])})
+                if math.isnan(loss):
+                    um.event("run_state", f"NaN loss at step {step_idx}")
+                    halted["reason"] = "nan_loss"
+
+                last_loss = loss
+                steps_run += 1
+                step = step_idx + 1
+
+                if step_callback:
+                    step_callback(step, metrics)
+                if ckpt and step % train_cfg.ckpt_interval == 0 and \
+                        not math.isnan(loss):
+                    ckpt.save(step, {"params": params,
+                                     "opt_state": opt_state},
+                              {"arch": model_cfg.name, "step": step})
+                    um.event("run_state", f"checkpoint at {step}")
+                if fail_at_step is not None and step >= fail_at_step:
+                    um.event("run_state", f"injected failure at {step}")
+                    raise InjectedFailure(f"injected at step {step}")
+                if halted["reason"]:
+                    um.event("run_state", f"halt: {halted['reason']}")
+                    break
+            um.event("run_state", "finished")
+    finally:
+        um.flush()
+        loader.close()
+        if ckpt:
+            ckpt.wait()
+
+    return TrainResult(steps_run, step, last_loss, stack.findings(),
+                       resumed_from)
+
+
+def _active_params(cfg: ModelConfig) -> int:
+    try:
+        return cfg.active_param_count()
+    except Exception:
+        return cfg.param_count()
+
+
+def _extras_fn(cfg: ModelConfig, shape: ShapeConfig):
+    if cfg.family == "vlm":
+        def fn(step, rows):
+            p = min(cfg.vlm_num_patches, max(shape.seq_len - 2, 1))
+            return {
+                "patches": np.zeros((rows, p, cfg.d_model), np.float32),
+                "mrope_pos": np.broadcast_to(
+                    np.arange(shape.seq_len, dtype=np.int32)[None, :, None],
+                    (rows, shape.seq_len, 3)).copy()}
+        return fn
+    if cfg.family == "encdec":
+        def fn(step, rows):
+            return {"src_frames": np.zeros(
+                (rows, cfg.encdec_source_len, cfg.d_model), np.float32)}
+        return fn
+    return None

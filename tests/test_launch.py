@@ -1,0 +1,91 @@
+"""Launcher path: bundles lower+compile on a 1x1 mesh (smoke configs), the
+dry-run artifact schema, and the mesh/config helpers."""
+
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, ShapeConfig, TrainConfig, get_config
+from repro.launch.mesh import make_mesh_for
+from repro.launch.steps import (build_bundle, build_decode_bundle,
+                                build_prefill_bundle, build_train_bundle,
+                                input_specs, lower_bundle)
+
+TINY = ShapeConfig("tiny", seq_len=32, global_batch=2, kind="train")
+TINY_PREFILL = ShapeConfig("tinyp", seq_len=32, global_batch=2,
+                           kind="prefill")
+TINY_DECODE = ShapeConfig("tinyd", seq_len=32, global_batch=2, kind="decode")
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "mixtral-8x7b",
+                                  "rwkv6-1.6b", "zamba2-7b",
+                                  "deepseek-v2-236b",
+                                  "seamless-m4t-large-v2", "qwen2-vl-7b"])
+def test_bundles_lower_and_compile(arch, mesh1):
+    """Every bundle kind lowers AND compiles for a reduced config."""
+    cfg = get_config(arch, smoke=True)
+    for shape in (TINY, TINY_PREFILL, TINY_DECODE):
+        bundle = build_bundle(cfg, shape, mesh1,
+                              train_cfg=TrainConfig(num_microbatches=2))
+        compiled = lower_bundle(bundle, mesh1).compile()
+        assert compiled.cost_analysis().get("flops", 0) > 0
+        mem = compiled.memory_analysis()
+        assert mem.temp_size_in_bytes >= 0
+
+
+def test_input_specs_cover_modalities():
+    cfg = get_config("qwen2-vl-7b")
+    sp = input_specs(cfg, SHAPES["prefill_32k"])
+    assert {"tokens", "patches", "mrope_pos"} <= set(sp)
+    sp = input_specs(cfg, SHAPES["decode_32k"])
+    assert "patches" not in sp and "mrope_pos" in sp
+    cfg = get_config("seamless-m4t-large-v2")
+    sp = input_specs(cfg, SHAPES["train_4k"])
+    assert "src_frames" in sp
+    assert sp["tokens"].shape == (256, 4096)
+
+
+def test_make_mesh_for_elastic():
+    m = make_mesh_for(1)
+    assert m.devices.size == 1
+    assert m.axis_names == ("data", "model")
+
+
+def test_dryrun_artifacts_schema():
+    """If the dry-run matrix has been generated, validate every record."""
+    paths = glob.glob("results/dryrun/*/*.json")
+    if not paths:
+        pytest.skip("dry-run artifacts not generated")
+    meshes = set()
+    ok = skipped = 0
+    for p in paths:
+        r = json.load(open(p))
+        meshes.add(r["mesh"])
+        assert r["status"] in ("ok", "skipped"), (p, r.get("error"))
+        if r["status"] == "skipped":
+            skipped += 1
+            assert "reason" in r
+            continue
+        ok += 1
+        roof = r["roofline"]
+        for k in ("compute_s", "memory_s", "collective_s", "dominant",
+                  "model_flops", "hlo_flops", "useful_flop_ratio",
+                  "classification"):
+            assert k in roof, (p, k)
+        assert roof["dominant"] in ("compute", "memory", "collective")
+        assert roof["classification"]["pattern"]
+        assert r["hlo_analysis"]["global"]["flops"] > 0
+        assert r["memory_per_device"]["temp_bytes"] >= 0
+    # full matrix = 2 meshes x (33 ok + 7 skipped)
+    if len(paths) == 80:
+        assert meshes == {"pod16x16", "pod2x16x16"}
+        assert ok == 66 and skipped == 14

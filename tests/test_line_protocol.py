@@ -1,0 +1,117 @@
+"""Line-protocol round-trip: unit + hypothesis property tests."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.line_protocol import (LineProtocolError, Point, decode_batch,
+                                      decode_line, encode_batch,
+                                      encode_point)
+
+# -- unit ------------------------------------------------------------------
+
+
+def test_basic_roundtrip():
+    p = Point("cpu", {"hostname": "h0", "core": "3"},
+              {"load": 0.5, "count": 7, "ok": True, "note": "hi"}, 1234)
+    q = decode_line(encode_point(p))
+    assert q.measurement == "cpu"
+    assert q.tags == p.tags
+    assert q.fields == p.fields
+    assert q.timestamp == 1234
+
+
+def test_escaping():
+    p = Point("my measure,ment", {"k ey": "v=al,ue"},
+              {"str": 'quote " and \\ backslash', "f": 1.0}, 1)
+    q = decode_line(encode_point(p))
+    assert q.measurement == p.measurement
+    assert q.tags == p.tags
+    assert q.fields == p.fields
+
+
+def test_batch():
+    pts = [Point("m", {"hostname": f"h{i}"}, {"v": float(i)}, i)
+           for i in range(5)]
+    out = decode_batch(encode_batch(pts))
+    assert [p.fields["v"] for p in out] == [0.0, 1.0, 2.0, 3.0, 4.0]
+
+
+def test_no_timestamp():
+    q = decode_line('m,hostname=h v=1.5')
+    assert q.timestamp is None
+    assert q.fields == {"v": 1.5}
+
+
+def test_int_vs_float():
+    q = decode_line('m f=3i,g=3.0,b=t')
+    assert q.fields["f"] == 3 and isinstance(q.fields["f"], int)
+    assert q.fields["g"] == 3.0 and isinstance(q.fields["g"], float)
+    assert q.fields["b"] is True
+
+
+def test_nan_inf_extension():
+    p = Point("m", {}, {"a": float("nan"), "b": float("inf")})
+    q = decode_line(encode_point(p))
+    assert math.isnan(q.fields["a"])
+    assert q.fields["b"] == float("inf")
+
+
+@pytest.mark.parametrize("bad", ["", "m", "m, v=", "m v=notanumber",
+                                 'm s="unterminated'])
+def test_rejects_malformed(bad):
+    with pytest.raises((LineProtocolError, ValueError)):
+        decode_line(bad)
+
+
+# -- property --------------------------------------------------------------
+
+# the line protocol is newline-framed: bare CR/LF cannot appear in names
+# (InfluxDB has the same restriction)
+_name = st.text(
+    st.characters(codec="ascii", exclude_characters='\n\r\\"'),
+    min_size=1, max_size=20).filter(lambda s: s.strip() == s and s and
+                                    not s.startswith("#"))
+_tagval = st.text(
+    st.characters(codec="ascii", exclude_characters="\n\r\\\""),
+    min_size=1, max_size=20).filter(lambda s: s == s.strip() and s)
+_fieldval = st.one_of(
+    st.integers(min_value=-2**53, max_value=2**53),
+    st.floats(allow_nan=False, allow_infinity=False, width=32),
+    st.booleans(),
+    st.text(st.characters(codec="ascii", exclude_characters="\n"),
+            max_size=30),
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(measurement=_name,
+       tags=st.dictionaries(_name.filter(lambda s: s == s.strip()), _tagval,
+                            max_size=4),
+       fields=st.dictionaries(_name.filter(lambda s: s == s.strip()),
+                              _fieldval, min_size=1, max_size=5),
+       ts=st.one_of(st.none(), st.integers(min_value=0, max_value=2**62)))
+def test_roundtrip_property(measurement, tags, fields, ts):
+    p = Point(measurement, tags, fields, ts)
+    q = decode_line(encode_point(p))
+    assert q.measurement == p.measurement
+    assert q.tags == {str(k): str(v) for k, v in p.tags.items()}
+    assert q.timestamp == p.timestamp
+    assert set(q.fields) == set(p.fields)
+    for k, v in p.fields.items():
+        got = q.fields[k]
+        if isinstance(v, float):
+            assert got == pytest.approx(v, rel=1e-6)
+        else:
+            assert got == v and type(got) is type(v)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(_name, _fieldval), min_size=1, max_size=10))
+def test_batch_property(items):
+    pts = [Point(m, {"hostname": "h"}, {"v": v}, i)
+           for i, (m, v) in enumerate(items)]
+    out = decode_batch(encode_batch(pts))
+    assert len(out) == len(pts)
+    assert [p.timestamp for p in out] == list(range(len(pts)))

@@ -1,0 +1,139 @@
+"""MonitoringStack integration + dashboard agent + usermetric + perf groups."""
+
+import json
+import os
+
+import pytest
+
+from repro.core import (GROUPS, MonitoringStack, PerfGroup, Point, UserMetric,
+                        now_ns, parse_group)
+from repro.core.perf_groups import eval_formula
+
+
+def _run_job(stack, *, idle_host=None, steps=40):
+    hosts = [f"h{i}" for i in range(4)]
+    with stack.job("j1", user="alice", hosts=hosts,
+                   tags={"arch": "demo"}) as job:
+        agents = [stack.host_agent(h, hlo_flops=5e14, model_flops=4e14,
+                                   hlo_bytes=2e11, collective_bytes=1e10,
+                                   tokens_per_step=1024) for h in hosts]
+        um = stack.usermetric(host=hosts[0])
+        um.event("run_state", "starting")
+        t0 = now_ns()
+        for step in range(steps):
+            ts = t0 + step * 5 * 10**9
+            for i, a in enumerate(agents):
+                stt = 500.0 if (agents[i].hostname == idle_host
+                                and step > 10) else 5.0
+                a.collect_step(step=step, step_time_s=stt,
+                               extra_events={"data_wait_s": 0.1}, ts=ts)
+            um.metric("pressure", 42.0 + step, ts=ts)
+        um.event("run_state", "finished")
+        um.flush()
+    return job
+
+
+def test_healthy_job_no_findings(tmp_path):
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path))
+    _run_job(stack)
+    assert stack.findings() == []
+
+
+def test_pathological_job_detected_live(tmp_path):
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path))
+    seen = []
+    stack.on_finding(seen.append)
+    _run_job(stack, idle_host="h3")
+    assert any(f.rule == "compute_break" and f.host == "h3"
+               for f in stack.findings())
+    assert seen, "on_finding callback must fire for instant feedback"
+
+
+def test_dashboard_generation(tmp_path):
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path))
+    job = _run_job(stack, idle_host="h3")
+    path = stack.dashboards.write_dashboard(job)
+    dash = json.load(open(path))["dashboard"]
+    assert dash["header"]["status"] == "unhealthy"
+    assert any(a["rule"] == "compute_break" for a in dash["header"]["analysis"])
+    rows = {r["title"] for r in dash["rows"]}
+    assert "HPM" in rows and "Analysis" in rows
+    # app-level measurement got its own auto-generated row (paper §IV)
+    assert any(r.startswith("app:pressure") for r in rows)
+    html = open(os.path.join(str(tmp_path), "job_j1.html")).read()
+    assert "polyline" in html and "unhealthy" in html
+
+
+def test_admin_view(tmp_path):
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path))
+    _run_job(stack, idle_host="h3")
+    path = stack.dashboards.write_admin_view(stack.router.jobs.all_jobs())
+    view = json.load(open(path))
+    assert len(view["jobs"]) == 1
+    assert view["jobs"][0]["status"] == "unhealthy"
+    assert view["jobs"][0]["alerts"] >= 1
+
+
+def test_per_job_database_duplication(tmp_path):
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path))
+    _run_job(stack)
+    assert "job_j1" in stack.backend.databases()
+    assert stack.backend.db("job_j1").point_count() > 0
+
+
+def test_usermetric_batching():
+    batches = []
+    um = UserMetric(lambda pts: batches.append(list(pts)), batch_size=10,
+                    flush_interval_s=9999, hostname="h")
+    for i in range(25):
+        um.metric("m", float(i))
+    um.flush()
+    assert [len(b) for b in batches] == [10, 10, 5]
+    assert um.stats["sent_points"] == 25
+    # default + per-call tags
+    um2_pts = []
+    um2 = UserMetric(um2_pts.extend, default_tags={"jobid": "x"},
+                     hostname="h9")
+    um2.metric("m", 1.0, tags={"thread": "7"})
+    um2.flush()
+    assert um2_pts[0].tags == {"hostname": "h9", "jobid": "x", "thread": "7"}
+
+
+def test_usermetric_region_timing():
+    pts = []
+    um = UserMetric(pts.extend, hostname="h")
+    with um.region("phase1"):
+        pass
+    um.flush()
+    assert pts[0].measurement == "phase1_time_s"
+    assert pts[0].fields["value"] >= 0
+
+
+def test_parse_custom_group():
+    g = parse_group("""
+    GROUP CUSTOM
+    DESC my metrics
+    EVENTSET
+      ev_a
+      ev_b
+    METRICS
+      ratio   ev_a / ev_b
+      scaled  ev_a * 2.0 + min(ev_b, 10)
+    """)
+    assert isinstance(g, PerfGroup)
+    out = g.derive({"ev_a": 6.0, "ev_b": 3.0})
+    assert out == {"ratio": 2.0, "scaled": 15.0}
+    # missing events skip metrics (non-strict)
+    assert g.derive({"ev_a": 6.0}) == {}
+
+
+def test_formula_eval_safety():
+    with pytest.raises(Exception):
+        eval_formula("__import__('os').system('true')", {})
+    with pytest.raises(Exception):
+        eval_formula("a.b", {"a": 1})
+    assert eval_formula("PEAK_FLOPS / PEAK_FLOPS", {}) == 1.0
+
+
+def test_builtin_groups_exist():
+    assert {"FLOPS", "MEM", "ICI", "GOODPUT"} <= set(GROUPS)

@@ -1,0 +1,149 @@
+"""Per-arch smoke tests (assignment requirement): every assigned
+architecture instantiates a REDUCED config of the same family and runs one
+forward/train step on CPU, asserting output shapes and no NaNs; plus
+prefill->decode continuity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, SMOKE_SHAPE, get_config
+from repro.models.transformer import (forward, init_cache, init_model_params,
+                                      loss_fn, model_specs)
+from repro.models.params import param_count
+
+B, S = SMOKE_SHAPE.global_batch, SMOKE_SHAPE.seq_len
+
+
+def smoke_batch(cfg, b=B, s=S, seed=0):
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    batch = {"tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab_size),
+             "labels": jax.random.randint(k2, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        p = cfg.vlm_num_patches
+        batch["patches"] = 0.01 * jax.random.normal(
+            k1, (b, p, cfg.d_model), jnp.float32)
+        batch["mrope_pos"] = jnp.broadcast_to(
+            jnp.arange(s)[None, :, None], (b, s, 3)).astype(jnp.int32)
+    if cfg.family == "encdec":
+        batch["src_frames"] = 0.01 * jax.random.normal(
+            k1, (b, cfg.encdec_source_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+def _extras(batch):
+    return {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_config(name, smoke=True)
+            cache[name] = (cfg, init_model_params(cfg, seed=0))
+        return cache[name]
+    return get
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS + ["lms-demo"])
+def test_forward_shapes_no_nans(arch, arch_state):
+    cfg, params = arch_state(arch)
+    batch = smoke_batch(cfg)
+    logits, _, aux = forward(params, cfg, tokens=batch["tokens"],
+                             mode="train", extras=_extras(batch))
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    if cfg.moe is not None:
+        assert float(aux["moe_aux_loss"]) > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_decreases_loss(arch, arch_state):
+    """One SGD step on a repeated batch must reduce the loss."""
+    cfg, params = arch_state(arch)
+    batch = smoke_batch(cfg)
+
+    def loss_of(p):
+        return loss_fn(p, cfg, batch)[0]
+
+    l0, grads = jax.value_and_grad(loss_of)(params)
+    assert np.isfinite(float(l0))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert float(gnorm) > 0, "gradients must flow"
+    lr = 0.5 / max(float(gnorm), 1.0)
+    p1 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+    l1 = loss_of(p1)
+    assert float(l1) < float(l0), (arch, float(l0), float(l1))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_decode_continuity(arch, arch_state):
+    """Greedy logits from decode(t) after prefill(0..t-1) must match the
+    teacher-forced forward at position t (same-cache consistency)."""
+    cfg, params = arch_state(arch)
+    batch = smoke_batch(cfg)
+    toks = batch["tokens"]
+    extras = _extras(batch)
+
+    # full teacher-forced forward (train mode = no cache)
+    full_logits, _, _ = forward(params, cfg, tokens=toks, mode="train",
+                                extras=extras)
+
+    # prefill on the first S-1 tokens, then decode token S-1
+    cache = init_cache(cfg, B, S + 4)
+    pre_extras = dict(extras)
+    if "mrope_pos" in pre_extras:
+        pre_extras["mrope_pos"] = pre_extras["mrope_pos"][:, :S - 1]
+    if cfg.family == "vlm":
+        # patches must fit in the shortened prefix
+        pre_extras["patches"] = pre_extras["patches"][:, :S - 8]
+    _, cache, _ = forward(params, cfg, tokens=toks[:, :S - 1],
+                          mode="prefill", cache=cache, extras=pre_extras)
+    dec_extras = {}
+    if "mrope_pos" in extras:
+        dec_extras["mrope_pos"] = jnp.full((B, 1, 3), S - 1, jnp.int32)
+    dec_logits, _, _ = forward(params, cfg, tokens=toks[:, S - 1:S],
+                               mode="decode", cache=cache,
+                               pos=jnp.int32(S - 1), extras=dec_extras)
+
+    if cfg.family == "vlm":
+        return  # patch prefix differs between the two paths; shapes-only
+    got = dec_logits[:, 0].astype(jnp.float32)
+    want = full_logits[:, S - 1].astype(jnp.float32)
+    # tolerance: caches are bf16 (the production layout), so the decode path
+    # rounds K/V/state through bf16 while teacher-forcing does not; exact
+    # fp32 path equivalence is covered in test_attention / test_ssm
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.08, atol=0.25)
+
+
+def test_param_counts_roughly_match_published():
+    """Full configs should land near the published parameter counts."""
+    approx = {
+        "granite-3-8b": 8.2e9,
+        "yi-34b": 34.4e9,
+        "phi3-medium-14b": 14e9,
+        "mixtral-8x7b": 46.7e9,
+        "nemotron-4-340b": 340e9,
+        "deepseek-v2-236b": 236e9,
+        "rwkv6-1.6b": 1.6e9,
+        "qwen2-vl-7b": 7.6e9,
+        "zamba2-7b": 7.3e9,
+    }
+    for arch, want in approx.items():
+        cfg = get_config(arch)
+        n = cfg.param_count()
+        assert 0.75 * want < n < 1.35 * want, (arch, n, want)
+
+
+def test_moe_active_params():
+    cfg = get_config("mixtral-8x7b")
+    active = cfg.active_param_count()
+    total = cfg.param_count()
+    assert active < 0.4 * total            # 2-of-8 experts + shared
+    assert 10e9 < active < 16e9            # ~12.9B published

@@ -1,0 +1,112 @@
+"""Metrics router: tag store, job signals, duplication, pub-sub, HTTP."""
+
+import json
+import urllib.request
+
+import pytest
+
+from repro.core.httpd import HttpSink, LMSHttpServer
+from repro.core.line_protocol import Point, encode_batch
+from repro.core.router import MetricsRouter
+from repro.core.tsdb import TSDBServer
+from repro.core.usermetric_cli import main as cli_main
+
+
+@pytest.fixture
+def router():
+    return MetricsRouter(TSDBServer(), per_job_db=True, per_user_db=True)
+
+
+def test_job_tagging(router):
+    router.job_start("j1", "alice", ["h0", "h1"], {"arch": "demo"})
+    router.write(Point("m", {"hostname": "h0"}, {"v": 1.0}, 1))
+    router.write(Point("m", {"hostname": "h2"}, {"v": 2.0}, 2))  # not in job
+    series = router.backend.db("global").select("m", ["v"],
+                                                 {"jobid": "j1"})
+    assert len(series) == 1
+    assert series[0].tags["username"] == "alice"
+    assert series[0].tags["arch"] == "demo"
+    # untagged host still stored, without job tags
+    other = router.backend.db("global").select("m", ["v"],
+                                               {"hostname": "h2"})
+    assert "jobid" not in other[0].tags
+
+
+def test_job_end_stops_tagging(router):
+    router.job_start("j1", "alice", ["h0"])
+    router.job_end("j1")
+    router.write(Point("m", {"hostname": "h0"}, {"v": 1.0}, 1))
+    s = router.backend.db("global").select("m", ["v"])[0]
+    assert "jobid" not in s.tags
+
+
+def test_signals_stored_as_events(router):
+    router.job_start("j1", "alice", ["h0"])
+    router.job_end("j1")
+    ev = router.backend.db("global").select("job_event")
+    vals = sorted(v for s in ev for v in s.values["event"])
+    assert vals == ["end", "start"]
+
+
+def test_per_user_and_per_job_duplication(router):
+    router.job_start("j1", "alice", ["h0"])
+    router.write(Point("m", {"hostname": "h0"}, {"v": 1.0}, 1))
+    assert router.backend.db("user_alice").point_count() == 1
+    assert router.backend.db("job_j1").point_count() == 1
+
+
+def test_pubsub_and_broken_subscriber(router):
+    got = []
+    router.subscribe(lambda kind, payload: got.append((kind, payload)))
+    router.subscribe(lambda *a: 1 / 0)          # must not break ingest
+    router.job_start("j1", "alice", ["h0"])
+    router.write(Point("m", {"hostname": "h0"}, {"v": 1.0}, 1))
+    kinds = [k for k, _ in got]
+    assert kinds == ["job_start", "points"]
+    assert got[1][1][0].tags["jobid"] == "j1"
+
+
+def test_requires_host_tag(router):
+    router.write(Point("m", {}, {"v": 1.0}, 1))
+    assert router.stats.dropped_no_host == 1
+    assert router.backend.db("global").point_count() == 0
+
+
+def test_write_lines(router):
+    n = router.write_lines("m,hostname=h0 v=1.0 1\nm,hostname=h0 v=2.0 2")
+    assert n == 2
+    assert router.backend.db("global").point_count() == 2
+
+
+def test_http_end_to_end(router):
+    with LMSHttpServer(router) as srv:
+        sink = HttpSink(srv.url)
+        sink.job_start("j9", "bob", ["hx"])
+        sink.write([Point("appm", {"hostname": "hx"}, {"v": 3.5}, 7)])
+        # query back over HTTP
+        with urllib.request.urlopen(
+                srv.url + "/query?m=appm&field=v&agg=last") as r:
+            out = json.loads(r.read())
+        assert out["result"][""] == 3.5
+        with urllib.request.urlopen(srv.url + "/ping") as r:
+            assert r.status == 204
+        sink.job_end("j9")
+    s = router.backend.db("global").select("appm")[0]
+    assert s.tags["jobid"] == "j9" and s.tags["username"] == "bob"
+
+
+def test_usermetric_cli(router):
+    with LMSHttpServer(router) as srv:
+        assert cli_main(["--url", srv.url, "--hostname", "hc",
+                         "job-start", "--jobid", "c1", "--user", "carol",
+                         "--hosts", "hc"]) == 0
+        assert cli_main(["--url", srv.url, "--hostname", "hc",
+                         "metric", "pressure", "42.5",
+                         "--tag", "phase=warmup"]) == 0
+        assert cli_main(["--url", srv.url, "--hostname", "hc",
+                         "event", "run_state", "starting miniMD"]) == 0
+    s = router.backend.db("global").select("pressure")[0]
+    assert s.values["value"] == [42.5]
+    assert s.tags["phase"] == "warmup" and s.tags["jobid"] == "c1"
+    ev = router.backend.db("global").select("run_state")[0]
+    assert ev.values["event"] == ["starting miniMD"]

@@ -1,0 +1,173 @@
+"""SSM numerics: chunked Mamba2/RWKV6 vs sequential oracles + invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.kernels.ref import ssd_ref, wkv6_ref
+from repro.models import ssm as ssm_mod
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# -- Mamba2 SSD ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_ssd_chunked_matches_sequential(rng, chunk):
+    b, l, h, p, n = 2, 64, 3, 8, 4
+    x = _rand(rng, b, l, h, p)
+    a = -jnp.abs(_rand(rng, b, l, h)) * 0.2
+    bm = _rand(rng, b, l, h, n)
+    cm = _rand(rng, b, l, h, n)
+    y, state = ssm_mod.ssd_chunked(x, a, bm, cm, chunk=chunk)
+    want = ssd_ref(x.transpose(0, 2, 1, 3), a.transpose(0, 2, 1),
+                   bm.transpose(0, 2, 1, 3), cm.transpose(0, 2, 1, 3)
+                   ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_chunk_size_invariance(rng):
+    """The chunk size is a tiling choice — results must not depend on it."""
+    b, l, h, p, n = 1, 96, 2, 8, 4
+    x = _rand(rng, b, l, h, p)
+    a = -jnp.abs(_rand(rng, b, l, h)) * 0.3
+    bm = _rand(rng, b, l, h, n)
+    cm = _rand(rng, b, l, h, n)
+    y1, s1 = ssm_mod.ssd_chunked(x, a, bm, cm, chunk=8)
+    y2, s2 = ssm_mod.ssd_chunked(x, a, bm, cm, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ssd_state_carry_prefill_decode(rng):
+    """prefill(0..L) state == prefill(0..L/2) -> chunked continue."""
+    b, l, h, p, n = 1, 32, 2, 4, 4
+    x = _rand(rng, b, l, h, p)
+    a = -jnp.abs(_rand(rng, b, l, h)) * 0.2
+    bm = _rand(rng, b, l, h, n)
+    cm = _rand(rng, b, l, h, n)
+    y_full, s_full = ssm_mod.ssd_chunked(x, a, bm, cm, chunk=8)
+    half = l // 2
+    y1, s1 = ssm_mod.ssd_chunked(x[:, :half], a[:, :half], bm[:, :half],
+                                 cm[:, :half], chunk=8)
+    y2, s2 = ssm_mod.ssd_chunked(x[:, half:], a[:, half:], bm[:, half:],
+                                 cm[:, half:], chunk=8, init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(decay=st.floats(min_value=0.01, max_value=30.0),
+       seed=st.integers(0, 100))
+def test_ssd_no_overflow_property(decay, seed):
+    """No decay magnitude may produce NaN/Inf (the <=0-exponent invariant)."""
+    rng = np.random.default_rng(seed)
+    b, l, h, p, n = 1, 32, 1, 4, 4
+    x = _rand(rng, b, l, h, p)
+    a = -jnp.abs(_rand(rng, b, l, h)) * decay
+    bm = _rand(rng, b, l, h, n)
+    cm = _rand(rng, b, l, h, n)
+    y, s = ssm_mod.ssd_chunked(x, a, bm, cm, chunk=8)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert bool(jnp.all(jnp.isfinite(s)))
+
+
+# -- RWKV6 WKV ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_wkv6_chunked_matches_sequential(rng, chunk):
+    b, l, h, d = 2, 64, 2, 8
+    r = _rand(rng, b, l, h, d)
+    k = _rand(rng, b, l, h, d)
+    v = _rand(rng, b, l, h, d)
+    logw = -jnp.abs(_rand(rng, b, l, h, d)) * 0.5
+    u = _rand(rng, h, d) * 0.5
+    y, _ = ssm_mod.wkv6_chunked(r, k, v, logw, u, chunk=chunk)
+    want, _ = wkv6_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_wkv6_state_carry(rng):
+    b, l, h, d = 1, 32, 2, 8
+    r, k, v = (_rand(rng, b, l, h, d) for _ in range(3))
+    logw = -jnp.abs(_rand(rng, b, l, h, d)) * 0.3
+    u = _rand(rng, h, d)
+    y_full, s_full = ssm_mod.wkv6_chunked(r, k, v, logw, u, chunk=8)
+    half = l // 2
+    y1, s1 = ssm_mod.wkv6_chunked(r[:, :half], k[:, :half], v[:, :half],
+                                  logw[:, :half], u, chunk=8)
+    y2, s2 = ssm_mod.wkv6_chunked(r[:, half:], k[:, half:], v[:, half:],
+                                  logw[:, half:], u, chunk=8, init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(decay=st.floats(min_value=0.01, max_value=50.0),
+       seed=st.integers(0, 100))
+def test_wkv6_no_overflow_property(decay, seed):
+    rng = np.random.default_rng(seed)
+    b, l, h, d = 1, 16, 1, 4
+    r, k, v = (_rand(rng, b, l, h, d) for _ in range(3))
+    logw = -jnp.abs(_rand(rng, b, l, h, d)) * decay
+    u = _rand(rng, h, d)
+    y, s = ssm_mod.wkv6_chunked(r, k, v, logw, u, chunk=8)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert bool(jnp.all(jnp.isfinite(s)))
+
+
+def test_rwkv_decode_matches_chunked(rng):
+    """Recurrent decode path == chunked path, token by token."""
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    from repro.models.params import init_params
+    params = init_params(ssm_mod.rwkv6_specs(cfg), seed=1)
+    b, l = 2, 12
+    x = 0.1 * _rand(np.random.default_rng(0), b, l, cfg.d_model)
+
+    y_chunk, _ = ssm_mod.rwkv6_time_mix(params, x, cfg, mode="train")
+
+    cache = ssm_mod.rwkv6_init_cache(cfg, b)
+    outs = []
+    for t in range(l):
+        y_t, partial = ssm_mod.rwkv6_time_mix(params, x[:, t:t + 1], cfg,
+                                              mode="decode", cache=cache)
+        cache = {**cache, **partial}
+        outs.append(y_t)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_chunk),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_mamba2_decode_matches_chunked(rng):
+    cfg = get_config("zamba2-7b", smoke=True)
+    from repro.models.params import init_params
+    params = init_params(ssm_mod.mamba2_specs(cfg), seed=1)
+    b, l = 2, 12
+    x = 0.1 * _rand(np.random.default_rng(0), b, l, cfg.d_model)
+
+    y_chunk, _ = ssm_mod.mamba2_block(params, x, cfg, mode="train")
+
+    cache = ssm_mod.mamba2_init_cache(cfg, b)
+    outs = []
+    for t in range(l):
+        y_t, cache = ssm_mod.mamba2_block(params, x[:, t:t + 1], cfg,
+                                          mode="decode", cache=cache)
+        outs.append(y_t)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_chunk),
+                               rtol=5e-3, atol=5e-3)

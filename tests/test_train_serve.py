@@ -1,0 +1,140 @@
+"""End-to-end: monitored training loop (+failure/restart) and serving."""
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeConfig, TrainConfig, get_config
+from repro.core import MonitoringStack
+from repro.models.transformer import init_model_params
+from repro.serve.engine import ServingEngine
+from repro.train.loop import InjectedFailure, TrainResult, train
+
+TINY = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+
+
+def test_train_loss_decreases(tmp_path):
+    cfg = get_config("lms-demo", smoke=True)
+    tcfg = TrainConfig(total_steps=8, warmup_steps=1, learning_rate=5e-3)
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path))
+    losses = []
+    r = train(cfg, tcfg, TINY, stack=stack,
+              step_callback=lambda s, m: losses.append(float(m["loss"])))
+    assert r.steps_run == 8
+    assert losses[-1] < losses[0]
+    db = stack.backend.db("global")
+    assert "hpm" in db.measurements() and "train" in db.measurements()
+    # HPM points carry derived perf-group metrics with job tags
+    s = db.select("hpm", ["mfu"])[0]
+    assert "jobid" in s.tags
+
+
+def test_failure_injection_and_resume(tmp_path):
+    cfg = get_config("lms-demo", smoke=True)
+    ck = str(tmp_path / "ck")
+    tcfg = TrainConfig(total_steps=6, warmup_steps=1, ckpt_dir=ck,
+                       ckpt_interval=2)
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path / "l1"))
+    with pytest.raises(InjectedFailure):
+        train(cfg, tcfg, TINY, stack=stack, fail_at_step=4, job_id="j")
+    # restart resumes from the last atomic checkpoint and finishes
+    stack2 = MonitoringStack.inprocess(out_dir=str(tmp_path / "l2"))
+    r = train(cfg, tcfg, TINY, stack=stack2, job_id="j2")
+    assert r.resumed_from == 4
+    assert r.final_step == 6
+    assert not math.isnan(r.last_loss)
+    # restart event recorded for the dashboards
+    ev = stack2.backend.db("global").select("run_state")
+    texts = [v for s in ev for v in s.values["event"]]
+    assert any("starting" in t and "step 4" in t for t in texts)
+
+
+def test_deterministic_replay_after_resume(tmp_path):
+    """Data source is step-keyed: a resumed run sees the same batches."""
+    from repro.data import SyntheticTokenSource
+    src = SyntheticTokenSource(100, seed=0)
+    a = src.batch(5, 4, 8)
+    b = src.batch(5, 4, 8)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_serving_engine(tmp_path):
+    cfg = get_config("lms-demo", smoke=True)
+    params = init_model_params(cfg, seed=0)
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path))
+    with stack.job("serve1", user="u", hosts=["h0"]):
+        um = stack.usermetric(host="h0")
+        eng = ServingEngine(cfg, params, max_batch=4, max_len=64,
+                            usermetric=um, jit=False)
+        rids = [eng.submit(np.arange(1, 5 + i), max_new_tokens=6)
+                for i in range(5)]
+        done = eng.run_until_empty()
+        um.flush()
+    assert len(done) == 5
+    assert all(len(r.output) == 6 for r in done)
+    assert all(r.first_token_at is not None for r in done)
+    db = stack.backend.db("global")
+    assert "serve_request" in db.measurements()
+    assert "serve_decode" in db.measurements()
+    # per-request latency metrics tagged with the job
+    s = db.select("serve_request")[0]
+    assert s.tags["jobid"] == "serve1"
+
+
+def test_serving_greedy_consistency():
+    """Engine output == manual prefill+argmax loop (same params)."""
+    cfg = get_config("lms-demo", smoke=True)
+    params = init_model_params(cfg, seed=0)
+    from repro.models.transformer import forward, init_cache
+    prompt = np.arange(1, 9, dtype=np.int32)
+
+    eng = ServingEngine(cfg, params, max_batch=1, max_len=32, jit=False)
+    eng.submit(prompt, max_new_tokens=4)
+    out = eng.run_until_empty()[0].output
+
+    cache = init_cache(cfg, 1, 32)
+    logits, cache, _ = forward(params, cfg, tokens=jnp.asarray(prompt)[None],
+                               mode="prefill", cache=cache)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(3):
+        logits, cache, _ = forward(params, cfg,
+                                   tokens=jnp.asarray([[toks[-1]]]),
+                                   mode="decode", cache=cache,
+                                   pos=jnp.int32(pos))
+        toks.append(int(jnp.argmax(logits[0, -1])))
+        pos += 1
+    assert out == toks
+
+
+def test_straggler_finding_triggers_elastic_halt(tmp_path):
+    """Monitoring is load-bearing: a sustained straggler finding (emitted by
+    a simulated peer host) halts the loop so the launcher can restart
+    elastically without the slow host."""
+    from repro.core import Point, now_ns
+
+    cfg = get_config("lms-demo", smoke=True)
+    tcfg = TrainConfig(total_steps=50, warmup_steps=1,
+                       halt_on_straggler=True)
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path))
+
+    t0 = now_ns()
+
+    def inject_straggler(step, metrics):
+        # a peer host reports sustained step-time skew (simulated timeline
+        # so the 30 s timeout of the rule elapses immediately)
+        stack.router.write(Point(
+            "hpm", {"hostname": "peer-h9"},
+            {"straggler_skew": 0.5}, t0 + step * 40 * 10 ** 9))
+
+    r = train(cfg, tcfg, TINY, stack=stack, step_callback=inject_straggler,
+              job_id="strag")
+    assert r.steps_run < 50, "loop should halt early"
+    assert any(f.rule == "step_time_straggler" for f in r.findings)
+    ev = stack.backend.db("global").select("run_state")
+    texts = [v for s in ev for v in s.values["event"]]
+    assert any("halt: straggler:peer-h9" in t for t in texts)

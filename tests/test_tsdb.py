@@ -1,0 +1,104 @@
+"""Embedded TSDB: write/select/aggregate/retention/persistence."""
+
+import os
+
+from repro.core.line_protocol import Point
+from repro.core.tsdb import Database, TSDBServer
+
+
+def _pts(meas="m", host="h0", n=10, t0=0, dt=1_000_000_000, field="v"):
+    return [Point(meas, {"hostname": host}, {field: float(i)}, t0 + i * dt)
+            for i in range(n)]
+
+
+def test_write_select():
+    db = Database("test")
+    db.write(_pts())
+    series = db.select("m", ["v"], {"hostname": "h0"})
+    assert len(series) == 1
+    assert series[0].values["v"] == [float(i) for i in range(10)]
+    assert db.select("m", ["v"], {"hostname": "nope"}) == []
+
+
+def test_time_range():
+    db = Database("test")
+    db.write(_pts())
+    s = db.select("m", ["v"], t_min=3_000_000_000, t_max=6_000_000_000)[0]
+    assert s.values["v"] == [3.0, 4.0, 5.0, 6.0]
+
+
+def test_out_of_order_insert():
+    db = Database("test")
+    db.write([Point("m", {"hostname": "h"}, {"v": 2.0}, 200)])
+    db.write([Point("m", {"hostname": "h"}, {"v": 1.0}, 100)])
+    s = db.select("m", ["v"])[0]
+    assert s.times == [100, 200]
+    assert s.values["v"] == [1.0, 2.0]
+
+
+def test_aggregate_group_by_tag():
+    db = Database("test")
+    db.write(_pts(host="h0") + _pts(host="h1", field="v"))
+    out = db.aggregate("m", "v", agg="mean", group_by_tag="hostname")
+    assert out == {"h0": 4.5, "h1": 4.5}
+    out = db.aggregate("m", "v", agg="max")
+    assert out[""] == 9.0
+
+
+def test_aggregate_windowed():
+    db = Database("test")
+    db.write(_pts(n=10))
+    out = db.aggregate("m", "v", agg="sum", window_ns=5_000_000_000)
+    starts, vals = out[""]
+    assert vals == [0 + 1 + 2 + 3 + 4, 5 + 6 + 7 + 8 + 9]
+
+
+def test_events_and_floats_coexist():
+    db = Database("test")
+    db.write([Point("ev", {"hostname": "h"}, {"event": "start"}, 1),
+              Point("ev", {"hostname": "h"}, {"event": "end"}, 2)])
+    s = db.select("ev")[0]
+    assert s.values["event"] == ["start", "end"]
+    # string fields are excluded from numeric aggregation
+    assert db.aggregate("ev", "event") == {}
+
+
+def test_retention():
+    db = Database("test")
+    db.write(_pts(n=100))
+    db.enforce_retention(max_points_per_series=10)
+    s = db.select("m")[0]
+    assert len(s.times) == 10
+    assert s.values["v"][0] == 90.0
+
+
+def test_field_keys_and_measurements():
+    db = Database("test")
+    db.write([Point("a", {"hostname": "h"}, {"x": 1.0, "y": 2.0})])
+    db.write([Point("b", {"hostname": "h"}, {"z": 1.0})])
+    assert db.measurements() == ["a", "b"]
+    assert db.field_keys("a") == ["x", "y"]
+    assert db.tag_values("a", "hostname") == ["h"]
+
+
+def test_server_multiple_dbs(tmp_path):
+    srv = TSDBServer(persist_dir=str(tmp_path))
+    srv.write(_pts(), "global")
+    srv.write(_pts(host="h9"), "user_alice")
+    assert set(srv.databases()) == {"global", "user_alice"}
+    assert srv.db("user_alice").point_count() == 10
+    # persistence round-trip
+    srv2 = TSDBServer(persist_dir=str(tmp_path))
+    srv2.load_persisted()
+    assert srv2.db("global").point_count() == 10
+    assert srv2.db("user_alice").select("m", ["v"],
+                                        {"hostname": "h9"})[0].times
+
+
+def test_sparse_fields_align():
+    db = Database("t")
+    db.write([Point("m", {"hostname": "h"}, {"a": 1.0}, 1),
+              Point("m", {"hostname": "h"}, {"b": 2.0}, 2)])
+    s = db.select("m")[0]
+    assert s.values["a"] == [1.0, None]
+    assert s.values["b"] == [None, 2.0]
