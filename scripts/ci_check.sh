@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI gate: clean test collection (hard requirement — a module that fails
+# to import takes its whole file's tests with it silently) plus the fast
+# unit tier under a timeout.  See tests/README.md for the tier layout.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "[1/2] collection gate (pytest --collect-only)"
+python -m pytest --collect-only -q tests/ > /dev/null
+
+echo "[2/2] fast unit tier (timeout ${CI_FAST_TIMEOUT:-600}s)"
+timeout "${CI_FAST_TIMEOUT:-600}" python -m pytest -q \
+    tests/test_line_protocol.py \
+    tests/test_tsdb.py \
+    tests/test_rollup.py \
+    tests/test_router.py \
+    tests/test_lms_stack.py \
+    tests/test_analysis.py
+
+echo "ci_check: OK"

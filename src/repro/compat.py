@@ -1,0 +1,47 @@
+"""Shims for JAX API drift between the versions this repo runs under.
+
+* ``shard_map`` graduated from ``jax.experimental.shard_map`` to
+  ``jax.shard_map``, and its ``check_rep`` kwarg was renamed to
+  ``check_vma`` along the way; import it from here and use the new-style
+  kwarg — the shim translates when running on an older JAX.
+* Pallas-TPU's ``TPUCompilerParams`` was renamed to ``CompilerParams``;
+  ``CompilerParams`` here resolves to whichever this JAX provides.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+except AttributeError:                      # pre-graduation JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, /, *args, **kwargs):
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    if "axis_names" in kwargs and "axis_names" not in _PARAMS:
+        # new API names the *manual* axes; the old ``auto`` kwarg takes the
+        # complement (mesh axes left under GSPMD control)
+        manual = set(kwargs.pop("axis_names"))
+        mesh = kwargs.get("mesh")
+        if "auto" in _PARAMS and mesh is not None:
+            kwargs["auto"] = frozenset(mesh.axis_names) - manual
+    return _shard_map(f, *args, **kwargs)
+
+
+try:
+    from jax.experimental.pallas import tpu as _pltpu
+    CompilerParams = getattr(_pltpu, "CompilerParams",
+                             getattr(_pltpu, "TPUCompilerParams", None))
+except ImportError:                         # pallas not available
+    CompilerParams = None
+
+__all__ = ["CompilerParams", "shard_map"]

@@ -24,19 +24,22 @@ from repro.core.line_protocol import (Point, decode_batch, decode_line,
                                       encode_batch, encode_point, now_ns)
 from repro.core.perf_groups import (GROUPS, HBM_BW, ICI_BW, PEAK_FLOPS,
                                     PerfGroup, derive_all, parse_group)
+from repro.core.rollup import (DEFAULT_TIERS_NS, ROLLUP_AGGS, RollupConfig,
+                               SeriesRollups, WindowAgg)
 from repro.core.router import MetricsRouter
 from repro.core.tsdb import Database, TSDBServer
 from repro.core.usermetric import UserMetric
 
 __all__ = [
-    "DEFAULT_TREE", "Database", "DashboardAgent", "Finding", "GROUPS",
-    "HBM_BW", "HostAgent", "HttpSink", "ICI_BW", "JobInfo", "JobRegistry",
-    "LMSHttpServer", "MetricsRouter", "MonitoringStack", "PEAK_FLOPS",
-    "PerfGroup", "Point", "RooflineAnalyzer", "RooflineResult",
+    "DEFAULT_TIERS_NS", "DEFAULT_TREE", "Database", "DashboardAgent",
+    "Finding", "GROUPS", "HBM_BW", "HostAgent", "HttpSink", "ICI_BW",
+    "JobInfo", "JobRegistry", "LMSHttpServer", "MetricsRouter",
+    "MonitoringStack", "PEAK_FLOPS", "PerfGroup", "Point", "ROLLUP_AGGS",
+    "RollupConfig", "RooflineAnalyzer", "RooflineResult", "SeriesRollups",
     "StreamAnalyzer", "TSDBServer", "ThresholdRule", "UserMetric",
-    "classify_job", "decode_batch", "decode_line", "default_rules",
-    "derive_all", "encode_batch", "encode_point", "evaluate_rules_on_db",
-    "now_ns", "parse_group",
+    "WindowAgg", "classify_job", "decode_batch", "decode_line",
+    "default_rules", "derive_all", "encode_batch", "encode_point",
+    "evaluate_rules_on_db", "now_ns", "parse_group",
 ]
 
 

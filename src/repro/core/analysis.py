@@ -127,12 +127,34 @@ def evaluate_rule(rule: ThresholdRule, times: list, values: list,
 
 
 def evaluate_rules_on_db(db, rules: list, *, jobid: Optional[str] = None,
-                         group_by_tag: str = "hostname") -> list:
-    """Run every rule over every matching host series in a Database."""
+                         group_by_tag: str = "hostname",
+                         use_rollups: object = "auto") -> list:
+    """Run every rule over every matching host series in a Database.
+
+    With ``use_rollups`` (the default), rule evaluation reads the finest
+    rollup tier — per-window means with window starts as timestamps —
+    instead of rescanning raw points, so the cost is O(#windows) and the
+    rules keep working after retention dropped the raw data.  Threshold +
+    timeout semantics are preserved: a sustained excursion spans the same
+    windows it spans points (tier windows are far shorter than any rule
+    timeout).  ``use_rollups=False`` forces the raw scan; ``True`` forces
+    the rollup path and raises on a rollup-disabled database rather than
+    silently evaluating nothing.
+    """
+    rollups_available = getattr(db, "rollup_config", None) is not None
+    if use_rollups is True and not rollups_available:
+        raise ValueError(f"database {getattr(db, 'name', '?')!r} has "
+                         "rollups disabled; cannot force use_rollups=True")
     findings = []
     for rule in rules:
         tags = {"jobid": jobid} if jobid else None
-        for series in db.select(rule.measurement, [rule.metric], tags):
+        series_list = None
+        if use_rollups is not False and rollups_available:
+            series_list = db.rollup_series(rule.measurement, rule.metric,
+                                           agg="mean", tags=tags)
+        if not series_list and use_rollups is not True:
+            series_list = db.select(rule.measurement, [rule.metric], tags)
+        for series in series_list or []:
             vals = series.values.get(rule.metric)
             if not vals:
                 continue

@@ -192,11 +192,36 @@ class DashboardAgent:
 
     # -- static HTML rendering ---------------------------------------------------
 
+    # sparklines cap out visually around this many segments; coarser rollup
+    # tiers are preferred once a panel would exceed it
+    MAX_PANEL_POINTS = 400
+
     def _series_for(self, db: Database, meas: str, fieldname: str,
                     jobid: str, host: Optional[str] = None):
         tags = {"jobid": jobid}
         if host:
             tags["hostname"] = host
+        # transparent rollup read: finest tier that fits the panel budget,
+        # coarsest tier if nothing fits — O(#windows) instead of a raw
+        # rescan, and still renders after raw-point retention.  The tier is
+        # chosen from cheap stored-window counts so only one merge runs.
+        cfg = getattr(db, "rollup_config", None)
+        if cfg is not None:
+            chosen = None
+            for tier_ns in cfg.tiers_ns:
+                cnt = db.rollup_window_count(meas, fieldname, tags=tags,
+                                             tier_ns=tier_ns)
+                if cnt == 0:        # field not rolled up -> raw path
+                    chosen = None
+                    break
+                chosen = tier_ns
+                if cnt <= self.MAX_PANEL_POINTS:
+                    break
+            if chosen is not None:
+                out = db.rollup_aggregate(meas, fieldname, agg="mean",
+                                          tags=tags, window_ns=chosen)
+                if out:
+                    return out[""]
         ts, vs = [], []
         for s in db.select(meas, [fieldname], tags):
             ts.extend(s.times)

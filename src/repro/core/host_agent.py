@@ -58,7 +58,8 @@ class HostAgent:
     """Collects system + XLA-HPM metrics for one (possibly simulated) host."""
 
     def __init__(self, router, hostname: Optional[str] = None,
-                 device_constants: Optional[dict] = None):
+                 device_constants: Optional[dict] = None,
+                 batch_size: int = 1):
         self.router = router
         self.hostname = hostname or socket.gethostname()
         # static per-step facts from the compiled artifact (set once after
@@ -67,6 +68,11 @@ class HostAgent:
         self.step_constants = dict(device_constants or {})
         self._last_sys: Optional[dict] = None
         self._last_t = time.monotonic()
+        # >1: buffer points and hand the router whole batches (paper §III.A
+        # batched transmission); 1 keeps the historical emit-per-call path
+        # so live analyzers see every point immediately
+        self.batch_size = max(int(batch_size), 1)
+        self._pending: list = []
 
     # -- compiled-artifact facts ------------------------------------------------
 
@@ -113,10 +119,33 @@ class HostAgent:
             if extra_events:
                 fields.update({k: float(v) for k, v in extra_events.items()
                                if k not in fields})
-            self.router.write(Point("hpm", {"hostname": self.hostname},
-                                    fields, ts if ts is not None
-                                    else now_ns()))
+            self._emit(Point("hpm", {"hostname": self.hostname},
+                             fields, ts if ts is not None
+                             else now_ns()))
         return derived
 
     def emit_system(self):
-        self.router.write(self.collect_system())
+        self._emit(self.collect_system())
+
+    # -- batched emission --------------------------------------------------------
+
+    def _emit(self, point: Point):
+        if self.batch_size <= 1:
+            self.router.write(point)
+            return
+        self._pending.append(point)
+        if len(self._pending) >= self.batch_size:
+            self.flush()
+
+    def flush(self):
+        """Send any buffered points as one batch."""
+        if self._pending:
+            pending, self._pending = self._pending, []
+            self.router.write(pending)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.flush()
+        return False

@@ -9,7 +9,9 @@ curl cronjobs, Ganglia pull-proxies in the paper) integrates unchanged:
     POST /job/start                 body: JSON {jobid, user, hosts, tags}
     POST /job/end                   body: JSON {jobid}
     GET  /ping
-    GET  /query?db=&m=&field=&agg=  simple JSON query (dashboards/tests)
+    GET  /query?db=&m=&field=&agg=  simple JSON query (dashboards/tests);
+                                    &window_ns= adds windowed aggregation
+                                    served from the rollup tiers
     GET  /dbs                       list databases
 
 Client: :class:`HttpSink` POSTs batched lines — the transport used by the
@@ -48,6 +50,14 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
         return self.rfile.read(n) if n else b""
 
     def do_GET(self):
+        try:
+            self._do_get()
+        except Exception as e:                      # noqa: BLE001
+            # bad query params (window_ns=abc, unknown agg) must produce a
+            # 400, not a dropped connection
+            self._send(400, {"error": str(e)})
+
+    def _do_get(self):
         url = urllib.parse.urlparse(self.path)
         q = dict(urllib.parse.parse_qsl(url.query))
         if url.path == "/ping":
@@ -59,9 +69,12 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
             meas = q.get("m", "")
             fieldname = q.get("field", "value")
             tags = {k[4:]: v for k, v in q.items() if k.startswith("tag_")}
-            if "agg" in q:
-                out = db.aggregate(meas, fieldname, agg=q["agg"], tags=tags,
-                                   group_by_tag=q.get("group_by"))
+            if "agg" in q or "window_ns" in q:
+                window = int(q["window_ns"]) if "window_ns" in q else None
+                out = db.aggregate(meas, fieldname, agg=q.get("agg", "mean"),
+                                   tags=tags,
+                                   group_by_tag=q.get("group_by"),
+                                   window_ns=window)
                 self._send(200, {"result": out})
             else:
                 series = db.select(meas, [fieldname], tags)

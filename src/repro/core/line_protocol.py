@@ -152,6 +152,10 @@ def _split_unescaped(s: str, sep: str, maxsplit: int = -1) -> list:
     return out
 
 
+_TRUE = frozenset(("t", "T", "true", "True"))
+_FALSE = frozenset(("f", "F", "false", "False"))
+
+
 def _parse_field_value(s: str) -> FieldValue:
     if s.startswith('"'):
         if not s.endswith('"') or len(s) < 2:
@@ -167,28 +171,75 @@ def _parse_field_value(s: str) -> FieldValue:
                 out.append(body[i])
                 i += 1
         return "".join(out)
-    if s in ("t", "T", "true", "True"):
-        return True
-    if s in ("f", "F", "false", "False"):
-        return False
     if s.endswith("i"):
         return int(s[:-1])
-    if s == "nan":
-        return float("nan")
-    if s == "inf":
-        return float("inf")
-    if s == "-inf":
-        return float("-inf")
     try:
-        return float(s)
-    except ValueError as e:
-        raise LineProtocolError(f"bad field value {s!r}") from e
+        return float(s)          # also accepts nan / inf / -inf
+    except ValueError:
+        pass
+    if s in _TRUE:
+        return True
+    if s in _FALSE:
+        return False
+    raise LineProtocolError(f"bad field value {s!r}")
+
+
+def _decode_line_fast(line: str, head_cache: Optional[dict] = None) -> Point:
+    """Decode a line containing no escapes and no quoted strings.
+
+    Machine-emitted metric lines (the batched ingest hot path) virtually
+    never use escaping, so plain ``str.split`` replaces the char-by-char
+    escape-aware splitter.  Semantics match :func:`decode_line` exactly:
+    any construct that would decode differently (a bare ``=`` inside a
+    tag/field value) raises, as the slow path does.
+
+    ``head_cache`` (used by :func:`decode_batch`) memoizes the parsed
+    ``measurement,tag=val...`` head — lines of one batch overwhelmingly
+    share a handful of heads, so tag parsing amortizes to a dict copy.
+    """
+    parts = line.split(" ")
+    np_ = len(parts)
+    if np_ == 2 and parts[0] and parts[1]:
+        ts = None
+    elif np_ >= 3 and parts[0] and parts[1] and parts[2]:
+        ts = int(parts[2])
+    else:                       # rare: repeated separators
+        parts = [h for h in parts if h]
+        if len(parts) < 2:
+            raise LineProtocolError(f"no fields in {line!r}")
+        ts = int(parts[2]) if len(parts) >= 3 else None
+    head = parts[0]
+    cached = head_cache.get(head) if head_cache is not None else None
+    if cached is None:
+        hp = head.split(",")
+        measurement = hp[0]
+        if not measurement:
+            raise LineProtocolError("empty measurement")
+        tags = {}
+        for t in hp[1:]:
+            k, sep, v = t.partition("=")
+            if not sep or "=" in v:
+                raise LineProtocolError(f"bad tag {t!r}")
+            tags[k] = v
+        if head_cache is not None:
+            head_cache[head] = (measurement, tags)
+    else:
+        measurement, tags = cached
+    fields = {}
+    for f in parts[1].split(","):
+        k, sep, v = f.partition("=")
+        if not sep or "=" in v:
+            raise LineProtocolError(f"bad field {f!r}")
+        fields[k] = _parse_field_value(v)
+    return Point(measurement, dict(tags), fields, ts)
 
 
 def decode_line(line: str) -> Point:
     line = line.strip()
     if not line or line.startswith("#"):
         raise LineProtocolError("empty/comment line")
+    if "\\" not in line and '"' not in line:
+        return _decode_line_fast(line)
     head_fields = _split_unescaped(line, " ")
     head_fields = [h for h in head_fields if h != ""]
     if len(head_fields) < 2:
@@ -221,11 +272,15 @@ def decode_line(line: str) -> Point:
 
 def decode_batch(data: str) -> list:
     points = []
+    head_cache: dict = {}
     # frame on \n only — str.splitlines() would also split on \x0c etc.,
     # which are legal inside quoted string fields
     for line in data.split("\n"):
         line = line.strip()
         if not line or line.startswith("#"):
             continue
-        points.append(decode_line(line))
+        if "\\" not in line and '"' not in line:
+            points.append(_decode_line_fast(line, head_cache))
+        else:
+            points.append(decode_line(line))
     return points

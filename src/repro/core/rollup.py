@@ -1,0 +1,317 @@
+"""Streaming rollup tiers — incremental downsampling for the LMS hot path.
+
+The paper (§II) leans on InfluxDB's retention policies to "keep the
+generated data volume under control"; related job-monitoring systems
+(MPCDF's job-specific monitoring, PerSyst) go one step further and
+aggregate on the fly so cluster-wide monitoring stays cheap.  This module
+is that step for the embedded TSDB: every write also updates a small set
+of *tiered* windowed aggregates, so
+
+* dashboards and analysis rules read O(#windows) summaries instead of
+  rescanning every raw point, and
+* retention can drop raw points while the rollups keep answering windowed
+  queries over the whole job lifetime.
+
+Design notes
+------------
+
+* **Tiers.**  A :class:`RollupConfig` lists window sizes in ns (default
+  1 s / 10 s / 60 s).  Each (series, field) pair keeps, per tier, a dict
+  ``window_start_ns -> WindowAgg``.  Window starts are *epoch-aligned*
+  (``ts - ts % tier_ns``) — the same alignment the raw windowed-aggregate
+  path uses for non-negative timestamps — so a query window that is a
+  multiple of a tier is covered by whole tier windows and merged results
+  are **exactly** equal to a naive recompute from raw points.
+
+* **Incrementality.**  A :class:`WindowAgg` stores ``(count, sum, min,
+  max, last_t, last_v)``.  All of these are order-independent (``last``
+  keeps the lexicographically largest ``(t, v)`` pair, matching the raw
+  path's sort-then-take-last), so out-of-order ingest needs no special
+  casing: the point lands in whichever window its timestamp belongs to.
+
+* **Mergeability.**  Two ``WindowAgg``s combine losslessly (sums add,
+  mins min, ...), which is what lets a 60 s query window be served from
+  either the 60 s tier directly or from 60 merged 1 s windows, and what
+  lets per-series windows merge across a ``group_by_tag`` group.
+  ``mean`` is derived as ``sum / count`` at query time and is therefore
+  exact after any merge.
+
+* **Retention.**  Rollups live beside the raw columns and are *not*
+  touched by raw-point trims; :meth:`SeriesRollups.trim` applies an
+  independent (much longer) retention to the windows themselves.
+
+* **Types.**  Only real numbers are rolled up (bools and strings are
+  excluded, matching ``Database.aggregate``'s numeric filter); event
+  series simply have no rollup state.
+
+Thread-safety is inherited from the owning ``Database``: all mutation and
+query entry points are called under the database lock.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Optional, Tuple
+
+# 1 s / 10 s / 60 s — finest tier first; coarser tiers must be integer
+# multiples of finer ones for the query planner's nesting logic to hold.
+DEFAULT_TIERS_NS: Tuple[int, ...] = (
+    1_000_000_000, 10_000_000_000, 60_000_000_000)
+
+ROLLUP_AGGS = ("mean", "min", "max", "sum", "count", "last")
+
+
+@dataclass(frozen=True)
+class RollupConfig:
+    """Tier layout + rollup-side retention."""
+
+    tiers_ns: Tuple[int, ...] = DEFAULT_TIERS_NS
+    # drop rollup windows older than this (None = keep forever)
+    max_age_ns: Optional[int] = None
+
+    def __post_init__(self):
+        tiers = tuple(sorted(int(t) for t in self.tiers_ns))
+        if any(t <= 0 for t in tiers):
+            raise ValueError("tier sizes must be positive")
+        object.__setattr__(self, "tiers_ns", tiers)
+
+    def tier_for(self, window_ns: int) -> Optional[int]:
+        """Coarsest tier that nests exactly into ``window_ns`` windows."""
+        best = None
+        for t in self.tiers_ns:
+            if t <= window_ns and window_ns % t == 0:
+                best = t
+        return best
+
+
+class WindowAgg:
+    """Incremental aggregate state for one (tier, window, field)."""
+
+    __slots__ = ("count", "sum", "min", "max", "last_t", "last_v")
+
+    def __init__(self):
+        self.count = 0
+        self.sum = 0.0
+        self.min = None
+        self.max = None
+        self.last_t = None
+        self.last_v = None
+
+    def update(self, t: int, v: float):
+        self.count += 1
+        self.sum += v
+        if self.min is None or v < self.min:
+            self.min = v
+        if self.max is None or v > self.max:
+            self.max = v
+        if self.last_t is None or (t, v) >= (self.last_t, self.last_v):
+            self.last_t, self.last_v = t, v
+
+    def merge(self, other: "WindowAgg"):
+        self.count += other.count
+        self.sum += other.sum
+        if other.min is not None and (self.min is None or
+                                      other.min < self.min):
+            self.min = other.min
+        if other.max is not None and (self.max is None or
+                                      other.max > self.max):
+            self.max = other.max
+        if other.last_t is not None and (
+                self.last_t is None or
+                (other.last_t, other.last_v) >= (self.last_t, self.last_v)):
+            self.last_t, self.last_v = other.last_t, other.last_v
+
+    def value(self, agg: str):
+        if agg == "mean":
+            return self.sum / self.count
+        if agg == "min":
+            return self.min
+        if agg == "max":
+            return self.max
+        if agg == "sum":
+            return self.sum
+        if agg == "count":
+            return float(self.count)
+        if agg == "last":
+            return self.last_v
+        raise ValueError(f"agg {agg!r} not served by rollups")
+
+
+def _is_numeric(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+class SeriesRollups:
+    """All rollup state for one series: field -> tier -> windows."""
+
+    __slots__ = ("config", "_fields")
+
+    def __init__(self, config: RollupConfig):
+        self.config = config
+        # field -> {tier_ns -> {window_start -> WindowAgg}}
+        self._fields: dict = {}
+
+    # -- write ---------------------------------------------------------------
+
+    def observe(self, ts: int, fields: dict):
+        for k, v in fields.items():
+            if not _is_numeric(v):
+                continue
+            tiers = self._fields.get(k)
+            if tiers is None:
+                tiers = {t: {} for t in self.config.tiers_ns}
+                self._fields[k] = tiers
+            for tier_ns, wins in tiers.items():
+                w0 = ts - ts % tier_ns
+                agg = wins.get(w0)
+                if agg is None:
+                    agg = wins[w0] = WindowAgg()
+                agg.update(ts, v)
+
+    def observe_columns(self, times: list, cols: dict):
+        """Column-oriented batched observe — the batched-ingest fast path.
+
+        ``times`` is ascending; ``cols`` maps field -> value list aligned
+        with ``times`` (``None`` holes for points missing the field) —
+        exactly the column segments the series store just appended, so
+        ingest pays no per-point restructuring.  Points of one window are
+        contiguous in a sorted batch, so each window's run is aggregated
+        in local variables and merged into its ``WindowAgg`` once —
+        per-window instead of per-point method-call cost.
+        """
+        for k, col in cols.items():
+            # numeric filter once per column; tier passes then run over
+            # clean parallel lists with no per-point type checks
+            tl: list = []
+            vl: list = []
+            ta, va = tl.append, vl.append
+            for t, v in zip(times, col):
+                tv = type(v)
+                if tv is float or tv is int or (
+                        v is not None and isinstance(v, (int, float))
+                        and tv is not bool):
+                    ta(t)
+                    va(v)
+            n = len(tl)
+            if not n:
+                continue
+            tiers = self._fields.get(k)
+            if tiers is None:
+                tiers = {t: {} for t in self.config.tiers_ns}
+                self._fields[k] = tiers
+            for tier_ns, wins in tiers.items():
+                i = 0
+                while i < n:
+                    w0 = tl[i] - tl[i] % tier_ns
+                    end = w0 + tier_ns
+                    # seed min/max from the first value, not +/-inf: NaN
+                    # compares false everywhere, and an inf seed would leak
+                    # as a fabricated min/max for all-NaN runs (the scalar
+                    # WindowAgg.update path keeps the first value too)
+                    v0 = vl[i]
+                    s = 0.0
+                    mn = v0
+                    mx = v0
+                    j = i
+                    while j < n and tl[j] < end:
+                        v = vl[j]
+                        s += v
+                        if v < mn:
+                            mn = v
+                        if v > mx:
+                            mx = v
+                        j += 1
+                    # "last" = lexicographic (t, v) max: times ascend, so
+                    # take max v among the run's final-timestamp ties
+                    lt, lv = tl[j - 1], vl[j - 1]
+                    p = j - 2
+                    while p >= i and tl[p] == lt:
+                        if vl[p] > lv:
+                            lv = vl[p]
+                        p -= 1
+                    agg = wins.get(w0)
+                    if agg is None:
+                        agg = wins[w0] = WindowAgg()
+                    agg.count += j - i
+                    agg.sum += s
+                    if agg.min is None or mn < agg.min:
+                        agg.min = mn
+                    if agg.max is None or mx > agg.max:
+                        agg.max = mx
+                    if agg.last_t is None or \
+                            (lt, lv) >= (agg.last_t, agg.last_v):
+                        agg.last_t, agg.last_v = lt, lv
+                    i = j
+
+    # -- query ---------------------------------------------------------------
+
+    def fields(self) -> list:
+        return list(self._fields)
+
+    def windows(self, field: str, window_ns: int,
+                t_min: Optional[int] = None,
+                t_max: Optional[int] = None) -> dict:
+        """``window_start -> WindowAgg`` for the requested window size.
+
+        ``window_ns`` must be a multiple of some tier (see
+        :meth:`RollupConfig.tier_for`); tier windows are re-bucketed into
+        the coarser requested windows by merging.  ``t_min``/``t_max``
+        filter at *window* granularity: a window is included iff it lies
+        inside the epoch-aligned [t_min, t_max] window range.
+        """
+        tiers = self._fields.get(field)
+        if tiers is None:
+            return {}
+        tier_ns = self.config.tier_for(window_ns)
+        if tier_ns is None:
+            raise ValueError(f"window {window_ns} not served by tiers "
+                             f"{self.config.tiers_ns}")
+        lo = None if t_min is None else t_min - t_min % window_ns
+        hi = None if t_max is None else t_max - t_max % window_ns
+        out: dict = {}
+        for w0, agg in tiers[tier_ns].items():
+            q0 = w0 - w0 % window_ns
+            if (lo is not None and q0 < lo) or (hi is not None and q0 > hi):
+                continue
+            cur = out.get(q0)
+            if cur is None:
+                cur = out[q0] = WindowAgg()
+            cur.merge(agg)
+        return out
+
+    # -- retention -----------------------------------------------------------
+
+    def trim(self, now_ts: int, max_age_ns: Optional[int] = None):
+        """Drop windows whose *end* is older than ``max_age_ns``."""
+        age = max_age_ns if max_age_ns is not None else self.config.max_age_ns
+        if age is None:
+            return
+        for tiers in self._fields.values():
+            for tier_ns, wins in tiers.items():
+                cutoff = now_ts - age
+                stale = [w0 for w0 in wins if w0 + tier_ns <= cutoff]
+                for w0 in stale:
+                    del wins[w0]
+
+    def window_count(self) -> int:
+        return sum(len(w) for tiers in self._fields.values()
+                   for w in tiers.values())
+
+    def tier_window_count(self, field: str, tier_ns: int) -> int:
+        """Stored window count for one (field, tier) — O(1), no merge."""
+        tiers = self._fields.get(field)
+        if tiers is None or tier_ns not in tiers:
+            return 0
+        return len(tiers[tier_ns])
+
+
+def merge_window_maps(maps: Iterable[dict]) -> dict:
+    """Merge per-series ``window_start -> WindowAgg`` maps (group_by)."""
+    out: dict = {}
+    for m in maps:
+        for w0, agg in m.items():
+            cur = out.get(w0)
+            if cur is None:
+                cur = out[w0] = WindowAgg()
+            cur.merge(agg)
+    return out

@@ -115,16 +115,26 @@ class MetricsRouter:
     def write(self, points: Union[Point, Iterable[Point]]):
         if isinstance(points, Point):
             points = [points]
+        elif not isinstance(points, (list, tuple)):
+            points = list(points)
+        self.stats.points_in += len(points)
+        # batch fast path: the tag-store lookup (a lock per call) is done
+        # once per distinct host in the batch, not once per point
+        host_tags: dict = {}
         enriched = []
         for p in points:
-            self.stats.points_in += 1
             host = p.tags.get(self.HOST_TAG)
             if host is None and self.require_host_tag:
                 self.stats.dropped_no_host += 1
                 continue
             if p.timestamp is None:
                 p = Point(p.measurement, p.tags, p.fields, now_ns())
-            job_tags = self.jobs.tags_for_host(host) if host else {}
+            if host is None:
+                job_tags = {}
+            else:
+                job_tags = host_tags.get(host)
+                if job_tags is None:
+                    job_tags = host_tags[host] = self.jobs.tags_for_host(host)
             enriched.append(p.with_tags(job_tags))
         if not enriched:
             return

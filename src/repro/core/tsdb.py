@@ -8,7 +8,15 @@ equivalent with the properties the paper relies on:
   queries (what the dashboard agent and the analysis rules consume),
 * multiple named databases (global + per-user/per-job duplication, §III.B),
 * a retention policy to keep the generated data volume under control (§II),
+* streaming rollups (``repro.core.rollup``): tiered windowed aggregates
+  maintained incrementally at write time, so windowed queries are served
+  from O(#windows) summaries and survive raw-point retention,
 * optional write-ahead persistence (JSONL) so dashboards survive restarts.
+
+Writes take whole batches: points are grouped per series first, then
+appended column-wise under one lock acquisition, which is what makes the
+batched ingest path (``line_protocol.decode_batch`` -> ``MetricsRouter``
+-> here) amortize to near the raw-append cost.
 
 Thread-safe: the router may write from the training thread while the HTTP
 endpoint and analyzers read concurrently.
@@ -18,13 +26,16 @@ from __future__ import annotations
 
 import bisect
 import json
+import operator
 import os
 import threading
 from collections import defaultdict
 from dataclasses import dataclass
-from typing import Callable, Iterable, Optional
+from typing import Iterable, Optional
 
 from repro.core.line_protocol import Point, now_ns
+from repro.core.rollup import (ROLLUP_AGGS, RollupConfig, SeriesRollups,
+                               merge_window_maps)
 
 
 @dataclass
@@ -41,28 +52,50 @@ def _tags_key(tags: dict) -> tuple:
     return tuple(sorted(tags.items()))
 
 
-class Database:
-    """One named database: measurement -> {tags_key -> _SeriesStore}."""
+_first = operator.itemgetter(0)
 
-    def __init__(self, name: str):
+
+class Database:
+    """One named database: measurement -> {tags_key -> _SeriesStore}.
+
+    ``rollup_config`` enables streaming rollups (on by default); pass
+    ``rollup_config=None`` for a raw-only database.
+    """
+
+    def __init__(self, name: str,
+                 rollup_config: Optional[RollupConfig] = RollupConfig()):
         self.name = name
         self._lock = threading.RLock()
         self._meas: dict = defaultdict(dict)     # meas -> tags_key -> store
         self._count = 0
+        self.rollup_config = rollup_config
 
     # -- write --------------------------------------------------------------
 
     def write(self, points: Iterable[Point]):
+        # group per series outside the lock: one store lookup + one
+        # column-extend per series instead of per point
+        by_series: dict = {}
+        tags_of: dict = {}
+        for p in points:
+            ts = p.timestamp if p.timestamp is not None else now_ns()
+            key = (p.measurement, _tags_key(p.tags))
+            items = by_series.get(key)
+            if items is None:
+                items = by_series[key] = []
+                tags_of[key] = p.tags
+            items.append((ts, p.fields))
+        if not by_series:
+            return
         with self._lock:
-            for p in points:
-                key = _tags_key(p.tags)
-                store = self._meas[p.measurement].get(key)
+            for (meas, key), items in by_series.items():
+                store = self._meas[meas].get(key)
                 if store is None:
-                    store = _SeriesStore(dict(p.tags))
-                    self._meas[p.measurement][key] = store
-                store.append(p.timestamp if p.timestamp is not None
-                             else now_ns(), p.fields)
-                self._count += 1
+                    store = _SeriesStore(dict(tags_of[(meas, key)]),
+                                         self.rollup_config)
+                    self._meas[meas][key] = store
+                store.extend(items)
+                self._count += len(items)
 
     # -- introspection -------------------------------------------------------
 
@@ -75,6 +108,8 @@ class Database:
             keys = set()
             for store in self._meas.get(measurement, {}).values():
                 keys.update(store.values)
+                if store.rollups is not None:
+                    keys.update(store.rollups.fields())
             return sorted(keys)
 
     def tag_values(self, measurement: str, tag: str) -> list:
@@ -84,10 +119,25 @@ class Database:
             return sorted(v for v in vals if v is not None)
 
     def point_count(self) -> int:
+        """Points ever written (not reduced by retention)."""
         with self._lock:
             return self._count
 
+    def stored_points(self) -> int:
+        """Raw points currently resident (reduced by retention)."""
+        with self._lock:
+            return sum(len(store.times)
+                       for stores in self._meas.values()
+                       for store in stores.values())
+
     # -- query ---------------------------------------------------------------
+
+    def _stores(self, measurement: str, tags: Optional[dict]):
+        for store in self._meas.get(measurement, {}).values():
+            if tags and any(store.tags.get(k) != str(v)
+                            for k, v in tags.items()):
+                continue
+            yield store
 
     def select(self, measurement: str, fields: Optional[list] = None,
                tags: Optional[dict] = None, t_min: Optional[int] = None,
@@ -95,10 +145,7 @@ class Database:
         """Return matching Series (copies, safe to use lock-free)."""
         with self._lock:
             out = []
-            for store in self._meas.get(measurement, {}).values():
-                if tags and any(store.tags.get(k) != str(v)
-                                for k, v in tags.items()):
-                    continue
+            for store in self._stores(measurement, tags):
                 s = store.slice(t_min, t_max, fields)
                 if s is not None:
                     out.append(Series(measurement, dict(store.tags),
@@ -109,13 +156,37 @@ class Database:
                   tags: Optional[dict] = None, t_min: Optional[int] = None,
                   t_max: Optional[int] = None,
                   group_by_tag: Optional[str] = None,
-                  window_ns: Optional[int] = None):
+                  window_ns: Optional[int] = None,
+                  use_rollups: object = "auto"):
         """InfluxDB-style aggregation.
 
         Without ``window_ns``: scalar per group (dict group -> value).
         With ``window_ns``: dict group -> (window_starts, values).
         agg: mean | max | min | sum | count | last.
+
+        ``use_rollups`` (windowed form only — the scalar form always
+        rescans raw): "auto" serves from the rollup tiers whenever the
+        result is provably identical to a raw rescan (window size nests
+        into a tier, range boundaries window-aligned); True forces the
+        rollup path (whole-window range granularity, works after raw
+        retention) and raises ``ValueError`` when no tier can serve the
+        window, rather than silently degrading to the retention-truncated
+        raw data; False forces the raw rescan.
         """
+        if window_ns is not None and use_rollups is not False:
+            if self._rollup_serves(window_ns, agg, t_min, t_max,
+                                   force=use_rollups is True):
+                return self.rollup_aggregate(
+                    measurement, field, agg=agg, tags=tags, t_min=t_min,
+                    t_max=t_max, group_by_tag=group_by_tag,
+                    window_ns=window_ns)
+            if use_rollups is True:
+                tiers = self.rollup_config.tiers_ns \
+                    if self.rollup_config is not None else ()
+                raise ValueError(
+                    f"rollups cannot serve window_ns={window_ns} "
+                    f"agg={agg!r} (tiers: {tiers}); use use_rollups='auto' "
+                    "to fall back to a raw rescan")
         series = self.select(measurement, [field], tags, t_min, t_max)
         groups: dict = defaultdict(lambda: ([], []))
         for s in series:
@@ -142,16 +213,111 @@ class Database:
                           [_agg(wins[i], agg) for i in starts])
         return out
 
+    def _rollup_serves(self, window_ns: int, agg: str,
+                       t_min: Optional[int], t_max: Optional[int],
+                       force: bool) -> bool:
+        if self.rollup_config is None or agg not in ROLLUP_AGGS or \
+                self.rollup_config.tier_for(window_ns) is None:
+            return False
+        if force:
+            return True
+        # exactness: range bounds must not cut a window in half.  t_min is
+        # an inclusive lower bound -> window-aligned is exact; an interior
+        # t_max would exclude points in its own window, so only None is
+        # provably identical to the raw rescan.
+        return (t_min is None or t_min % window_ns == 0) and t_max is None
+
+    def rollup_aggregate(self, measurement: str, field: str, *,
+                         agg: str = "mean", tags: Optional[dict] = None,
+                         t_min: Optional[int] = None,
+                         t_max: Optional[int] = None,
+                         group_by_tag: Optional[str] = None,
+                         window_ns: Optional[int] = None):
+        """Windowed aggregation served from the rollup tiers.
+
+        Same result shape as the windowed form of :meth:`aggregate`.
+        Range filtering happens at window granularity (whole epoch-aligned
+        windows).  Works after raw points have been dropped by retention.
+        """
+        if self.rollup_config is None:
+            return {}
+        if window_ns is None:
+            window_ns = self.rollup_config.tiers_ns[0]
+        with self._lock:
+            groups: dict = defaultdict(list)
+            for store in self._stores(measurement, tags):
+                if store.rollups is None:
+                    continue
+                g = store.tags.get(group_by_tag, "") if group_by_tag else ""
+                groups[g].append(store.rollups.windows(
+                    field, window_ns, t_min, t_max))
+            out = {}
+            for g, maps in groups.items():
+                merged = merge_window_maps(maps)
+                if not merged:
+                    continue
+                starts = sorted(merged)
+                out[g] = (starts, [merged[w].value(agg) for w in starts])
+            return out
+
+    def rollup_series(self, measurement: str, field: str, *,
+                      agg: str = "mean", tags: Optional[dict] = None,
+                      window_ns: Optional[int] = None) -> list:
+        """Per-series rollup readout: one :class:`Series` per raw series,
+        with window starts as times — the downsampled view the dashboard
+        sparklines and the analysis rules consume."""
+        if self.rollup_config is None:
+            return []
+        if window_ns is None:
+            window_ns = self.rollup_config.tiers_ns[0]
+        with self._lock:
+            out = []
+            for store in self._stores(measurement, tags):
+                if store.rollups is None:
+                    continue
+                wins = store.rollups.windows(field, window_ns)
+                if not wins:
+                    continue
+                starts = sorted(wins)
+                out.append(Series(measurement, dict(store.tags), starts,
+                                  {field: [wins[w].value(agg)
+                                           for w in starts]}))
+            return out
+
+    def rollup_window_count(self, measurement: str, field: str, *,
+                            tags: Optional[dict] = None,
+                            tier_ns: Optional[int] = None) -> int:
+        """Upper bound on merged window count for a tier (sum of per-series
+        stored windows; cheap — lets callers pick a tier *before* paying
+        for a merge)."""
+        if self.rollup_config is None:
+            return 0
+        if tier_ns is None:
+            tier_ns = self.rollup_config.tiers_ns[0]
+        with self._lock:
+            return sum(store.rollups.tier_window_count(field, tier_ns)
+                       for store in self._stores(measurement, tags)
+                       if store.rollups is not None)
+
     # -- retention ------------------------------------------------------------
 
     def enforce_retention(self, max_age_ns: Optional[int] = None,
-                          max_points_per_series: Optional[int] = None):
-        """Drop old data (paper §II: keep data volume under control)."""
-        cutoff = now_ns() - max_age_ns if max_age_ns else None
+                          max_points_per_series: Optional[int] = None,
+                          rollup_max_age_ns: Optional[int] = None):
+        """Drop old raw data (paper §II: keep data volume under control).
+
+        Rollup windows are *kept* — that is the point of the rollup layer —
+        unless ``rollup_max_age_ns`` (or the config's ``max_age_ns``) sets
+        an independent, typically much longer, horizon for them.
+        """
+        now = now_ns()
+        cutoff = now - max_age_ns if max_age_ns else None
         with self._lock:
             for stores in self._meas.values():
                 for store in stores.values():
                     store.trim(cutoff, max_points_per_series)
+                    if store.rollups is not None:
+                        store.rollups.trim(now, rollup_max_age_ns)
 
 
 def _agg(vals: list, agg: str):
@@ -173,14 +339,55 @@ def _agg(vals: list, agg: str):
 class _SeriesStore:
     """Columnar store for one series; times kept sorted."""
 
-    __slots__ = ("tags", "times", "values")
+    __slots__ = ("tags", "times", "values", "rollups")
 
-    def __init__(self, tags: dict):
+    def __init__(self, tags: dict,
+                 rollup_config: Optional[RollupConfig] = None):
         self.tags = tags
         self.times: list = []
         self.values: dict = defaultdict(list)
+        self.rollups = SeriesRollups(rollup_config) \
+            if rollup_config is not None else None
 
     def append(self, ts: int, fields: dict):
+        self._insert(ts, fields)
+        if self.rollups is not None:
+            self.rollups.observe(ts, fields)
+
+    def extend(self, items: list):
+        """Batched append of ``(ts, fields)`` pairs (the ingest hot path).
+
+        In-order batches (the overwhelmingly common case) extend all
+        columns in one pass; any out-of-order item falls back to the
+        per-point sorted insert.
+        """
+        if len(items) > 1:
+            items = sorted(items, key=_first)
+        if self.times and items[0][0] < self.times[-1]:
+            for ts, fields in items:
+                self._insert(ts, fields)
+            if self.rollups is not None:
+                for ts, fields in items:
+                    self.rollups.observe(ts, fields)
+            return
+        names = set(self.values)
+        for _, fields in items:
+            names.update(fields)
+        n0 = len(self.times)
+        new_times = [ts for ts, _ in items]
+        self.times.extend(new_times)
+        segs = {}
+        for k in names:
+            col = self.values[k]
+            if len(col) < n0:
+                col.extend([None] * (n0 - len(col)))
+            seg = [fields.get(k) for _, fields in items]
+            col.extend(seg)
+            segs[k] = seg
+        if self.rollups is not None:
+            self.rollups.observe_columns(new_times, segs)
+
+    def _insert(self, ts: int, fields: dict):
         if self.times and ts < self.times[-1]:
             idx = bisect.bisect_right(self.times, ts)
             self.times.insert(idx, ts)
@@ -220,23 +427,28 @@ class _SeriesStore:
             lo = max(lo, len(self.times) - max_points)
         if lo > 0:
             self.times = self.times[lo:]
-            self.values = {k: v[lo:] for k, v in self.values.items()}
+            # must stay a defaultdict: append/extend rely on self.values[k]
+            # materializing columns for fields first seen after a trim
+            self.values = defaultdict(
+                list, {k: v[lo:] for k, v in self.values.items()})
 
 
 class TSDBServer:
     """Named-database manager (the "database back-end" box in Fig. 1)."""
 
-    def __init__(self, persist_dir: Optional[str] = None):
+    def __init__(self, persist_dir: Optional[str] = None,
+                 rollup_config: Optional[RollupConfig] = RollupConfig()):
         self._dbs: dict = {}
         self._lock = threading.RLock()
         self._persist_dir = persist_dir
+        self._rollup_config = rollup_config
         if persist_dir:
             os.makedirs(persist_dir, exist_ok=True)
 
     def db(self, name: str = "global") -> Database:
         with self._lock:
             if name not in self._dbs:
-                self._dbs[name] = Database(name)
+                self._dbs[name] = Database(name, self._rollup_config)
             return self._dbs[name]
 
     def databases(self) -> list:

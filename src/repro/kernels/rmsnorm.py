@@ -13,6 +13,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from repro.compat import CompilerParams
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -45,7 +46,7 @@ def rmsnorm(x, scale, *, eps: float = 1e-5, bn: int = 256,
         ],
         out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
         name="rmsnorm",

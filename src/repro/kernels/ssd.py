@@ -18,6 +18,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from repro.compat import CompilerParams
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -94,7 +95,7 @@ def ssd_scan(x, a, b, c, *, chunk: int = 128, interpret: bool = False):
                                lambda b_, h_, c_: (b_, h_, c_, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, h, l, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="ssd_scan",

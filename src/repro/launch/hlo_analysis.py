@@ -542,6 +542,22 @@ class HloAnalyzer:
         return n
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized across JAX versions.
+
+    Older JAX returns a one-element list of dicts (one per program),
+    newer JAX returns the dict directly; either way callers want a plain
+    dict (empty when XLA reports nothing).
+    """
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 def analyze_hlo(hlo_text: str) -> dict:
     """-> JSON-able per-device cost dict."""
     an = HloAnalyzer(hlo_text)

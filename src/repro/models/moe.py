@@ -33,6 +33,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import apply_mlp, mlp_specs
@@ -300,7 +301,7 @@ def apply_moe_a2a(p, x, cfg: ModelConfig, mesh):
         y_full = jax.lax.all_gather(y_my, "model", axis=0, tiled=True)
         return y_full.reshape(b // dp, s, d)
 
-    y = jax.shard_map(
+    y = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P("data", "model"),                 # router (d, E)
                   P("model", "data", None),           # w_gate (E, d, f)

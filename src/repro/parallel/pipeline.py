@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 
 def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
                    axis: str = "pipe", num_microbatches: int = 4):
@@ -81,7 +82,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
         return outputs.reshape((b,) + x_local.shape[1:])
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(
+    return shard_map(
         run, mesh=mesh,
         in_specs=(pspec, P()), out_specs=P(),
         check_vma=False, axis_names={axis})(stage_params, x)

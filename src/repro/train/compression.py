@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 
 def quantize_int8(x: jax.Array):
     """Symmetric per-row int8 quantization. x: (..., d) fp -> (q, scale)."""
@@ -79,7 +80,7 @@ def cross_pod_sync(grads, mesh: Mesh, method: str = "int8"):
         return compressed_pmean(g, "pod", method)
 
     specs = jax.tree.map(lambda _: P(), grads)     # replicated over pod axis
-    return jax.shard_map(f, mesh=mesh, in_specs=(specs,), out_specs=specs,
+    return shard_map(f, mesh=mesh, in_specs=(specs,), out_specs=specs,
                          check_vma=False, axis_names={"pod"})(grads)
 
 

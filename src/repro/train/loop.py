@@ -127,10 +127,10 @@ def train(model_cfg: ModelConfig, train_cfg: TrainConfig,
                 if jit and not compiled_consts_set:
                     # one-time (pre-execution, params still alive despite
                     # donation): compiled-artifact HPM constants -> agent
+                    from repro.launch.hlo_analysis import cost_analysis_dict
                     try:
-                        ca = train_step.lower(
-                            params, opt_state, batch, step_idx
-                        ).compile().cost_analysis()
+                        ca = cost_analysis_dict(train_step.lower(
+                            params, opt_state, batch, step_idx).compile())
                     except Exception:
                         ca = {}
                     agent.set_step_constants(

@@ -22,6 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.models.transformer import loss_fn
@@ -115,7 +116,7 @@ def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig, *,
 
         pspec = jax.tree.map(lambda _: P(), params)
         bspec = jax.tree.map(lambda _: P("pod"), batch)
-        return jax.shard_map(
+        return shard_map(
             per_pod, mesh=mesh,
             in_specs=(pspec, bspec),
             out_specs=(pspec, jax.tree.map(lambda _: P(), {"loss": 0,

@@ -1,0 +1,60 @@
+"""Fallback for ``hypothesis`` so test modules collect without it.
+
+Property tests in this repo guard their import with::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+
+On images without hypothesis, ``given``-decorated tests are collected as
+zero-argument functions that skip with a clear reason, while every other
+test in the module runs normally — collection never fails.  The strategy
+namespace ``st`` accepts any strategy-building call chain (``st.text(...)
+.filter(...)``) made at module-import time and returns inert objects.
+"""
+
+import pytest
+
+
+class _Strategy:
+    """Inert stand-in for a hypothesis strategy (chainable, never drawn)."""
+
+    def __call__(self, *args, **kwargs):
+        return _Strategy()
+
+    def filter(self, *args, **kwargs):
+        return self
+
+    def map(self, *args, **kwargs):
+        return self
+
+    def flatmap(self, *args, **kwargs):
+        return self
+
+
+class _StrategiesModule:
+    def __getattr__(self, name):
+        return _Strategy()
+
+
+st = _StrategiesModule()
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        # zero-arg wrapper: the original signature only names strategy-
+        # provided params, which pytest would otherwise demand as fixtures
+        def skipper():
+            pytest.skip("hypothesis not installed")
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        skipper.__module__ = fn.__module__
+        return skipper
+    return deco

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import (HloAnalyzer, analyze_hlo,
+                                       cost_analysis_dict,
                                        parse_computations)
 
 
@@ -36,7 +37,7 @@ def test_scan_trip_count_multiplies():
     assert res["per_device"]["flops"] >= 7 * 2 * 32**3
     assert res["per_device"]["flops"] < 1.3 * 7 * 2 * 32**3
     # vs. the uncorrected cost_analysis, which counts the body once
-    assert c.cost_analysis()["flops"] < 2 * 2 * 32**3 + 5000
+    assert cost_analysis_dict(c)["flops"] < 2 * 2 * 32**3 + 5000
 
 
 def test_nested_scan_trip_counts():

@@ -3,7 +3,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # minimal images: property tests skip, rest run
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.line_protocol import (LineProtocolError, Point, decode_batch,
                                       decode_line, encode_batch,
@@ -63,6 +67,38 @@ def test_nan_inf_extension():
 def test_rejects_malformed(bad):
     with pytest.raises((LineProtocolError, ValueError)):
         decode_line(bad)
+
+
+def test_fast_and_slow_decode_agree():
+    """Seeded-random roundtrips covering both decoder paths: plain lines
+    (fast ``str.split`` path) and escape/quote-laden lines (slow path)."""
+    import random
+    rng = random.Random(0)
+    plain = "abcdefgh0123_-."
+    tricky = plain + " ,="           # escaped by the encoder -> slow path
+    strchars = tricky + '"\\'        # legal only inside quoted string fields
+
+    def rand_name(alphabet):
+        s = "".join(rng.choice(alphabet) for _ in range(rng.randint(1, 12)))
+        return s.strip() or "x"
+
+    for alphabet in (plain, tricky):
+        for _ in range(200):
+            fields = {rand_name(alphabet): rng.choice(
+                [rng.uniform(-1e6, 1e6), rng.randint(-9999, 9999), True,
+                 rand_name(strchars)]) for _ in range(rng.randint(1, 4))}
+            p = Point(rand_name(alphabet),
+                      {rand_name(alphabet): rand_name(alphabet)},
+                      fields, rng.randrange(10**15))
+            q = decode_line(encode_point(p))
+            assert q.measurement == p.measurement
+            assert q.tags == p.tags
+            assert q.timestamp == p.timestamp
+            for k, v in p.fields.items():
+                if isinstance(v, float):
+                    assert q.fields[k] == pytest.approx(v)
+                else:
+                    assert q.fields[k] == v
 
 
 # -- property --------------------------------------------------------------

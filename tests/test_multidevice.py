@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+from conftest import needs_partial_manual_shard_map
+
 _SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
@@ -75,6 +77,7 @@ def test_compressed_pmean_shard_map():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.train.compression import compressed_pmean
 
         mesh = jax.make_mesh((8,), ("pod",))
@@ -84,7 +87,7 @@ def test_compressed_pmean_shard_map():
         def f(xs):
             return compressed_pmean({"g": xs[0]}, "pod", "int8")["g"]
 
-        got = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P("pod"),),
+        got = jax.jit(shard_map(f, mesh=mesh, in_specs=(P("pod"),),
                                     out_specs=P(None),
                                     check_vma=False))(x)
         want = jnp.mean(x, axis=0)
@@ -94,6 +97,7 @@ def test_compressed_pmean_shard_map():
     """)
 
 
+@needs_partial_manual_shard_map
 def test_cross_pod_compressed_train_step():
     """Full train step with hierarchical pod-axis int8 gradient sync (manual
     pod axis + auto data/model axes) compiles and runs."""

@@ -6,6 +6,8 @@ import subprocess
 import sys
 import textwrap
 
+from conftest import needs_partial_manual_shard_map
+
 _SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
@@ -53,6 +55,7 @@ def test_pipeline_matches_sequential():
     assert "PIPELINE OK" in out
 
 
+@needs_partial_manual_shard_map
 def test_pipeline_composes_with_data_axis():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np

@@ -1,0 +1,288 @@
+"""Streaming rollups: tiered aggregates == naive recompute; thread safety.
+
+The core invariant (see ``repro/core/rollup.py`` design notes): for any
+point stream — batched, out-of-order, sparse-fielded — a windowed
+aggregate served from the rollup tiers equals the same aggregate
+recomputed naively from the raw points, for every supported aggregate and
+every window size that nests into a tier.  Retention may then drop the
+raw points without changing what the rollups answer.
+"""
+
+import random
+import threading
+
+import pytest
+
+from repro.core.line_protocol import Point, encode_batch
+from repro.core.rollup import ROLLUP_AGGS, RollupConfig
+from repro.core.router import MetricsRouter
+from repro.core.tsdb import Database, TSDBServer
+
+S = 1_000_000_000
+WINDOWS = (S, 2 * S, 10 * S, 30 * S, 60 * S, 120 * S)   # all nest into tiers
+
+
+def _random_stream(rng, n, hosts=3, t_span_s=300):
+    """Out-of-order, sparse-fielded random stream."""
+    pts = []
+    for _ in range(n):
+        fields = {}
+        if rng.random() < 0.9:
+            fields["v"] = rng.uniform(-100, 100)
+        if rng.random() < 0.3:
+            fields["w"] = float(rng.randint(-5, 5))
+        if not fields:
+            fields["v"] = 1.0
+        pts.append(Point("m", {"hostname": f"h{rng.randrange(hosts)}"},
+                         fields, rng.randrange(t_span_s * S)))
+    return pts
+
+
+def _write_in_batches(db, pts, rng):
+    i = 0
+    while i < len(pts):
+        k = rng.randint(1, 64)
+        db.write(pts[i:i + k])
+        i += k
+
+
+def _assert_same(rollup_out, raw_out):
+    assert set(rollup_out) == set(raw_out)
+    for g in raw_out:
+        r_starts, r_vals = rollup_out[g]
+        n_starts, n_vals = raw_out[g]
+        assert r_starts == n_starts, g
+        assert r_vals == pytest.approx(n_vals, rel=1e-9, abs=1e-9)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_rollup_equals_naive_recompute(seed):
+    rng = random.Random(seed)
+    db = Database("t")
+    _write_in_batches(db, _random_stream(rng, 2000), rng)
+    for window in WINDOWS:
+        for agg in ROLLUP_AGGS:
+            for group_by in (None, "hostname"):
+                rollup = db.aggregate("m", "v", agg=agg, window_ns=window,
+                                      group_by_tag=group_by,
+                                      use_rollups=True)
+                raw = db.aggregate("m", "v", agg=agg, window_ns=window,
+                                   group_by_tag=group_by, use_rollups=False)
+                _assert_same(rollup, raw)
+
+
+def test_rollup_transparent_auto_path():
+    """Default ``aggregate`` serves aligned windowed queries from rollups
+    and the answer matches a forced raw rescan."""
+    rng = random.Random(7)
+    db = Database("t")
+    _write_in_batches(db, _random_stream(rng, 500), rng)
+    auto = db.aggregate("m", "v", agg="sum", window_ns=10 * S)
+    raw = db.aggregate("m", "v", agg="sum", window_ns=10 * S,
+                       use_rollups=False)
+    _assert_same(auto, raw)
+    # aligned t_min is exact too
+    auto = db.aggregate("m", "v", agg="mean", window_ns=10 * S,
+                        t_min=100 * S)
+    raw = db.aggregate("m", "v", agg="mean", window_ns=10 * S,
+                       t_min=100 * S, use_rollups=False)
+    _assert_same(auto, raw)
+
+
+def test_rollup_out_of_order_and_sparse_fields():
+    db = Database("t")
+    # strictly decreasing timestamps + a field that appears late
+    pts = [Point("m", {"hostname": "h"}, {"v": float(i)}, (99 - i) * S)
+           for i in range(100)]
+    pts += [Point("m", {"hostname": "h"}, {"late": 1.0}, 5 * S)]
+    db.write(pts)
+    for agg in ROLLUP_AGGS:
+        _assert_same(
+            db.aggregate("m", "v", agg=agg, window_ns=10 * S,
+                         use_rollups=True),
+            db.aggregate("m", "v", agg=agg, window_ns=10 * S,
+                         use_rollups=False))
+    starts, vals = db.aggregate("m", "late", agg="count",
+                                window_ns=10 * S, use_rollups=True)[""]
+    assert starts == [0] and vals == [1.0]
+
+
+def test_rollup_survives_raw_retention():
+    """Retention drops raw points; rollups keep answering, unchanged."""
+    rng = random.Random(11)
+    db = Database("t")
+    _write_in_batches(db, _random_stream(rng, 3000, hosts=2), rng)
+    before = {agg: db.aggregate("m", "v", agg=agg, window_ns=60 * S,
+                                use_rollups=False)
+              for agg in ROLLUP_AGGS}
+    db.enforce_retention(max_points_per_series=5)
+    assert db.stored_points() <= 2 * 5
+    for agg, want in before.items():
+        _assert_same(db.aggregate("m", "v", agg=agg, window_ns=60 * S,
+                                  use_rollups=True), want)
+    # the raw path, by contrast, has lost the history
+    raw_after = db.aggregate("m", "v", agg="count", window_ns=60 * S,
+                             use_rollups=False)
+    assert sum(raw_after[""][1]) < sum(before["count"][""][1])
+
+
+def test_rollup_events_excluded_and_disableable():
+    db = Database("t")
+    db.write([Point("ev", {"hostname": "h"}, {"event": "start", "ok": True},
+                    1 * S)])
+    assert db.rollup_aggregate("ev", "event", window_ns=S) == {}
+    assert db.rollup_aggregate("ev", "ok", window_ns=S) == {}   # bools too
+    raw_only = Database("r", rollup_config=None)
+    raw_only.write([Point("m", {"hostname": "h"}, {"v": 1.0}, 1)])
+    assert raw_only.aggregate("m", "v", agg="sum", window_ns=S,
+                              use_rollups=False)[""][1] == [1.0]
+    # rollup entry points on a rollup-disabled db: empty, never a crash
+    assert raw_only.rollup_aggregate("m", "v") == {}
+    assert raw_only.rollup_series("m", "v") == []
+    assert raw_only.rollup_window_count("m", "v") == 0
+    # ... and forcing rollup-backed rule evaluation is a loud error
+    from repro.core.analysis import default_rules, evaluate_rules_on_db
+    with pytest.raises(ValueError):
+        evaluate_rules_on_db(raw_only, default_rules(), use_rollups=True)
+
+
+def test_rollup_nan_no_inf_sentinel():
+    """All-NaN windows must not fabricate +/-inf min/max on the batched
+    ingest path (it seeds from the first value, like the scalar path)."""
+    import math
+    db = Database("t")
+    nan = float("nan")
+    db.write([Point("m", {"hostname": "h"}, {"v": nan}, 1 * S),
+              Point("m", {"hostname": "h"}, {"v": nan}, 1 * S + 2)])
+    for agg in ("min", "max", "sum", "mean"):
+        _, vals = db.rollup_aggregate("m", "v", agg=agg, window_ns=S)[""]
+        assert math.isnan(vals[0]), agg
+    _, counts = db.rollup_aggregate("m", "v", agg="count", window_ns=S)[""]
+    assert counts == [2.0]
+
+
+def test_rollup_7s_window_served_by_1s_tier():
+    """7 s windows don't match a tier exactly but the 1 s tier divides
+    them, so the rollup path serves them — and matches raw."""
+    db = Database("t")
+    db.write([Point("m", {"hostname": "h"}, {"v": float(i)}, i * S)
+              for i in range(20)])
+    out = db.aggregate("m", "v", agg="sum", window_ns=7 * S)
+    raw = db.aggregate("m", "v", agg="sum", window_ns=7 * S,
+                       use_rollups=False)
+    _assert_same(out, raw)
+    assert RollupConfig().tier_for(7 * S) == S      # really the rollup path
+
+
+def test_rollup_unservable_window():
+    """A window finer than the finest tier (0.5 s): 'auto' falls back to
+    the raw rescan; forcing the rollup path is a loud error, never a
+    silent raw fallback over retention-truncated data."""
+    db = Database("t")
+    db.write([Point("m", {"hostname": "h"}, {"v": float(i)}, i * S // 4)
+              for i in range(20)])
+    half = S // 2
+    out = db.aggregate("m", "v", agg="sum", window_ns=half)
+    raw = db.aggregate("m", "v", agg="sum", window_ns=half,
+                       use_rollups=False)
+    _assert_same(out, raw)
+    with pytest.raises(ValueError):
+        db.aggregate("m", "v", agg="sum", window_ns=half, use_rollups=True)
+
+
+def test_new_field_after_retention():
+    """Retention must not break ingest of fields first seen afterwards
+    (trim used to downgrade the column defaultdict to a plain dict)."""
+    db = Database("t")
+    db.write([Point("m", {"hostname": "h"}, {"v": float(i)}, i * S)
+              for i in range(10)])
+    db.enforce_retention(max_points_per_series=5)
+    db.write([Point("m", {"hostname": "h"}, {"v": 1.0, "newf": 2.0},
+                    20 * S)])
+    s = db.select("m", ["newf"])[0]
+    assert s.values["newf"][-1] == 2.0
+    # single-point out-of-order insert path too
+    db.write([Point("m", {"hostname": "h"}, {"older": 3.0}, 19 * S)])
+    col = db.select("m", ["older"])[0].values["older"]
+    assert [v for v in col if v is not None] == [3.0]
+
+
+def test_rollup_config_tier_selection():
+    cfg = RollupConfig()
+    assert cfg.tier_for(60 * S) == 60 * S        # exact tier
+    assert cfg.tier_for(120 * S) == 60 * S       # coarsest that divides
+    assert cfg.tier_for(15 * S) == S             # 10 s doesn't divide 15 s
+    assert cfg.tier_for(int(0.5 * S)) is None    # finer than finest tier
+
+
+def test_rollup_own_retention():
+    db = Database("t", rollup_config=RollupConfig(max_age_ns=10 * S))
+    db.write([Point("m", {"hostname": "h"}, {"v": 1.0}, 1 * S)])
+    # rollup windows far older than max_age relative to *wall clock* now
+    db.enforce_retention()
+    assert db.rollup_aggregate("m", "v", window_ns=S) == {}
+
+
+# -- concurrency regression ---------------------------------------------------
+
+
+def test_concurrent_batch_ingest_select_retention():
+    """One writer batch-ingesting through the router while readers run
+    select/aggregate and retention enforcement: no exceptions, counts
+    consistent (tsdb.py's thread-safety promise)."""
+    server = TSDBServer()
+    router = MetricsRouter(server, per_job_db=True)
+    router.job_start("j1", "alice", [f"h{i}" for i in range(4)])
+    db = server.db("global")
+    errors = []
+    stop = threading.Event()
+    N_BATCHES, BATCH = 200, 50
+
+    def writer():
+        try:
+            for b in range(N_BATCHES):
+                lines = encode_batch([
+                    Point("hpm", {"hostname": f"h{i % 4}"},
+                          {"mfu": 0.4, "step": float(b * BATCH + i)},
+                          (b * BATCH + i) * 10_000_000)
+                    for i in range(BATCH)])
+                router.write_lines(lines)
+        except Exception as e:          # noqa: BLE001
+            errors.append(e)
+        finally:
+            stop.set()
+
+    def reader():
+        try:
+            while not stop.is_set():
+                db.select("hpm", ["mfu"], {"jobid": "j1"})
+                db.aggregate("hpm", "mfu", agg="mean", window_ns=S)
+                db.aggregate("hpm", "step", agg="count",
+                             group_by_tag="hostname")
+        except Exception as e:          # noqa: BLE001
+            errors.append(e)
+
+    def reaper():
+        try:
+            while not stop.is_set():
+                db.enforce_retention(max_points_per_series=500)
+        except Exception as e:          # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer)] + \
+        [threading.Thread(target=reader) for _ in range(2)] + \
+        [threading.Thread(target=reaper)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+    assert router.stats.points_in == N_BATCHES * BATCH
+    assert router.stats.points_out == N_BATCHES * BATCH
+    # cumulative count: every metric point + the job_start event
+    assert db.point_count() == N_BATCHES * BATCH + 1
+    assert db.stored_points() <= N_BATCHES * BATCH + 1
+    # rollups saw every point even though retention culled raw storage
+    total = db.aggregate("hpm", "mfu", agg="count", window_ns=60 * S,
+                         use_rollups=True)
+    assert sum(sum(v) for _, v in total.values()) == N_BATCHES * BATCH

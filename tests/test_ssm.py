@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # minimal images: property tests skip, rest run
+    from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.kernels.ref import ssd_ref, wkv6_ref

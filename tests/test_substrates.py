@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # minimal images: property tests skip, rest run
+    from _hypothesis_compat import given, settings, st
 
 from repro.ckpt import CheckpointManager, load_checkpoint, save_checkpoint
 from repro.ckpt.checkpoint import available_steps
