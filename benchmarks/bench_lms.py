@@ -163,6 +163,134 @@ def bench_rollup_query(n=120_000, hosts=8):
              f"{us_raw / us_roll:.1f}x vs raw (target >=5x)")]
 
 
+def bench_sharded_write_path(n=24_000, batch=500, writers=4, readers=1,
+                             seed_pts=200_000):
+    """THE sharded-ingest claim (ISSUE 2): batched-write throughput under
+    concurrent scatter-gather query load, 4 shards vs the single-lock
+    baseline — same writer+reader workload, only the shard count changes.
+
+    The reader is a dashboard-style windowed merge over a long metric
+    history: on one ``Database`` it holds THE lock for the whole
+    O(#windows) merge and every writer convoys behind every query; with
+    4 shards it holds one shard lock at a time (~1/4 the duration) while
+    writers land on the other shards.  Acceptance bar: >= 2x."""
+    import threading
+
+    hosts = [f"h{i}" for i in range(2 * writers)]
+    per_writer = n // writers
+    wall = {}
+    for shards in (1, 4):
+        server = TSDBServer(shards=shards)
+        router = MetricsRouter(server)
+        router.job_start("j", "u", hosts)
+        db = server.db("global")
+        # seed a long history: the dashboard merges below then hold the
+        # (shard) lock for O(#windows) per query
+        seed = [Point("hist", {"hostname": hosts[i % len(hosts)]},
+                      {"v": float(i)}, i * 50_000_000)
+                for i in range(seed_pts)]
+        for i in range(0, seed_pts, 1000):
+            db.write(seed[i:i + 1000])
+        payloads = {
+            w: [[Point("hpm", {"hostname": hosts[2 * w + (i % 2)]},
+                       {"mfu": 0.41, "step": float(j + i)}, (j + i) * 10**7)
+                 for i in range(batch)]
+                for j in range(0, per_writer, batch)]
+            for w in range(writers)}
+        stop = threading.Event()
+
+        def reader():
+            # dashboard load: the window merge runs entirely under the
+            # (shard) lock — the worst case for writer convoying
+            while not stop.is_set():
+                db.rollup_window_partials("hist", "v",
+                                          group_by_tag="hostname",
+                                          window_ns=10**9)
+
+        def writer(w):
+            for pts in payloads[w]:
+                router.write(pts)
+
+        rthreads = [threading.Thread(target=reader, daemon=True)
+                    for _ in range(readers)]
+        wthreads = [threading.Thread(target=writer, args=(w,))
+                    for w in range(writers)]
+        for t in rthreads:
+            t.start()
+        t0 = time.perf_counter()
+        for t in wthreads:
+            t.start()
+        for t in wthreads:
+            t.join()
+        wall[shards] = time.perf_counter() - t0
+        stop.set()
+        for t in rthreads:
+            t.join()
+        assert db.point_count() == seed_pts + writers * per_writer + 1
+    out = [(f"sharded_write_{s}shards", wall[s] / n * 1e6,
+            f"{n / wall[s]:.0f} pts/s under {readers} query threads")
+           for s in (1, 4)]
+    out.append(("sharded_write_speedup", wall[4] / n * 1e6,
+                f"{wall[1] / wall[4]:.1f}x vs single lock (target >=2x)"))
+    return out
+
+
+def bench_federated_query(n=120_000, hosts=8):
+    """Scatter-gather query cost: windowed rollup-served aggregates
+    federated across 4 local shards vs one Database, plus the same query
+    federated across 2 LMS router instances over HTTP."""
+    from repro.core import Database, FederatedQuery, HttpQueryClient
+    from repro.core.httpd import LMSHttpServer
+    from repro.core.shard import ShardedDatabase
+
+    pts = [Point("hpm", {"hostname": f"h{i % hosts}"},
+                 {"mfu": 0.2 + (i % 100) / 500.0}, i * 10_000_000)
+           for i in range(n)]
+    single = Database("bench1")
+    sharded = ShardedDatabase("bench4", shards=4)
+    for db in (single, sharded):
+        for i in range(0, n, 1000):
+            db.write(pts[i:i + 1000])
+    window = 10 * 10**9
+    q = 20
+
+    def run_single():
+        for _ in range(q):
+            single.aggregate("hpm", "mfu", agg="mean", window_ns=window,
+                             group_by_tag="hostname", use_rollups=True)
+
+    def run_sharded():
+        for _ in range(q):
+            sharded.aggregate("hpm", "mfu", agg="mean", window_ns=window,
+                              group_by_tag="hostname", use_rollups=True)
+
+    us_one = _time(run_single, q, reps=2)
+    us_fed = _time(run_sharded, q, reps=2)
+    out = [("federated_query_single", us_one, f"{n} pts, rollup-served"),
+           ("federated_query_4shards", us_fed,
+            f"{us_fed / us_one:.2f}x single (scatter-gather merge cost)")]
+    # cross-instance federation over HTTP: half the hosts per instance
+    routers = [MetricsRouter(TSDBServer(shards=2)) for _ in range(2)]
+    for i in range(0, n, 1000):
+        chunk = pts[i:i + 1000]
+        routers[0].write([p for p in chunk
+                          if int(p.tags["hostname"][1:]) < hosts // 2])
+        routers[1].write([p for p in chunk
+                          if int(p.tags["hostname"][1:]) >= hosts // 2])
+    with LMSHttpServer(routers[0]) as sa, LMSHttpServer(routers[1]) as sb:
+        fed = FederatedQuery([HttpQueryClient(sa.url),
+                              HttpQueryClient(sb.url)])
+
+        def run_http():
+            for _ in range(5):
+                fed.aggregate("hpm", "mfu", agg="mean", window_ns=window,
+                              group_by_tag="hostname", use_rollups=True)
+        us_http = _time(run_http, 5, reps=2)
+    out.append(("federated_query_http_2instances", us_http,
+                f"2 routers x 2 shards, {n} pts total"))
+    return out
+
+
 def bench_detection(n=100_000):
     """Fig. 4 rule evaluation: offline series scan + streaming analyzer."""
     times = [i * 10**9 for i in range(n)]
@@ -238,5 +366,6 @@ def bench_monitoring_overhead(steps=30):
 
 
 ALL = [bench_line_protocol, bench_ingest, bench_batched_write_path,
-       bench_wire_ingest, bench_router_tagging, bench_rollup_query,
-       bench_detection, bench_dashboard, bench_monitoring_overhead]
+       bench_sharded_write_path, bench_federated_query, bench_wire_ingest,
+       bench_router_tagging, bench_rollup_query, bench_detection,
+       bench_dashboard, bench_monitoring_overhead]

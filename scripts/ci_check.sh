@@ -1,21 +1,31 @@
 #!/usr/bin/env bash
 # CI gate: clean test collection (hard requirement — a module that fails
-# to import takes its whole file's tests with it silently) plus the fast
-# unit tier under a timeout.  See tests/README.md for the tier layout.
+# to import takes its whole file's tests with it silently), the fast
+# unit tier under a timeout, then the bounded stress/property tier.
+# See tests/README.md for the tier layout.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "[1/2] collection gate (pytest --collect-only)"
+echo "[1/3] collection gate (pytest --collect-only)"
 python -m pytest --collect-only -q tests/ > /dev/null
 
-echo "[2/2] fast unit tier (timeout ${CI_FAST_TIMEOUT:-600}s)"
-timeout "${CI_FAST_TIMEOUT:-600}" python -m pytest -q \
+echo "[2/3] fast unit tier (timeout ${CI_FAST_TIMEOUT:-600}s)"
+timeout "${CI_FAST_TIMEOUT:-600}" python -m pytest -q -m "not stress" \
     tests/test_line_protocol.py \
     tests/test_tsdb.py \
     tests/test_rollup.py \
+    tests/test_shard.py \
     tests/test_router.py \
+    tests/test_federation.py \
     tests/test_lms_stack.py \
     tests/test_analysis.py
+
+echo "[3/3] stress/property tier (bounded; timeout ${CI_STRESS_TIMEOUT:-600}s)"
+# Bounded example counts keep CI deterministic-ish and quick; raise the
+# bounds locally to soak (LMS_STRESS_SCALE=10 LMS_PROPERTY_EXAMPLES=500).
+LMS_STRESS_SCALE="${LMS_STRESS_SCALE:-1}" \
+LMS_PROPERTY_EXAMPLES="${LMS_PROPERTY_EXAMPLES:-30}" \
+timeout "${CI_STRESS_TIMEOUT:-600}" python -m pytest -q -m stress tests/
 
 echo "ci_check: OK"

@@ -26,20 +26,24 @@ from repro.core.perf_groups import (GROUPS, HBM_BW, ICI_BW, PEAK_FLOPS,
                                     PerfGroup, derive_all, parse_group)
 from repro.core.rollup import (DEFAULT_TIERS_NS, ROLLUP_AGGS, RollupConfig,
                                SeriesRollups, WindowAgg)
+from repro.core.httpd import HttpQueryClient
 from repro.core.router import MetricsRouter
+from repro.core.shard import FederatedQuery, ShardedDatabase, shard_index
 from repro.core.tsdb import Database, TSDBServer
 from repro.core.usermetric import UserMetric
 
 __all__ = [
     "DEFAULT_TIERS_NS", "DEFAULT_TREE", "Database", "DashboardAgent",
-    "Finding", "GROUPS", "HBM_BW", "HostAgent", "HttpSink", "ICI_BW",
-    "JobInfo", "JobRegistry", "LMSHttpServer", "MetricsRouter",
-    "MonitoringStack", "PEAK_FLOPS", "PerfGroup", "Point", "ROLLUP_AGGS",
-    "RollupConfig", "RooflineAnalyzer", "RooflineResult", "SeriesRollups",
-    "StreamAnalyzer", "TSDBServer", "ThresholdRule", "UserMetric",
-    "WindowAgg", "classify_job", "decode_batch", "decode_line",
-    "default_rules", "derive_all", "encode_batch", "encode_point",
-    "evaluate_rules_on_db", "now_ns", "parse_group",
+    "FederatedQuery", "Finding", "GROUPS", "HBM_BW", "HostAgent",
+    "HttpQueryClient", "HttpSink", "ICI_BW", "JobInfo", "JobRegistry",
+    "LMSHttpServer", "MetricsRouter", "MonitoringStack", "PEAK_FLOPS",
+    "PerfGroup", "Point", "ROLLUP_AGGS", "RollupConfig",
+    "RooflineAnalyzer", "RooflineResult", "SeriesRollups",
+    "ShardedDatabase", "StreamAnalyzer", "TSDBServer", "ThresholdRule",
+    "UserMetric", "WindowAgg", "classify_job", "decode_batch",
+    "decode_line", "default_rules", "derive_all", "encode_batch",
+    "encode_point", "evaluate_rules_on_db", "now_ns", "parse_group",
+    "shard_index",
 ]
 
 
@@ -60,8 +64,8 @@ class MonitoringStack:
     def __init__(self, *, per_job_db: bool = True, per_user_db: bool = False,
                  rules: Optional[list] = None, out_dir: str = "lms_out",
                  persist_dir: Optional[str] = None,
-                 serve_http: bool = False):
-        self.backend = TSDBServer(persist_dir=persist_dir)
+                 serve_http: bool = False, shards: int = 1):
+        self.backend = TSDBServer(persist_dir=persist_dir, shards=shards)
         self.router = MetricsRouter(self.backend, per_job_db=per_job_db,
                                     per_user_db=per_user_db)
         self.analyzer = StreamAnalyzer(

@@ -131,6 +131,12 @@ def evaluate_rules_on_db(db, rules: list, *, jobid: Optional[str] = None,
                          use_rollups: object = "auto") -> list:
     """Run every rule over every matching host series in a Database.
 
+    ``db`` is duck-typed: a plain ``Database``, a sharded one
+    (``repro.core.shard.ShardedDatabase``) or a ``FederatedQuery`` view
+    all work — ``rollup_series``/``select`` federate by concatenation
+    (each host series lives on exactly one shard), so pathological-job
+    findings are shard-transparent.
+
     With ``use_rollups`` (the default), rule evaluation reads the finest
     rollup tier — per-window means with window starts as timestamps —
     instead of rescanning raw points, so the cost is O(#windows) and the

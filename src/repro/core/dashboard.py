@@ -10,6 +10,13 @@ Air-gapped adaptation (DESIGN.md §10): we emit (a) Grafana-compatible
 dashboard JSON using the same template mechanism and (b) a self-contained
 static HTML rendering with inline SVG sparklines, so the dashboards are
 viewable without any external service.
+
+The agent is shard-transparent: it reads only the Database-shaped query
+surface (``measurements``/``field_keys``/``select``/``rollup_*``), so
+``backend.db(name)`` may hand back a plain ``Database``, a hash-
+partitioned ``repro.core.shard.ShardedDatabase`` or any federated view —
+per-job dashboards render identically either way (scatter-gather happens
+below this layer).
 """
 
 from __future__ import annotations
@@ -22,7 +29,7 @@ from typing import Optional
 
 from repro.core.analysis import evaluate_rules_on_db, default_rules
 from repro.core.jobs import JobInfo
-from repro.core.tsdb import Database, TSDBServer
+from repro.core.tsdb import TSDBServer
 
 # --------------------------------------------------------------------------
 # Templates (Grafana-style JSON fragments with ${...} placeholders)
@@ -196,8 +203,9 @@ class DashboardAgent:
     # tiers are preferred once a panel would exceed it
     MAX_PANEL_POINTS = 400
 
-    def _series_for(self, db: Database, meas: str, fieldname: str,
+    def _series_for(self, db, meas: str, fieldname: str,
                     jobid: str, host: Optional[str] = None):
+        # ``db`` is any Database-shaped view (plain, sharded, federated)
         tags = {"jobid": jobid}
         if host:
             tags["hostname"] = host

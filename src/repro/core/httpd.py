@@ -11,17 +11,37 @@ curl cronjobs, Ganglia pull-proxies in the paper) integrates unchanged:
     GET  /ping
     GET  /query?db=&m=&field=&agg=  simple JSON query (dashboards/tests);
                                     &window_ns= adds windowed aggregation
-                                    served from the rollup tiers
+                                    served from the rollup tiers;
+                                    &t_min=/&t_max= bound the range;
+                                    &rollups=auto|force|raw picks the path;
+                                    &partials=1 returns *mergeable* partial
+                                    aggregates (WindowAgg state) — the
+                                    scatter half of cross-instance
+                                    federation (``repro.core.shard``);
+                                    &partials=rollup forces the rollup-tier
+                                    windowed form (window_ns defaults to
+                                    the finest tier, survives retention)
+    GET  /meta?what=measurements    introspection (also what=fields&m=,
+                                    what=tags&m=&tag=) for remote clients
     GET  /dbs                       list databases
 
-Client: :class:`HttpSink` POSTs batched lines — the transport used by the
+The server is a ``ThreadingHTTPServer``: each request runs on its own
+thread, so with a sharded backend (``TSDBServer(shards=N)``) concurrent
+``/write`` POSTs from different hosts really do take different shard
+locks, and ``/query`` scatter-gathers across the shards.
+
+Clients: :class:`HttpSink` POSTs batched lines — the transport used by the
 out-of-process ``usermetric_cli`` and by forward agents.
+:class:`HttpQueryClient` is the read side: a Database-shaped query surface
+over a remote LMS instance, usable directly or as a
+``repro.core.shard.FederatedQuery`` backend (multi-router federation).
 """
 
 from __future__ import annotations
 
 import json
 import threading
+import urllib.error
 import urllib.parse
 import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -29,6 +49,12 @@ from typing import Optional
 
 from repro.core.line_protocol import Point, encode_batch
 from repro.core.router import MetricsRouter
+from repro.core.shard import (decode_partials, encode_partials,
+                              finalize_scalar, finalize_windowed)
+from repro.core.tsdb import Series
+
+_ROLLUPS_PARAM = {"auto": "auto", "force": True, "raw": False}
+_UNSET = object()           # HttpQueryClient's not-yet-fetched sentinel
 
 
 class LMSRequestHandler(BaseHTTPRequestHandler):
@@ -59,7 +85,9 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
 
     def _do_get(self):
         url = urllib.parse.urlparse(self.path)
-        q = dict(urllib.parse.parse_qsl(url.query))
+        # keep_blank_values: a tag filter on an empty tag value (tag_k=)
+        # must filter, not silently vanish
+        q = dict(urllib.parse.parse_qsl(url.query, keep_blank_values=True))
         if url.path == "/ping":
             self._send(204)
         elif url.path == "/dbs":
@@ -69,19 +97,85 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
             meas = q.get("m", "")
             fieldname = q.get("field", "value")
             tags = {k[4:]: v for k, v in q.items() if k.startswith("tag_")}
-            if "agg" in q or "window_ns" in q:
-                window = int(q["window_ns"]) if "window_ns" in q else None
-                out = db.aggregate(meas, fieldname, agg=q.get("agg", "mean"),
-                                   tags=tags,
-                                   group_by_tag=q.get("group_by"),
-                                   window_ns=window)
-                self._send(200, {"result": out})
-            else:
-                series = db.select(meas, [fieldname], tags)
+            t_min = int(q["t_min"]) if "t_min" in q else None
+            t_max = int(q["t_max"]) if "t_max" in q else None
+            window = int(q["window_ns"]) if "window_ns" in q else None
+            rollups = q.get("rollups", "auto")
+            if rollups not in _ROLLUPS_PARAM:
+                raise ValueError(f"unknown rollups={rollups!r} "
+                                 "(expected auto|force|raw)")
+            use_rollups = _ROLLUPS_PARAM[rollups]
+            if q.get("partials") == "rollup":
+                # always windowed: window_ns=None means the finest tier,
+                # exactly like the local rollup_window_partials default
+                parts = db.rollup_window_partials(
+                    meas, fieldname, tags=tags, t_min=t_min, t_max=t_max,
+                    group_by_tag=q.get("group_by"), window_ns=window)
+                self._send(200, {"windowed": True,
+                                 "partials": encode_partials(parts, True)})
+            elif q.get("partials") in ("1", "true"):
+                parts = db.aggregate_partials(
+                    meas, fieldname, tags=tags, t_min=t_min, t_max=t_max,
+                    group_by_tag=q.get("group_by"), window_ns=window,
+                    use_rollups=use_rollups)
+                self._send(200, {
+                    "windowed": window is not None,
+                    "partials": encode_partials(parts, window is not None)})
+            elif q.get("rollup_series") in ("1", "true"):
+                series = db.rollup_series(meas, fieldname,
+                                          agg=q.get("agg", "mean"),
+                                          tags=tags, window_ns=window)
                 self._send(200, {"series": [
                     {"tags": s.tags, "times": s.times,
                      "values": s.values.get(fieldname, [])}
                     for s in series]})
+            elif "agg" in q or window is not None:
+                out = db.aggregate(meas, fieldname, agg=q.get("agg", "mean"),
+                                   tags=tags, t_min=t_min, t_max=t_max,
+                                   group_by_tag=q.get("group_by"),
+                                   window_ns=window,
+                                   use_rollups=use_rollups)
+                self._send(200, {"result": out})
+            elif "field" in q:
+                series = db.select(meas, [fieldname], tags, t_min, t_max)
+                self._send(200, {"series": [
+                    {"tags": s.tags, "times": s.times,
+                     "values": s.values.get(fieldname, [])}
+                    for s in series]})
+            else:
+                # no field param: all fields per series (events etc.)
+                series = db.select(meas, None, tags, t_min, t_max)
+                self._send(200, {"series": [
+                    {"tags": s.tags, "times": s.times, "fields": s.values}
+                    for s in series]})
+        elif url.path == "/meta":
+            db = self.router.backend.db(q.get("db", "global"))
+            what = q.get("what", "measurements")
+            if what == "measurements":
+                self._send(200, {"values": db.measurements()})
+            elif what == "fields":
+                self._send(200, {"values": db.field_keys(q.get("m", ""))})
+            elif what == "tags":
+                self._send(200, {"values": db.tag_values(q.get("m", ""),
+                                                         q.get("tag", ""))})
+            elif what == "rollup_config":
+                cfg = getattr(db, "rollup_config", None)
+                self._send(200, {"rollup_config": None if cfg is None else {
+                    "tiers_ns": list(cfg.tiers_ns),
+                    "max_age_ns": cfg.max_age_ns}})
+            elif what == "point_count":
+                self._send(200, {"count": db.point_count()})
+            elif what == "stored_points":
+                self._send(200, {"count": db.stored_points()})
+            elif what == "rollup_window_count":
+                tier = int(q["tier_ns"]) if "tier_ns" in q else None
+                tags = {k[4:]: v for k, v in q.items()
+                        if k.startswith("tag_")}
+                self._send(200, {"count": db.rollup_window_count(
+                    q.get("m", ""), q.get("field", "value"), tags=tags,
+                    tier_ns=tier)})
+            else:
+                self._send(400, {"error": f"unknown meta {what!r}"})
         else:
             self._send(404, {"error": "not found"})
 
@@ -176,3 +270,174 @@ class HttpSink:
             method="POST", headers={"Content-Type": "application/json"})
         with urllib.request.urlopen(req, timeout=self.timeout_s) as r:
             return r.status
+
+
+class HttpQueryClient:
+    """Database-shaped query surface over a remote LMS ``/query`` endpoint.
+
+    Exposes the partials protocol (``aggregate_partials`` /
+    ``rollup_window_partials``) plus ``select``/``aggregate``/meta lookups,
+    so an instance can stand in for a local ``Database`` inside a
+    ``repro.core.shard.FederatedQuery`` — scatter-gather across multiple
+    LMS router instances, merged with exact WindowAgg semantics.
+
+    ``select`` fetches one field per request (the ``/query`` series form is
+    single-field); pass ``fields=[name]``.
+    """
+
+    # FederatedQuery fans remote backends out concurrently (a federated
+    # query costs ~the slowest instance, not the sum of round-trips)
+    is_remote = True
+
+    def __init__(self, url: str, db: str = "global", timeout_s: float = 5.0):
+        self.url = url.rstrip("/")
+        self.db = db
+        self.timeout_s = timeout_s
+        self._rollup_config = _UNSET
+
+    @property
+    def rollup_config(self):
+        """The remote database's rollup layout (fetched once, cached) —
+        lets rollup-aware readers (dashboards, rule evaluation) treat a
+        remote instance exactly like a local database."""
+        if self._rollup_config is _UNSET:
+            d = self._get("/meta", {"db": self.db,
+                                    "what": "rollup_config"})["rollup_config"]
+            from repro.core.rollup import RollupConfig
+            self._rollup_config = None if d is None else RollupConfig(
+                tiers_ns=tuple(d["tiers_ns"]), max_age_ns=d["max_age_ns"])
+        return self._rollup_config
+
+    def _get(self, path: str, params: dict) -> dict:
+        qs = urllib.parse.urlencode(
+            {k: v for k, v in params.items() if v is not None})
+        try:
+            with urllib.request.urlopen(f"{self.url}{path}?{qs}",
+                                        timeout=self.timeout_s) as r:
+                return json.loads(r.read())
+        except urllib.error.HTTPError as e:
+            # surface the server's error (e.g. an unservable forced-rollup
+            # window) as the same ValueError the local path raises
+            try:
+                msg = json.loads(e.read()).get("error", str(e))
+            except Exception:               # noqa: BLE001
+                msg = str(e)
+            raise ValueError(f"remote query failed: {msg}") from None
+
+    def _query_params(self, measurement, field, tags, t_min, t_max,
+                      group_by_tag, window_ns, use_rollups="auto") -> dict:
+        params = {"db": self.db, "m": measurement, "field": field,
+                  "t_min": t_min, "t_max": t_max, "group_by": group_by_tag,
+                  "window_ns": window_ns}
+        if use_rollups != "auto":
+            params["rollups"] = "force" if use_rollups is True else "raw"
+        for k, v in (tags or {}).items():
+            params[f"tag_{k}"] = v
+        return params
+
+    def aggregate_partials(self, measurement: str, field: str, *,
+                           tags: Optional[dict] = None,
+                           t_min: Optional[int] = None,
+                           t_max: Optional[int] = None,
+                           group_by_tag: Optional[str] = None,
+                           window_ns: Optional[int] = None,
+                           use_rollups: object = "auto") -> dict:
+        params = self._query_params(measurement, field, tags, t_min, t_max,
+                                    group_by_tag, window_ns, use_rollups)
+        params["partials"] = "1"
+        resp = self._get("/query", params)
+        return decode_partials(resp["partials"], resp["windowed"])
+
+    def rollup_window_partials(self, measurement: str, field: str, *,
+                               tags: Optional[dict] = None,
+                               t_min: Optional[int] = None,
+                               t_max: Optional[int] = None,
+                               group_by_tag: Optional[str] = None,
+                               window_ns: Optional[int] = None) -> dict:
+        params = self._query_params(measurement, field, tags, t_min, t_max,
+                                    group_by_tag, window_ns)
+        params["partials"] = "rollup"
+        resp = self._get("/query", params)
+        return decode_partials(resp["partials"], resp["windowed"])
+
+    def aggregate(self, measurement: str, field: str, *, agg: str = "mean",
+                  tags: Optional[dict] = None, t_min: Optional[int] = None,
+                  t_max: Optional[int] = None,
+                  group_by_tag: Optional[str] = None,
+                  window_ns: Optional[int] = None,
+                  use_rollups: object = "auto"):
+        merged = self.aggregate_partials(
+            measurement, field, tags=tags, t_min=t_min, t_max=t_max,
+            group_by_tag=group_by_tag, window_ns=window_ns,
+            use_rollups=use_rollups)
+        if window_ns is None:
+            return finalize_scalar(merged, agg)
+        return finalize_windowed(merged, agg)
+
+    def select(self, measurement: str, fields: Optional[list] = None,
+               tags: Optional[dict] = None, t_min: Optional[int] = None,
+               t_max: Optional[int] = None) -> list:
+        if fields is not None and len(fields) != 1:
+            raise ValueError("HttpQueryClient.select takes one field per "
+                             f"request (or None for all), got {fields!r}")
+        fieldname = fields[0] if fields else None
+        params = self._query_params(measurement, fieldname, tags, t_min,
+                                    t_max, None, None)
+        resp = self._get("/query", params)
+        if fieldname is None:       # all-fields form (events etc.)
+            return [Series(measurement, s["tags"], s["times"], s["fields"])
+                    for s in resp["series"]]
+        return [Series(measurement, s["tags"], s["times"],
+                       {fieldname: s["values"]})
+                for s in resp["series"]]
+
+    def rollup_aggregate(self, measurement: str, field: str, *,
+                         agg: str = "mean", tags: Optional[dict] = None,
+                         t_min: Optional[int] = None,
+                         t_max: Optional[int] = None,
+                         group_by_tag: Optional[str] = None,
+                         window_ns: Optional[int] = None):
+        return finalize_windowed(self.rollup_window_partials(
+            measurement, field, tags=tags, t_min=t_min, t_max=t_max,
+            group_by_tag=group_by_tag, window_ns=window_ns), agg)
+
+    def rollup_series(self, measurement: str, field: str, *,
+                      agg: str = "mean", tags: Optional[dict] = None,
+                      window_ns: Optional[int] = None) -> list:
+        params = self._query_params(measurement, field, tags, None, None,
+                                    None, window_ns)
+        params["rollup_series"] = "1"
+        params["agg"] = agg
+        resp = self._get("/query", params)
+        return [Series(measurement, s["tags"], s["times"],
+                       {field: s["values"]})
+                for s in resp["series"]]
+
+    def rollup_window_count(self, measurement: str, field: str, *,
+                            tags: Optional[dict] = None,
+                            tier_ns: Optional[int] = None) -> int:
+        params = {"db": self.db, "what": "rollup_window_count",
+                  "m": measurement, "field": field, "tier_ns": tier_ns}
+        for k, v in (tags or {}).items():
+            params[f"tag_{k}"] = v
+        return self._get("/meta", params)["count"]
+
+    def point_count(self) -> int:
+        return self._get("/meta", {"db": self.db,
+                                   "what": "point_count"})["count"]
+
+    def stored_points(self) -> int:
+        return self._get("/meta", {"db": self.db,
+                                   "what": "stored_points"})["count"]
+
+    def measurements(self) -> list:
+        return self._get("/meta", {"db": self.db,
+                                   "what": "measurements"})["values"]
+
+    def field_keys(self, measurement: str) -> list:
+        return self._get("/meta", {"db": self.db, "what": "fields",
+                                   "m": measurement})["values"]
+
+    def tag_values(self, measurement: str, tag: str) -> list:
+        return self._get("/meta", {"db": self.db, "what": "tags",
+                                   "m": measurement, "tag": tag})["values"]

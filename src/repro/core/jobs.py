@@ -35,22 +35,46 @@ class JobInfo:
 
 
 class JobRegistry:
-    """Tracks jobs + the host->tags store used by the router."""
+    """Tracks jobs + the host->job store used by the router.
+
+    Per host the registry keeps a *stack* of allocations (most recent
+    last), not a single tags dict: schedulers do overlap jobs on a host
+    (shared nodes, epilog/prolog races), and the old flat store had two
+    bugs — ``start`` of a second job silently overwrote the first job's
+    enrichment for good, and ``end`` of the newer job dropped the host
+    from the store entirely instead of re-exposing the older job's tags.
+    ``tags_for_host`` now resolves to the most recently started job still
+    running on that host.
+    """
 
     def __init__(self):
         self._lock = threading.RLock()
         self._jobs: dict = {}
-        self._host_tags: dict = {}        # hostname -> tags dict
+        self._host_jobs: dict = {}        # hostname -> [job_id, ...] stack
 
     def start(self, job_id: str, user: str, hosts: list,
               tags: Optional[dict] = None, ts: Optional[int] = None) -> JobInfo:
         with self._lock:
+            # restarted/requeued job id: drop the OLD allocation from every
+            # host it held (the new one may be smaller — de-allocated hosts
+            # must stop receiving the job's tags)
+            old = self._jobs.get(job_id)
+            if old is not None:
+                self._drop_from_hosts(job_id, old.hosts)
             job = JobInfo(job_id, user, list(hosts), dict(tags or {}),
                           ts if ts is not None else now_ns())
             self._jobs[job_id] = job
             for h in hosts:
-                self._host_tags[h] = job.all_tags()
+                self._host_jobs.setdefault(h, []).append(job_id)
             return job
+
+    def _drop_from_hosts(self, job_id: str, hosts: list):
+        for h in hosts:
+            stack = self._host_jobs.get(h)
+            if stack and job_id in stack:
+                stack.remove(job_id)
+                if not stack:
+                    del self._host_jobs[h]
 
     def end(self, job_id: str, ts: Optional[int] = None) -> Optional[JobInfo]:
         with self._lock:
@@ -58,14 +82,19 @@ class JobRegistry:
             if job is None:
                 return None
             job.end_ns = ts if ts is not None else now_ns()
-            for h in job.hosts:
-                if self._host_tags.get(h, {}).get("jobid") == job_id:
-                    del self._host_tags[h]
+            self._drop_from_hosts(job_id, job.hosts)
             return job
 
     def tags_for_host(self, hostname: str) -> dict:
         with self._lock:
-            return dict(self._host_tags.get(hostname, {}))
+            stack = self._host_jobs.get(hostname)
+            if not stack:
+                return {}
+            for jid in reversed(stack):
+                job = self._jobs.get(jid)
+                if job is not None and job.running:
+                    return job.all_tags()
+            return {}
 
     def get(self, job_id: str) -> Optional[JobInfo]:
         with self._lock:

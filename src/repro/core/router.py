@@ -29,11 +29,36 @@ from repro.core.tsdb import TSDBServer
 
 @dataclass
 class RouterStats:
+    """Monotonic ingest counters.
+
+    Mutated only through :meth:`add` (plain ``+=`` on a shared dataclass
+    is a read-modify-write race under concurrent batched writers); read
+    via :meth:`snapshot` — both take the internal lock, so a snapshot is
+    a consistent cut (e.g. ``points_in == points_out + dropped_no_host``
+    holds between batches).
+    """
+
     points_in: int = 0
     points_out: int = 0
     signals: int = 0
     parse_errors: int = 0
     dropped_no_host: int = 0
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def add(self, **deltas: int):
+        with self._lock:
+            for k, v in deltas.items():
+                setattr(self, k, getattr(self, k) + v)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"points_in": self.points_in,
+                    "points_out": self.points_out,
+                    "signals": self.signals,
+                    "parse_errors": self.parse_errors,
+                    "dropped_no_host": self.dropped_no_host}
 
 
 class MetricsRouter:
@@ -81,7 +106,7 @@ class MetricsRouter:
     def job_start(self, job_id: str, user: str, hosts: list,
                   tags: Optional[dict] = None, ts: Optional[int] = None):
         job = self.jobs.start(job_id, user, hosts, tags, ts)
-        self.stats.signals += 1
+        self.stats.add(signals=1)
         # signals are stored as events -> dashboard annotations (paper §III.B)
         self.backend.write([Point(
             "job_event", {"jobid": job_id, "username": user},
@@ -92,7 +117,7 @@ class MetricsRouter:
 
     def job_end(self, job_id: str, ts: Optional[int] = None):
         job = self.jobs.end(job_id, ts)
-        self.stats.signals += 1
+        self.stats.add(signals=1)
         if job is not None:
             self.backend.write([Point(
                 "job_event", {"jobid": job_id, "username": job.user},
@@ -107,7 +132,7 @@ class MetricsRouter:
         try:
             points = decode_batch(data)
         except Exception:
-            self.stats.parse_errors += 1
+            self.stats.add(parse_errors=1)
             raise
         self.write(points)
         return len(points)
@@ -117,15 +142,15 @@ class MetricsRouter:
             points = [points]
         elif not isinstance(points, (list, tuple)):
             points = list(points)
-        self.stats.points_in += len(points)
         # batch fast path: the tag-store lookup (a lock per call) is done
         # once per distinct host in the batch, not once per point
         host_tags: dict = {}
         enriched = []
+        dropped = 0
         for p in points:
             host = p.tags.get(self.HOST_TAG)
             if host is None and self.require_host_tag:
-                self.stats.dropped_no_host += 1
+                dropped += 1
                 continue
             if p.timestamp is None:
                 p = Point(p.measurement, p.tags, p.fields, now_ns())
@@ -136,9 +161,13 @@ class MetricsRouter:
                 if job_tags is None:
                     job_tags = host_tags[host] = self.jobs.tags_for_host(host)
             enriched.append(p.with_tags(job_tags))
+        self.stats.add(points_in=len(points), dropped_no_host=dropped,
+                       points_out=len(enriched))
         if not enriched:
             return
-        self.stats.points_out += len(enriched)
+        # the backend groups the batch per series — and, for a sharded
+        # database, per shard — so this call contends only on the shards
+        # the batch's hosts actually map to
         self.backend.write(enriched, self.global_db)
         # duplication into user/job scoped databases (paper §III.B)
         if self.per_user_db or self.per_job_db:

@@ -1,0 +1,412 @@
+"""Sharded TSDB + federated scatter-gather queries — the multi-node LMS.
+
+The paper (§III.C) runs one router and one InfluxDB, sized for "small to
+medium sized commodity clusters"; job-specific monitoring at larger scale
+(MPCDF's system, PerSyst) partitions collection and layers aggregation on
+top.  This module is that layer for the embedded TSDB:
+
+* :class:`ShardedDatabase` — hash-partitions series keys across N
+  independent :class:`repro.core.tsdb.Database` shards.  Each shard has
+  its own lock, rollup tiers and retention, so concurrent batched writes
+  from different hosts land on different shards and no longer contend on
+  a single ``RLock``.  The full ``Database`` query surface is preserved,
+  so the HTTP endpoint, the dashboard agent and the analysis rules are
+  shard-transparent.
+
+* :class:`FederatedQuery` — scatter-gather over any mix of *backends*
+  (local ``Database``/``ShardedDatabase`` objects or
+  ``repro.core.httpd.HttpQueryClient`` remotes, i.e. other LMS router
+  instances).  Queries fan out, partial results come back as mergeable
+  :class:`repro.core.rollup.WindowAgg` state, and the gather side merges
+  them with the existing rollup merge semantics (sums add, mins min,
+  ``last`` = lexicographic ``(t, v)`` max, ``mean`` = merged sum/count) —
+  so federated answers are **exactly** what a single database fed the
+  union of the points would return, for every agg in ``ROLLUP_AGGS``.
+
+Sharding invariants
+-------------------
+
+* A series key is ``(measurement, sorted(tags.items()))``; the shard
+  index is ``crc32(key) % N`` (:func:`shard_index`) — stable across
+  processes and Python hash randomization, so a persisted/replayed stream
+  lands on the same shards.
+* Every series lives on exactly one shard: ``select`` and
+  ``rollup_series`` federate by *concatenation*, no merging needed.
+* Windowed state is epoch-aligned (``t - t % window_ns``) on every shard,
+  so per-window partials from different shards line up key-for-key and
+  merge losslessly (see ``rollup.py`` design notes).
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Iterable, List, Optional
+
+from repro.core.line_protocol import Point
+from repro.core.rollup import RollupConfig, WindowAgg, merge_window_maps
+from repro.core.tsdb import Database, _tags_key
+
+
+def shard_index(measurement: str, tags_key: tuple, n_shards: int) -> int:
+    """Stable shard index for one series key (crc32, not ``hash()`` —
+    Python string hashing is randomized per process)."""
+    h = zlib.crc32(repr((measurement, tags_key)).encode())
+    return h % n_shards
+
+
+# --------------------------------------------------------------------------
+# Partial-aggregate merge/finalize helpers (the gather half)
+# --------------------------------------------------------------------------
+
+
+def merge_scalar_partials(parts: Iterable[dict]) -> dict:
+    """Merge ``{group: WindowAgg}`` maps from disjoint series sets.
+
+    Groups contributed by exactly one backend (the common case when
+    grouping by a shard-local tag like ``hostname`` — a series lives on
+    exactly one shard) are adopted as-is: partials are fresh per-call
+    merge products, so reuse is safe and the gather side pays only for
+    groups that truly span backends."""
+    grouped: dict = {}
+    for p in parts:
+        for g, agg in p.items():
+            grouped.setdefault(g, []).append(agg)
+    out: dict = {}
+    for g, aggs in grouped.items():
+        if len(aggs) == 1:
+            out[g] = aggs[0]
+            continue
+        cur = out[g] = WindowAgg()
+        for agg in aggs:
+            cur.merge(agg)
+    return out
+
+
+def merge_windowed_partials(parts: Iterable[dict]) -> dict:
+    """Merge ``{group: {window_start: WindowAgg}}`` maps (same
+    singleton-group adoption as :func:`merge_scalar_partials`)."""
+    grouped: dict = {}
+    for p in parts:
+        for g, wins in p.items():
+            grouped.setdefault(g, []).append(wins)
+    return {g: maps[0] if len(maps) == 1 else merge_window_maps(maps)
+            for g, maps in grouped.items()}
+
+
+def finalize_scalar(merged: dict, agg: str) -> dict:
+    """``{group: WindowAgg}`` -> ``Database.aggregate`` scalar shape."""
+    return {g: wa.value(agg) for g, wa in merged.items() if wa.count}
+
+
+def finalize_windowed(merged: dict, agg: str) -> dict:
+    """``{group: window_map}`` -> ``Database.aggregate`` windowed shape."""
+    out = {}
+    for g, wins in merged.items():
+        if not wins:
+            continue
+        starts = sorted(wins)
+        out[g] = (starts, [wins[w].value(agg) for w in starts])
+    return out
+
+
+# -- wire form (httpd /query?partials=1) ------------------------------------
+
+
+def windowagg_to_dict(wa: WindowAgg) -> dict:
+    return {"count": wa.count, "sum": wa.sum, "min": wa.min, "max": wa.max,
+            "last_t": wa.last_t, "last_v": wa.last_v}
+
+
+def windowagg_from_dict(d: dict) -> WindowAgg:
+    wa = WindowAgg()
+    wa.count = d["count"]
+    wa.sum = d["sum"]
+    wa.min = d["min"]
+    wa.max = d["max"]
+    wa.last_t = d["last_t"]
+    wa.last_v = d["last_v"]
+    return wa
+
+
+def encode_partials(parts: dict, windowed: bool) -> dict:
+    """JSON-safe form (window starts stringified — JSON keys)."""
+    if windowed:
+        return {g: {str(w0): windowagg_to_dict(wa) for w0, wa in wins.items()}
+                for g, wins in parts.items()}
+    return {g: windowagg_to_dict(wa) for g, wa in parts.items()}
+
+
+def decode_partials(payload: dict, windowed: bool) -> dict:
+    if windowed:
+        return {g: {int(w0): windowagg_from_dict(d) for w0, d in wins.items()}
+                for g, wins in payload.items()}
+    return {g: windowagg_from_dict(d) for g, d in payload.items()}
+
+
+# --------------------------------------------------------------------------
+# Federated scatter-gather query layer
+# --------------------------------------------------------------------------
+
+
+class FederatedQuery:
+    """Scatter-gather queries over Database-shaped backends.
+
+    Backends must expose the partials surface
+    (``aggregate_partials`` / ``rollup_window_partials``) plus the
+    read-only ``Database`` methods they federate.  Local shards, whole
+    ``ShardedDatabase`` objects and ``HttpQueryClient`` remotes all
+    qualify, and the merged output of :meth:`aggregate_partials` is itself
+    mergeable — federations nest (shards inside an instance, instances
+    inside a deployment).
+
+    Exactness requires backends to hold *disjoint* series sets (true for
+    shards by construction; for multi-instance deployments route each
+    host's metrics to one instance).
+    """
+
+    def __init__(self, backends: Iterable):
+        self.backends = list(backends)
+        if not self.backends:
+            raise ValueError("FederatedQuery needs at least one backend")
+        self._remote = [i for i, b in enumerate(self.backends)
+                        if getattr(b, "is_remote", False)]
+        self._executor = None       # lazily created, reused across queries
+
+    @property
+    def rollup_config(self):
+        """The backends' rollup layout — what rollup-aware readers
+        (dashboards, rule evaluation) introspect to stay on the
+        rollup-served path through a federated view.  Answers with the
+        first backend's non-None config (local attribute or a remote's
+        fetched-and-cached one); None only if no backend has rollups.
+        Assumes a uniform deployment, like the merge rules do."""
+        for b in self.backends:
+            cfg = getattr(b, "rollup_config", None)
+            if cfg is not None:
+                return cfg
+        return None
+
+    # -- scatter -------------------------------------------------------------
+
+    def _fanout(self, call) -> list:
+        """``[call(b) for b in backends]`` — but remote backends (HTTP
+        round-trips) run concurrently, so a federated query costs ~the
+        slowest instance, not the sum, and local shards stay inline (no
+        thread overhead on the common path).  The worker pool is created
+        once and reused — its lifetime matches the backends'."""
+        if len(self._remote) < 2:
+            return [call(b) for b in self.backends]
+        if self._executor is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._executor = ThreadPoolExecutor(
+                max_workers=len(self._remote),
+                thread_name_prefix="lms-federate")
+        results = [None] * len(self.backends)
+        futs = {i: self._executor.submit(call, self.backends[i])
+                for i in self._remote}
+        for i, b in enumerate(self.backends):
+            if i not in futs:
+                results[i] = call(b)
+        for i, f in futs.items():
+            results[i] = f.result()
+        return results
+
+    def aggregate_partials(self, measurement: str, field: str, **kw) -> dict:
+        parts = self._fanout(
+            lambda b: b.aggregate_partials(measurement, field, **kw))
+        if kw.get("window_ns") is None:
+            return merge_scalar_partials(parts)
+        return merge_windowed_partials(parts)
+
+    def rollup_window_partials(self, measurement: str, field: str,
+                               **kw) -> dict:
+        return merge_windowed_partials(self._fanout(
+            lambda b: b.rollup_window_partials(measurement, field, **kw)))
+
+    # -- gather + finalize (Database-shaped results) -------------------------
+
+    def aggregate(self, measurement: str, field: str, *, agg: str = "mean",
+                  tags: Optional[dict] = None, t_min: Optional[int] = None,
+                  t_max: Optional[int] = None,
+                  group_by_tag: Optional[str] = None,
+                  window_ns: Optional[int] = None,
+                  use_rollups: object = "auto"):
+        merged = self.aggregate_partials(
+            measurement, field, tags=tags, t_min=t_min, t_max=t_max,
+            group_by_tag=group_by_tag, window_ns=window_ns,
+            use_rollups=use_rollups)
+        if window_ns is None:
+            return finalize_scalar(merged, agg)
+        return finalize_windowed(merged, agg)
+
+    def rollup_aggregate(self, measurement: str, field: str, *,
+                         agg: str = "mean", tags: Optional[dict] = None,
+                         t_min: Optional[int] = None,
+                         t_max: Optional[int] = None,
+                         group_by_tag: Optional[str] = None,
+                         window_ns: Optional[int] = None):
+        return finalize_windowed(self.rollup_window_partials(
+            measurement, field, tags=tags, t_min=t_min, t_max=t_max,
+            group_by_tag=group_by_tag, window_ns=window_ns), agg)
+
+    # -- concatenating / union / summing fan-outs ----------------------------
+
+    def select(self, measurement: str, fields: Optional[list] = None,
+               tags: Optional[dict] = None, t_min: Optional[int] = None,
+               t_max: Optional[int] = None) -> list:
+        out: list = []
+        for b in self.backends:
+            out.extend(b.select(measurement, fields, tags, t_min, t_max))
+        return out
+
+    def rollup_series(self, measurement: str, field: str, *,
+                      agg: str = "mean", tags: Optional[dict] = None,
+                      window_ns: Optional[int] = None) -> list:
+        out: list = []
+        for b in self.backends:
+            out.extend(b.rollup_series(measurement, field, agg=agg,
+                                       tags=tags, window_ns=window_ns))
+        return out
+
+    def rollup_window_count(self, measurement: str, field: str, *,
+                            tags: Optional[dict] = None,
+                            tier_ns: Optional[int] = None) -> int:
+        return sum(b.rollup_window_count(measurement, field, tags=tags,
+                                         tier_ns=tier_ns)
+                   for b in self.backends)
+
+    def measurements(self) -> list:
+        out: set = set()
+        for b in self.backends:
+            out.update(b.measurements())
+        return sorted(out)
+
+    def field_keys(self, measurement: str) -> list:
+        out: set = set()
+        for b in self.backends:
+            out.update(b.field_keys(measurement))
+        return sorted(out)
+
+    def tag_values(self, measurement: str, tag: str) -> list:
+        out: set = set()
+        for b in self.backends:
+            out.update(b.tag_values(measurement, tag))
+        return sorted(out)
+
+    def point_count(self) -> int:
+        return sum(b.point_count() for b in self.backends)
+
+    def stored_points(self) -> int:
+        return sum(b.stored_points() for b in self.backends)
+
+
+# --------------------------------------------------------------------------
+# Sharded database
+# --------------------------------------------------------------------------
+
+
+class ShardedDatabase:
+    """Hash-partitioned drop-in for :class:`Database`.
+
+    Writes group a batch per shard first (one crc32 per point), then hand
+    each shard its sub-batch: the shard's own batched column-extend path
+    runs under *that shard's* lock only, so writers touching different
+    hosts proceed in parallel with each other and with readers of other
+    shards.  All queries go through an internal :class:`FederatedQuery`
+    over the shards.
+    """
+
+    def __init__(self, name: str, shards: int = 4,
+                 rollup_config: Optional[RollupConfig] = RollupConfig()):
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        self.name = name
+        self.rollup_config = rollup_config
+        self.shards: List[Database] = [
+            Database(f"{name}#{i}", rollup_config) for i in range(shards)]
+        self._fed = FederatedQuery(self.shards)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    def shard_for(self, measurement: str, tags: dict) -> Database:
+        return self.shards[shard_index(measurement, _tags_key(tags),
+                                       len(self.shards))]
+
+    # -- write ---------------------------------------------------------------
+
+    def write(self, points: Iterable[Point]):
+        n = len(self.shards)
+        if n == 1:
+            self.shards[0].write(points)
+            return
+        # one grouping pass for the whole batch: series keys are computed
+        # once per point (shared with Database.write) and the crc32 route
+        # once per *series*, then each shard applies its pre-grouped
+        # slice under its own lock
+        by_series, tags_of = Database.group_points(points)
+        if not by_series:
+            return
+        shard_series: dict = {}
+        shard_tags: dict = {}
+        for key, items in by_series.items():
+            i = shard_index(key[0], key[1], n)
+            if i not in shard_series:
+                shard_series[i] = {}
+                shard_tags[i] = {}
+            shard_series[i][key] = items
+            shard_tags[i][key] = tags_of[key]
+        for i, groups in shard_series.items():
+            self.shards[i].write_grouped(groups, shard_tags[i])
+
+    # -- retention (per shard, each under its own lock) ----------------------
+
+    def enforce_retention(self, max_age_ns: Optional[int] = None,
+                          max_points_per_series: Optional[int] = None,
+                          rollup_max_age_ns: Optional[int] = None):
+        for shard in self.shards:
+            shard.enforce_retention(max_age_ns, max_points_per_series,
+                                    rollup_max_age_ns)
+
+    # -- queries: scatter-gather over the shards -----------------------------
+
+    def select(self, measurement: str, fields: Optional[list] = None,
+               tags: Optional[dict] = None, t_min: Optional[int] = None,
+               t_max: Optional[int] = None) -> list:
+        return self._fed.select(measurement, fields, tags, t_min, t_max)
+
+    def aggregate(self, measurement: str, field: str, **kw):
+        return self._fed.aggregate(measurement, field, **kw)
+
+    def aggregate_partials(self, measurement: str, field: str, **kw) -> dict:
+        return self._fed.aggregate_partials(measurement, field, **kw)
+
+    def rollup_aggregate(self, measurement: str, field: str, **kw):
+        return self._fed.rollup_aggregate(measurement, field, **kw)
+
+    def rollup_window_partials(self, measurement: str, field: str,
+                               **kw) -> dict:
+        return self._fed.rollup_window_partials(measurement, field, **kw)
+
+    def rollup_series(self, measurement: str, field: str, **kw) -> list:
+        return self._fed.rollup_series(measurement, field, **kw)
+
+    def rollup_window_count(self, measurement: str, field: str,
+                            **kw) -> int:
+        return self._fed.rollup_window_count(measurement, field, **kw)
+
+    def measurements(self) -> list:
+        return self._fed.measurements()
+
+    def field_keys(self, measurement: str) -> list:
+        return self._fed.field_keys(measurement)
+
+    def tag_values(self, measurement: str, tag: str) -> list:
+        return self._fed.tag_values(measurement, tag)
+
+    def point_count(self) -> int:
+        return self._fed.point_count()
+
+    def stored_points(self) -> int:
+        return self._fed.stored_points()

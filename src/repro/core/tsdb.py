@@ -19,7 +19,14 @@ batched ingest path (``line_protocol.decode_batch`` -> ``MetricsRouter``
 -> here) amortize to near the raw-append cost.
 
 Thread-safe: the router may write from the training thread while the HTTP
-endpoint and analyzers read concurrently.
+endpoint and analyzers read concurrently.  A single ``Database`` serializes
+on one lock; ``TSDBServer(shards=N)`` swaps in the hash-partitioned
+``repro.core.shard.ShardedDatabase`` (per-shard locks, scatter-gather
+queries) for write paths that must scale past that lock.
+
+``aggregate_partials`` / ``rollup_window_partials`` expose *mergeable*
+aggregate state (``WindowAgg``): the exact building block the federation
+layer combines across shards and across remote LMS instances.
 """
 
 from __future__ import annotations
@@ -35,7 +42,7 @@ from typing import Iterable, Optional
 
 from repro.core.line_protocol import Point, now_ns
 from repro.core.rollup import (ROLLUP_AGGS, RollupConfig, SeriesRollups,
-                               merge_window_maps)
+                               WindowAgg, merge_window_maps)
 
 
 @dataclass
@@ -72,9 +79,13 @@ class Database:
 
     # -- write --------------------------------------------------------------
 
-    def write(self, points: Iterable[Point]):
-        # group per series outside the lock: one store lookup + one
-        # column-extend per series instead of per point
+    @staticmethod
+    def group_points(points: Iterable[Point]):
+        """Group a batch per series key: ``(by_series, tags_of)`` with
+        ``by_series[(meas, tags_key)] = [(ts, fields), ...]``.  Shared by
+        the direct write path and ``ShardedDatabase`` (which groups once,
+        routes per *series*, and hands each shard its pre-grouped slice —
+        no per-point re-sorting or re-hashing)."""
         by_series: dict = {}
         tags_of: dict = {}
         for p in points:
@@ -85,8 +96,18 @@ class Database:
                 items = by_series[key] = []
                 tags_of[key] = p.tags
             items.append((ts, p.fields))
-        if not by_series:
-            return
+        return by_series, tags_of
+
+    def write(self, points: Iterable[Point]):
+        # group per series outside the lock: one store lookup + one
+        # column-extend per series instead of per point
+        by_series, tags_of = self.group_points(points)
+        if by_series:
+            self.write_grouped(by_series, tags_of)
+
+    def write_grouped(self, by_series: dict, tags_of: dict):
+        """Apply a pre-grouped batch (see :meth:`group_points`) under the
+        lock — the single lock acquisition of the batched ingest path."""
         with self._lock:
             for (meas, key), items in by_series.items():
                 store = self._meas[meas].get(key)
@@ -173,20 +194,11 @@ class Database:
         window, rather than silently degrading to the retention-truncated
         raw data; False forces the raw rescan.
         """
-        if window_ns is not None and use_rollups is not False:
-            if self._rollup_serves(window_ns, agg, t_min, t_max,
-                                   force=use_rollups is True):
-                return self.rollup_aggregate(
-                    measurement, field, agg=agg, tags=tags, t_min=t_min,
-                    t_max=t_max, group_by_tag=group_by_tag,
-                    window_ns=window_ns)
-            if use_rollups is True:
-                tiers = self.rollup_config.tiers_ns \
-                    if self.rollup_config is not None else ()
-                raise ValueError(
-                    f"rollups cannot serve window_ns={window_ns} "
-                    f"agg={agg!r} (tiers: {tiers}); use use_rollups='auto' "
-                    "to fall back to a raw rescan")
+        if self._serve_from_rollups(window_ns, agg, t_min, t_max,
+                                    use_rollups):
+            return self.rollup_aggregate(
+                measurement, field, agg=agg, tags=tags, t_min=t_min,
+                t_max=t_max, group_by_tag=group_by_tag, window_ns=window_ns)
         series = self.select(measurement, [field], tags, t_min, t_max)
         groups: dict = defaultdict(lambda: ([], []))
         for s in series:
@@ -212,6 +224,109 @@ class Database:
                 out[g] = ([w0 + i * window_ns for i in starts],
                           [_agg(wins[i], agg) for i in starts])
         return out
+
+    def aggregate_partials(self, measurement: str, field: str, *,
+                           tags: Optional[dict] = None,
+                           t_min: Optional[int] = None,
+                           t_max: Optional[int] = None,
+                           group_by_tag: Optional[str] = None,
+                           window_ns: Optional[int] = None,
+                           use_rollups: object = "auto"):
+        """Mergeable partial-aggregate state — the scatter half of the
+        federated scatter-gather path (``repro.core.shard``).
+
+        Scalar form (``window_ns=None``): ``{group: WindowAgg}`` built from
+        a raw scan.  Windowed form: ``{group: {window_start: WindowAgg}}``
+        with epoch-aligned window starts, served from the rollup tiers
+        under the same exactness conditions as :meth:`aggregate` (or forced
+        / disabled via ``use_rollups``), otherwise from a raw rescan.
+
+        Merging partials from *disjoint* series sets (shards, remote LMS
+        instances) with ``WindowAgg.merge`` / ``merge_window_maps`` and
+        finalizing with ``WindowAgg.value(agg)`` reproduces
+        :meth:`aggregate` exactly for every agg in ``ROLLUP_AGGS`` —
+        ``mean`` merges as (sum, count), ``last`` as the lexicographic
+        (t, v) max, matching the raw path's sort-then-take-last.
+        """
+        # agg=None: every ROLLUP_AGGS aggregate finalizes from WindowAgg
+        # state, so servability only depends on tier nesting + alignment
+        if self._serve_from_rollups(window_ns, None, t_min, t_max,
+                                    use_rollups):
+            return self.rollup_window_partials(
+                measurement, field, tags=tags, t_min=t_min, t_max=t_max,
+                group_by_tag=group_by_tag, window_ns=window_ns)
+        # copy the matching slices under the lock (select), build the
+        # partial state lock-free: shard locks stay held for O(copy), not
+        # O(scan) — the same hygiene as the raw aggregate() path
+        out: dict = {}
+        for s in self.select(measurement, [field], tags, t_min, t_max):
+            g = s.tags.get(group_by_tag, "") if group_by_tag else ""
+            col = s.values.get(field, ())
+            for t, v in zip(s.times, col):
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    continue
+                if window_ns is None:
+                    agg = out.get(g)
+                    if agg is None:
+                        agg = out[g] = WindowAgg()
+                else:
+                    wins = out.get(g)
+                    if wins is None:
+                        wins = out[g] = {}
+                    w0 = t - t % window_ns
+                    agg = wins.get(w0)
+                    if agg is None:
+                        agg = wins[w0] = WindowAgg()
+                agg.update(t, v)
+        return out
+
+    def rollup_window_partials(self, measurement: str, field: str, *,
+                               tags: Optional[dict] = None,
+                               t_min: Optional[int] = None,
+                               t_max: Optional[int] = None,
+                               group_by_tag: Optional[str] = None,
+                               window_ns: Optional[int] = None) -> dict:
+        """``{group: {window_start: WindowAgg}}`` from the rollup tiers —
+        the mergeable form of :meth:`rollup_aggregate` (window-granularity
+        range filtering, survives raw retention).  The returned WindowAggs
+        are fresh merge products, safe to hand across threads/shards."""
+        if self.rollup_config is None:
+            return {}
+        if window_ns is None:
+            window_ns = self.rollup_config.tiers_ns[0]
+        with self._lock:
+            groups: dict = defaultdict(list)
+            for store in self._stores(measurement, tags):
+                if store.rollups is None:
+                    continue
+                g = store.tags.get(group_by_tag, "") if group_by_tag else ""
+                groups[g].append(store.rollups.windows(
+                    field, window_ns, t_min, t_max))
+            return {g: merge_window_maps(maps)
+                    for g, maps in groups.items()}
+
+    def _serve_from_rollups(self, window_ns: Optional[int],
+                            agg: Optional[str], t_min: Optional[int],
+                            t_max: Optional[int],
+                            use_rollups: object) -> bool:
+        """Shared windowed-path decision for :meth:`aggregate` and
+        :meth:`aggregate_partials`: True = serve from the rollup tiers;
+        forced-but-unservable raises rather than silently degrading to
+        retention-truncated raw data."""
+        if window_ns is None or use_rollups is False:
+            return False
+        if self._rollup_serves(window_ns, agg if agg is not None else "mean",
+                               t_min, t_max, force=use_rollups is True):
+            return True
+        if use_rollups is True:
+            tiers = self.rollup_config.tiers_ns \
+                if self.rollup_config is not None else ()
+            what = f" agg={agg!r}" if agg is not None else ""
+            raise ValueError(
+                f"rollups cannot serve window_ns={window_ns}{what} "
+                f"(tiers: {tiers}); use use_rollups='auto' to fall back "
+                "to a raw rescan")
+        return False
 
     def _rollup_serves(self, window_ns: int, agg: str,
                        t_min: Optional[int], t_max: Optional[int],
@@ -239,26 +354,16 @@ class Database:
         Range filtering happens at window granularity (whole epoch-aligned
         windows).  Works after raw points have been dropped by retention.
         """
-        if self.rollup_config is None:
-            return {}
-        if window_ns is None:
-            window_ns = self.rollup_config.tiers_ns[0]
-        with self._lock:
-            groups: dict = defaultdict(list)
-            for store in self._stores(measurement, tags):
-                if store.rollups is None:
-                    continue
-                g = store.tags.get(group_by_tag, "") if group_by_tag else ""
-                groups[g].append(store.rollups.windows(
-                    field, window_ns, t_min, t_max))
-            out = {}
-            for g, maps in groups.items():
-                merged = merge_window_maps(maps)
-                if not merged:
-                    continue
-                starts = sorted(merged)
-                out[g] = (starts, [merged[w].value(agg) for w in starts])
-            return out
+        parts = self.rollup_window_partials(
+            measurement, field, tags=tags, t_min=t_min, t_max=t_max,
+            group_by_tag=group_by_tag, window_ns=window_ns)
+        out = {}
+        for g, merged in parts.items():
+            if not merged:
+                continue
+            starts = sorted(merged)
+            out[g] = (starts, [merged[w].value(agg) for w in starts])
+        return out
 
     def rollup_series(self, measurement: str, field: str, *,
                       agg: str = "mean", tags: Optional[dict] = None,
@@ -434,21 +539,38 @@ class _SeriesStore:
 
 
 class TSDBServer:
-    """Named-database manager (the "database back-end" box in Fig. 1)."""
+    """Named-database manager (the "database back-end" box in Fig. 1).
+
+    ``shards=N`` (N > 1) backs every named database with a
+    :class:`repro.core.shard.ShardedDatabase` — N independent
+    :class:`Database` partitions with per-shard locks, rollups and
+    retention, query-federated behind the same interface — so concurrent
+    batched writes from different hosts no longer contend on one lock.
+    """
 
     def __init__(self, persist_dir: Optional[str] = None,
-                 rollup_config: Optional[RollupConfig] = RollupConfig()):
+                 rollup_config: Optional[RollupConfig] = RollupConfig(),
+                 shards: int = 1):
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
         self._dbs: dict = {}
         self._lock = threading.RLock()
         self._persist_dir = persist_dir
         self._rollup_config = rollup_config
+        self._shards = int(shards)
         if persist_dir:
             os.makedirs(persist_dir, exist_ok=True)
 
     def db(self, name: str = "global") -> Database:
         with self._lock:
             if name not in self._dbs:
-                self._dbs[name] = Database(name, self._rollup_config)
+                if self._shards > 1:
+                    from repro.core.shard import ShardedDatabase
+                    self._dbs[name] = ShardedDatabase(
+                        name, shards=self._shards,
+                        rollup_config=self._rollup_config)
+                else:
+                    self._dbs[name] = Database(name, self._rollup_config)
             return self._dbs[name]
 
     def databases(self) -> list:

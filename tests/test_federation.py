@@ -1,0 +1,221 @@
+"""Federated scatter-gather over HTTP: full-stack e2e on a sharded
+backend, plus cross-instance federation via ``HttpQueryClient``.
+
+The multi-node story (``docs/ARCHITECTURE.md``): inside one LMS instance
+the backend shards; across instances, ``FederatedQuery`` fans ``/query``
+partials requests to each router and merges them with the same WindowAgg
+semantics the shards use — so the whole deployment answers like one
+database.
+"""
+
+import json
+import urllib.request
+
+import pytest
+
+from repro.core import MonitoringStack
+from repro.core.httpd import HttpQueryClient, HttpSink, LMSHttpServer
+from repro.core.line_protocol import Point
+from repro.core.shard import FederatedQuery, ShardedDatabase
+from repro.core.tsdb import Database
+
+S = 1_000_000_000
+
+
+def _get_json(url: str) -> dict:
+    with urllib.request.urlopen(url) as r:
+        return json.loads(r.read())
+
+
+def test_http_end_to_end_sharded_stack(tmp_path):
+    """job_start -> batched /write from several hosts -> /query with and
+    without window_ns -> dashboard -> job_end, all against a 4-shard
+    backend: tag enrichment and job annotations must survive sharding."""
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path / "dash"),
+                                      shards=4)
+    hosts = [f"h{i}" for i in range(3)]
+    db = stack.backend.db("global")
+    assert isinstance(db, ShardedDatabase)
+    with LMSHttpServer(stack.router) as srv:
+        sink = HttpSink(srv.url)
+        sink.job_start("jF", "ada", hosts, {"arch": "demo"})
+        for h_i, h in enumerate(hosts):     # one batched POST per host
+            sink.write([Point("hpm", {"hostname": h},
+                              {"mfu": 0.3 + 0.1 * h_i, "step": float(s)},
+                              s * S)
+                        for s in range(30)])
+        base = (f"{srv.url}/query?m=hpm&field=mfu&group_by=hostname"
+                f"&tag_jobid=jF")
+        # scalar /query scatter-gathers across the shards
+        out = _get_json(base + "&agg=mean")["result"]
+        assert set(out) == set(hosts)
+        assert out["h1"] == pytest.approx(0.4)
+        # windowed /query (rollup-served through the federation)
+        out = _get_json(base + f"&agg=mean&window_ns={10 * S}")["result"]
+        starts, vals = out["h2"]
+        assert starts == [0, 10 * S, 20 * S]
+        assert vals == pytest.approx([0.5, 0.5, 0.5])
+        # mergeable partials (the cross-instance scatter wire form)
+        resp = _get_json(base + f"&partials=1&window_ns={10 * S}")
+        assert resp["windowed"] is True
+        assert resp["partials"]["h0"][str(10 * S)]["count"] == 10
+        # tag enrichment survived sharding: every series carries job tags
+        series = db.select("hpm", ["mfu"], {"jobid": "jF"})
+        assert len(series) == len(hosts)
+        for s in series:
+            assert s.tags["username"] == "ada" and s.tags["arch"] == "demo"
+        # dashboard agent reads through the federated view
+        job = stack.router.jobs.get("jF")
+        dash = stack.dashboards.build_dashboard(job)
+        titles = [r["title"] for r in dash["dashboard"]["rows"]]
+        assert "HPM" in titles
+        assert dash["dashboard"]["annotations"]["targets"][0][
+            "tags"]["jobid"] == "jF"
+        html = stack.dashboards.render_html(job, dash)
+        assert "svg" in html
+        sink.job_end("jF")
+    # job annotations (start + end events) survive sharding
+    ev = db.select("job_event", None, {"jobid": "jF"})
+    vals = sorted(v for s in ev for v in s.values["event"])
+    assert vals == ["end", "start"]
+    # analysis layer is shard-transparent too (no findings on healthy data)
+    from repro.core.analysis import default_rules, evaluate_rules_on_db
+    assert evaluate_rules_on_db(db, default_rules(), jobid="jF") == []
+
+
+def test_federated_query_across_router_instances(tmp_path):
+    """Two independent LMS router instances (each itself sharded), hosts
+    split between them; FederatedQuery over HttpQueryClients answers
+    exactly like one database holding the union of the points."""
+    stacks = [MonitoringStack.inprocess(out_dir=str(tmp_path / f"d{i}"),
+                                        shards=2) for i in range(2)]
+    ref = Database("ref")
+    pts_per_host = 40
+    all_hosts = [f"h{i}" for i in range(4)]
+    for inst, stack in enumerate(stacks):
+        for h in all_hosts[inst * 2:(inst + 1) * 2]:
+            pts = [Point("hpm", {"hostname": h},
+                         {"mfu": 0.2 + 0.05 * int(h[1:]) + 0.001 * s,
+                          "step": float(s)}, s * S)
+                   for s in range(pts_per_host)]
+            stack.router.write(pts)
+            ref.write(pts)
+    with LMSHttpServer(stacks[0].router) as sa, \
+            LMSHttpServer(stacks[1].router) as sb:
+        fed = FederatedQuery([HttpQueryClient(sa.url),
+                              HttpQueryClient(sb.url)])
+        # scalar: mean merges as (sum, count); last as lexicographic (t, v)
+        for agg in ("mean", "max", "min", "sum", "count", "last"):
+            got = fed.aggregate("hpm", "mfu", agg=agg,
+                                group_by_tag="hostname")
+            want = ref.aggregate("hpm", "mfu", agg=agg,
+                                 group_by_tag="hostname")
+            assert set(got) == set(all_hosts)
+            for g in want:
+                assert got[g] == pytest.approx(want[g], rel=1e-9), (agg, g)
+        # windowed: rollup-tier summaries merged across instances
+        got = fed.aggregate("hpm", "mfu", agg="max", window_ns=10 * S)
+        want = ref.aggregate("hpm", "mfu", agg="max", window_ns=10 * S)
+        assert got[""][0] == want[""][0]
+        assert got[""][1] == pytest.approx(want[""][1])
+        # select fans out; each host's series comes from exactly one side
+        series = fed.select("hpm", ["mfu"], {"hostname": "h2"})
+        assert len(series) == 1 and len(series[0].times) == pts_per_host
+        # fields=None returns every field (events!), not a silent miss on
+        # a fabricated "value" field; multi-field is a loud error
+        [s] = fed.select("hpm", None, {"hostname": "h2"})
+        assert set(s.values) == {"mfu", "step"}
+        with pytest.raises(ValueError):
+            fed.select("hpm", ["mfu", "step"], {"hostname": "h2"})
+        # meta queries federate as unions / sums — remote included
+        assert "hpm" in fed.measurements()
+        assert "mfu" in fed.field_keys("hpm")
+        assert fed.tag_values("hpm", "hostname") == all_hosts
+        assert fed.point_count() == ref.point_count()
+        # rollup-served windows keep answering after raw retention upstream
+        for stack in stacks:
+            stack.backend.db("global").enforce_retention(
+                max_points_per_series=2)
+        after = fed.aggregate("hpm", "mfu", agg="count", window_ns=10 * S,
+                              use_rollups=True)
+        assert sum(after[""][1]) == len(all_hosts) * pts_per_host
+        # a forced-rollup window no tier serves raises remotely like locally
+        with pytest.raises(ValueError):
+            fed.aggregate("hpm", "mfu", agg="sum", window_ns=S // 2,
+                          use_rollups=True)
+
+
+def test_http_query_client_roundtrips_partials(tmp_path):
+    """decode(encode(partials)) over a live server equals the local
+    partials — count/sum/min/max/last_t/last_v all intact."""
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path / "d"), shards=3)
+    pts = [Point("m", {"hostname": f"h{i % 2}"}, {"v": float(i)},
+                 i * S) for i in range(25)]
+    stack.router.write(pts)
+    db = stack.backend.db("global")
+    with LMSHttpServer(stack.router) as srv:
+        client = HttpQueryClient(srv.url)
+        local = db.aggregate_partials("m", "v", group_by_tag="hostname",
+                                      window_ns=10 * S)
+        remote = client.aggregate_partials("m", "v",
+                                           group_by_tag="hostname",
+                                           window_ns=10 * S)
+        assert set(remote) == set(local)
+        for g in local:
+            assert set(remote[g]) == set(local[g])
+            for w0, wa in local[g].items():
+                rw = remote[g][w0]
+                assert (rw.count, rw.sum, rw.min, rw.max, rw.last_t,
+                        rw.last_v) == (wa.count, wa.sum, wa.min, wa.max,
+                                       wa.last_t, wa.last_v)
+        # scalar partials too
+        local_s = db.aggregate_partials("m", "v")
+        remote_s = client.aggregate_partials("m", "v")
+        assert remote_s[""].count == local_s[""].count == 25
+        assert remote_s[""].sum == local_s[""].sum
+        # rollup partials with the default (finest-tier) window must come
+        # back window-shaped, not scalar-shaped (regression: the client
+        # used to route this through the raw scalar scan)
+        local_r = db.rollup_window_partials("m", "v")
+        remote_r = client.rollup_window_partials("m", "v")
+        assert set(remote_r[""]) == set(local_r[""])      # window starts
+        fed = FederatedQuery([client])
+        got = fed.rollup_aggregate("m", "v", agg="count")
+        want = db.rollup_aggregate("m", "v", agg="count")
+        assert got == want
+
+
+def test_remote_backend_full_rollup_surface(tmp_path):
+    """Mixed local+remote federations drive the whole rollup-aware read
+    path — rule evaluation and dashboard tier selection need
+    rollup_config / rollup_series / rollup_window_count on remotes too
+    (regression: HttpQueryClient used to expose none of them)."""
+    from repro.core.analysis import default_rules, evaluate_rules_on_db
+    remote_stack = MonitoringStack.inprocess(out_dir=str(tmp_path / "r"),
+                                             shards=2)
+    local = Database("local")
+    bad = [Point("hpm", {"hostname": "h_remote"}, {"mfu": 0.001}, i * S)
+           for i in range(120)]
+    remote_stack.router.write(bad)
+    local.write([Point("hpm", {"hostname": "h_local"}, {"mfu": 0.001},
+                       i * S) for i in range(120)])
+    with LMSHttpServer(remote_stack.router) as srv:
+        client = HttpQueryClient(srv.url)
+        # remote config is fetched and cached; federation exposes it
+        assert client.rollup_config is not None
+        fed = FederatedQuery([local, client])
+        assert fed.rollup_config is not None
+        # per-series rollup readout across the wire
+        series = fed.rollup_series("hpm", "mfu")
+        assert {s.tags["hostname"] for s in series} == \
+            {"h_local", "h_remote"}
+        assert fed.rollup_window_count("hpm", "mfu") == \
+            local.rollup_window_count("hpm", "mfu") * 2
+        # forced rollup-backed rule evaluation sees BOTH sides' breakage,
+        # even after raw retention upstream
+        remote_stack.backend.db("global").enforce_retention(
+            max_points_per_series=2)
+        findings = evaluate_rules_on_db(fed, default_rules(),
+                                        use_rollups=True)
+        hosts = {f.host for f in findings if f.rule == "compute_break"}
+        assert hosts == {"h_local", "h_remote"}

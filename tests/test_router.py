@@ -40,6 +40,63 @@ def test_job_end_stops_tagging(router):
     assert "jobid" not in s.tags
 
 
+def test_overlapping_jobs_on_shared_host(router):
+    """Two running jobs sharing a host (regression): the flat host->tags
+    store let the second ``start`` clobber the first job's enrichment and
+    ``end`` of either job corrupt the survivor's.  The per-host job stack
+    resolves to the most recently started *running* job, and re-exposes
+    the older job when the newer one ends."""
+    router.job_start("j1", "alice", ["h0", "h1"])
+    router.job_start("j2", "bob", ["h0"])           # overlaps j1 on h0
+    router.write(Point("m", {"hostname": "h0"}, {"v": 1.0}, 1))
+    router.write(Point("m", {"hostname": "h1"}, {"v": 1.0}, 1))
+    db = router.backend.db("global")
+    # latest allocation wins on the shared host; h1 still belongs to j1
+    [s] = db.select("m", ["v"], {"hostname": "h0"})
+    assert s.tags["jobid"] == "j2" and s.tags["username"] == "bob"
+    [s] = db.select("m", ["v"], {"hostname": "h1"})
+    assert s.tags["jobid"] == "j1"
+    # ending the NEWER job re-exposes the older job's enrichment
+    router.job_end("j2")
+    router.write(Point("m", {"hostname": "h0"}, {"v": 2.0}, 2))
+    tagged = db.select("m", ["v"], {"hostname": "h0", "jobid": "j1"})
+    assert [v for s in tagged for v in s.values["v"]] == [2.0]
+    # both ended: writes are untagged again
+    router.job_end("j1")
+    router.write(Point("m", {"hostname": "h0"}, {"v": 3.0}, 3))
+    untagged = [s for s in db.select("m", ["v"], {"hostname": "h0"})
+                if "jobid" not in s.tags]
+    assert [v for s in untagged for v in s.values["v"]] == [3.0]
+
+
+def test_end_first_of_overlapping_jobs_keeps_second(router):
+    """Ending the OLDER job must not disturb the newer job's enrichment."""
+    router.job_start("j1", "alice", ["h0"])
+    router.job_start("j2", "bob", ["h0"])
+    router.job_end("j1")
+    router.write(Point("m", {"hostname": "h0"}, {"v": 1.0}, 1))
+    [s] = router.backend.db("global").select("m", ["v"])
+    assert s.tags["jobid"] == "j2" and s.tags["username"] == "bob"
+
+
+def test_restarted_job_releases_deallocated_hosts(router):
+    """Restarting a job id with a smaller host set must drop the old
+    allocation everywhere: de-allocated hosts stop receiving the job's
+    tags, now and after any future restart (regression: the stale entry
+    used to linger in the per-host stack forever)."""
+    router.job_start("jr", "alice", ["h0", "h1"])
+    router.job_start("jr", "alice", ["h0"])         # requeue, h1 dropped
+    assert router.jobs.tags_for_host("h1") == {}
+    router.write(Point("m", {"hostname": "h1"}, {"v": 1.0}, 1))
+    [s] = router.backend.db("global").select("m", ["v"],
+                                             {"hostname": "h1"})
+    assert "jobid" not in s.tags
+    # h0 still enriched by the restarted allocation
+    assert router.jobs.tags_for_host("h0")["jobid"] == "jr"
+    router.job_end("jr")
+    assert router.jobs.tags_for_host("h0") == {}
+
+
 def test_signals_stored_as_events(router):
     router.job_start("j1", "alice", ["h0"])
     router.job_end("j1")

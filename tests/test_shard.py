@@ -1,0 +1,361 @@
+"""Sharded TSDB: sharded == unsharded for every query, under any stream.
+
+The contract of ``repro.core.shard``: a ``ShardedDatabase`` fed any point
+stream answers every query (``select``, scalar and windowed ``aggregate``,
+rollup-served post-retention windows) identically to a single unsharded
+``Database`` fed the same stream — for any shard count, batch split,
+out-of-order timestamps and sparse/non-numeric fields.  Plus the
+concurrency stress tier (``-m stress``): parallel batched writers, query
+threads and a retention reaper against the sharded store with monotonic
+router counters and no lost points.
+"""
+
+import os
+import random
+import threading
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.core.line_protocol import Point, encode_batch
+from repro.core.rollup import ROLLUP_AGGS
+from repro.core.router import MetricsRouter
+from repro.core.shard import ShardedDatabase, shard_index
+from repro.core.tsdb import Database, TSDBServer, _tags_key
+
+S = 1_000_000_000
+WINDOWS = (S, 10 * S, 60 * S, 120 * S)
+
+
+def _random_stream(rng, n, hosts=4, t_span_s=300):
+    """Out-of-order, sparse-fielded stream with non-numeric noise."""
+    pts = []
+    for _ in range(n):
+        fields = {}
+        if rng.random() < 0.9:
+            fields["v"] = rng.uniform(-100, 100)
+        if rng.random() < 0.25:
+            fields["w"] = float(rng.randint(-5, 5))
+        if rng.random() < 0.1:
+            fields["note"] = "evt"        # strings never aggregate
+        if rng.random() < 0.1:
+            fields["flag"] = True         # bools never aggregate
+        if not fields:
+            fields["v"] = 1.0
+        pts.append(Point("m", {"hostname": f"h{rng.randrange(hosts)}"},
+                         fields, rng.randrange(t_span_s * S)))
+    return pts
+
+
+def _write_in_batches(db, pts, rng):
+    i = 0
+    while i < len(pts):
+        k = rng.randint(1, 64)
+        db.write(pts[i:i + k])
+        i += k
+
+
+def _series_map(series_list):
+    """tags-key -> (times, values); series keys are unique per database
+    *and* per sharded database (a key lives on exactly one shard)."""
+    out = {}
+    for s in series_list:
+        key = _tags_key(s.tags)
+        assert key not in out, "duplicate series key across shards"
+        out[key] = (s.times, s.values)
+    return out
+
+
+def _assert_windows_equal(sharded, reference):
+    assert set(sharded) == set(reference)
+    for g in reference:
+        assert sharded[g][0] == reference[g][0], g
+        assert sharded[g][1] == pytest.approx(reference[g][1],
+                                              rel=1e-9, abs=1e-9)
+
+
+def _assert_equivalent(sh, ref):
+    """Full query-surface equivalence between a ShardedDatabase and a
+    reference Database holding the same points."""
+    assert sh.point_count() == ref.point_count()
+    assert sh.stored_points() == ref.stored_points()
+    assert sh.measurements() == ref.measurements()
+    assert sh.field_keys("m") == ref.field_keys("m")
+    assert sh.tag_values("m", "hostname") == ref.tag_values("m", "hostname")
+    assert _series_map(sh.select("m")) == _series_map(ref.select("m"))
+    # range-bounded select
+    assert _series_map(sh.select("m", ["v"], None, 50 * S, 200 * S)) == \
+        _series_map(ref.select("m", ["v"], None, 50 * S, 200 * S))
+    for agg in ROLLUP_AGGS:
+        for group_by in (None, "hostname"):
+            scalar = sh.aggregate("m", "v", agg=agg, group_by_tag=group_by)
+            want = ref.aggregate("m", "v", agg=agg, group_by_tag=group_by)
+            assert set(scalar) == set(want), (agg, group_by)
+            for g in want:
+                assert scalar[g] == pytest.approx(want[g], rel=1e-9,
+                                                  abs=1e-9), (agg, group_by)
+            for window in WINDOWS:
+                _assert_windows_equal(
+                    sh.aggregate("m", "v", agg=agg, window_ns=window,
+                                 group_by_tag=group_by),
+                    ref.aggregate("m", "v", agg=agg, window_ns=window,
+                                  group_by_tag=group_by))
+
+
+@pytest.mark.parametrize("shards", list(range(1, 9)))
+def test_sharded_equals_unsharded(shards):
+    rng = random.Random(shards)
+    pts = _random_stream(rng, 1500)
+    ref = Database("ref")
+    sh = ShardedDatabase("s", shards=shards)
+    _write_in_batches(ref, pts, random.Random(99))
+    _write_in_batches(sh, pts, random.Random(7))    # different batch splits
+    _assert_equivalent(sh, ref)
+
+
+@pytest.mark.parametrize("shards", [1, 3, 8])
+def test_sharded_rollups_survive_retention(shards):
+    """Post-retention, rollup-served windows still merge exactly across
+    shards (each shard trims and rolls up independently)."""
+    rng = random.Random(shards + 100)
+    pts = _random_stream(rng, 2000, hosts=3)
+    ref = Database("ref")
+    sh = ShardedDatabase("s", shards=shards)
+    ref.write(pts)
+    _write_in_batches(sh, pts, rng)
+    ref.enforce_retention(max_points_per_series=4)
+    sh.enforce_retention(max_points_per_series=4)
+    assert sh.stored_points() == ref.stored_points()
+    for agg in ROLLUP_AGGS:
+        for window in (10 * S, 60 * S):
+            _assert_windows_equal(
+                sh.aggregate("m", "v", agg=agg, window_ns=window,
+                             group_by_tag="hostname", use_rollups=True),
+                ref.aggregate("m", "v", agg=agg, window_ns=window,
+                              group_by_tag="hostname", use_rollups=True))
+    # rollup_series federates by concatenation: one rollup view per series
+    assert len(sh.rollup_series("m", "v")) == len(ref.rollup_series("m", "v"))
+    assert sh.rollup_window_count("m", "v") == ref.rollup_window_count(
+        "m", "v")
+
+
+def test_sharded_aggregate_partials_nest():
+    """A ShardedDatabase's merged partials are themselves mergeable —
+    federations nest (shards inside instances inside deployments)."""
+    from repro.core.shard import FederatedQuery
+    rng = random.Random(5)
+    pts = _random_stream(rng, 800)
+    half = len(pts) // 2
+    a = ShardedDatabase("a", shards=3)
+    b = ShardedDatabase("b", shards=2)
+    a.write(pts[:half])
+    b.write(pts[half:])
+    ref = Database("ref")
+    ref.write(pts)
+    fed = FederatedQuery([a, b])
+    for agg in ("mean", "count", "last"):
+        got = fed.aggregate("m", "v", agg=agg, group_by_tag="hostname")
+        want = ref.aggregate("m", "v", agg=agg, group_by_tag="hostname")
+        assert set(got) == set(want)
+        for g in want:
+            assert got[g] == pytest.approx(want[g], rel=1e-9, abs=1e-9)
+    _assert_windows_equal(
+        fed.aggregate("m", "v", agg="sum", window_ns=10 * S),
+        ref.aggregate("m", "v", agg="sum", window_ns=10 * S))
+
+
+def test_federated_view_is_rollup_aware():
+    """A FederatedQuery view exposes rollup_config, so rule evaluation
+    and dashboards stay on the rollup-served path (and keep answering
+    after raw retention) instead of silently degrading to truncated raw
+    data (regression: the view used to hide the backends' rollups)."""
+    from repro.core.analysis import default_rules, evaluate_rules_on_db
+    from repro.core.shard import FederatedQuery
+    a = ShardedDatabase("a", shards=2)
+    b = Database("b")
+    # mfu pinned below the compute_break floor for > the rule timeout
+    pts = [Point("hpm", {"hostname": f"h{i % 2}"}, {"mfu": 0.001}, i * S)
+           for i in range(200)]
+    a.write([p for p in pts if p.tags["hostname"] == "h0"])
+    b.write([p for p in pts if p.tags["hostname"] == "h1"])
+    fed = FederatedQuery([a, b])
+    assert fed.rollup_config is not None
+    for db in (a, b):
+        db.enforce_retention(max_points_per_series=2)
+    # forced rollups must NOT raise "rollups disabled", and findings
+    # span the full (retention-dropped) history on both backends
+    findings = evaluate_rules_on_db(fed, default_rules(), use_rollups=True)
+    hosts = {f.host for f in findings if f.rule == "compute_break"}
+    assert hosts == {"h0", "h1"}
+    assert all(f.duration_s > 60 for f in findings
+               if f.rule == "compute_break")
+
+
+def test_shard_index_stable_and_total():
+    """crc32 routing: deterministic across processes, every key routed."""
+    key = _tags_key({"hostname": "h1", "jobid": "j"})
+    assert shard_index("m", key, 4) == shard_index("m", key, 4)
+    idx = {shard_index("m", _tags_key({"hostname": f"h{i}"}), 4)
+           for i in range(64)}
+    assert idx <= set(range(4)) and len(idx) == 4   # all shards reachable
+
+
+def test_sharded_forced_rollup_unservable_raises():
+    sh = ShardedDatabase("s", shards=2)
+    sh.write([Point("m", {"hostname": "h"}, {"v": float(i)}, i * S)
+              for i in range(10)])
+    with pytest.raises(ValueError):
+        sh.aggregate("m", "v", agg="sum", window_ns=S // 2,
+                     use_rollups=True)
+    # auto falls back to the (sharded) raw rescan
+    out = sh.aggregate("m", "v", agg="sum", window_ns=S // 2)
+    assert sum(sum(v) for _, v in out.values()) == pytest.approx(45.0)
+
+
+def test_shard_count_validation():
+    with pytest.raises(ValueError):
+        ShardedDatabase("s", shards=0)
+    with pytest.raises(ValueError):
+        TSDBServer(shards=0)
+
+
+# -- property tier (hypothesis; skips cleanly when not installed) -------------
+
+
+_point_strategy = st.tuples(
+    st.integers(min_value=0, max_value=200 * S),          # timestamp
+    st.integers(min_value=0, max_value=3),                # host index
+    st.floats(min_value=-1e6, max_value=1e6,
+              allow_nan=False, allow_infinity=False, width=32))
+
+
+@pytest.mark.stress
+@settings(max_examples=int(os.environ.get("LMS_PROPERTY_EXAMPLES", "30")),
+          deadline=None)
+@given(st.integers(min_value=1, max_value=8),
+       st.lists(_point_strategy, min_size=1, max_size=200))
+def test_property_sharded_equals_unsharded(shards, raw_pts):
+    """For ANY stream and ANY shard count 1-8: sharded == unsharded,
+    including out-of-order timestamps and post-retention rollup windows."""
+    pts = [Point("m", {"hostname": f"h{h}"}, {"v": v}, ts)
+           for ts, h, v in raw_pts]
+    ref = Database("ref")
+    sh = ShardedDatabase("s", shards=shards)
+    ref.write(pts)
+    _write_in_batches(sh, pts, random.Random(len(pts)))
+    for agg in ROLLUP_AGGS:
+        scalar = sh.aggregate("m", "v", agg=agg, group_by_tag="hostname")
+        want = ref.aggregate("m", "v", agg=agg, group_by_tag="hostname")
+        assert set(scalar) == set(want)
+        for g in want:
+            assert scalar[g] == pytest.approx(want[g], rel=1e-9, abs=1e-9)
+        _assert_windows_equal(
+            sh.aggregate("m", "v", agg=agg, window_ns=10 * S),
+            ref.aggregate("m", "v", agg=agg, window_ns=10 * S))
+    ref.enforce_retention(max_points_per_series=2)
+    sh.enforce_retention(max_points_per_series=2)
+    _assert_windows_equal(
+        sh.aggregate("m", "v", agg="count", window_ns=60 * S,
+                     use_rollups=True),
+        ref.aggregate("m", "v", agg="count", window_ns=60 * S,
+                      use_rollups=True))
+
+
+# -- stress tier --------------------------------------------------------------
+
+
+@pytest.mark.stress
+def test_sharded_concurrent_stress():
+    """N batched writers + M query threads + a retention reaper against a
+    4-shard backend: no exceptions, no lost points, RouterStats counters
+    monotonic throughout.  LMS_STRESS_SCALE (float) scales the workload
+    for the bounded CI tier-2 run."""
+    scale = float(os.environ.get("LMS_STRESS_SCALE", "1"))
+    n_batches = max(2, int(60 * scale))
+    batch = 40
+    writers = 4
+    hosts = [f"h{i}" for i in range(2 * writers)]
+    server = TSDBServer(shards=4)
+    router = MetricsRouter(server, per_job_db=True)
+    router.job_start("j1", "alice", hosts)
+    db = server.db("global")
+    errors: list = []
+    done = threading.Event()
+
+    def writer(w):
+        try:
+            for b in range(n_batches):
+                base = (w * n_batches + b) * batch
+                router.write_lines(encode_batch([
+                    Point("hpm", {"hostname": hosts[2 * w + (i % 2)]},
+                          {"mfu": 0.4, "step": float(base + i)},
+                          (base + i) * 10_000_000)
+                    for i in range(batch)]))
+        except Exception as e:              # noqa: BLE001
+            errors.append(e)
+
+    def querier():
+        try:
+            while not done.is_set():
+                db.select("hpm", ["mfu"], {"jobid": "j1"})
+                db.aggregate("hpm", "mfu", agg="mean", window_ns=S)
+                db.aggregate("hpm", "step", agg="count",
+                             group_by_tag="hostname")
+                db.rollup_aggregate("hpm", "mfu", agg="max",
+                                    window_ns=10 * S)
+        except Exception as e:              # noqa: BLE001
+            errors.append(e)
+
+    def reaper():
+        try:
+            while not done.is_set():
+                db.enforce_retention(max_points_per_series=200)
+        except Exception as e:              # noqa: BLE001
+            errors.append(e)
+
+    def monitor():
+        try:
+            prev = router.stats.snapshot()
+            while not done.is_set():
+                cur = router.stats.snapshot()
+                for k, v in prev.items():
+                    assert cur[k] >= v, f"counter {k} went backwards"
+                # snapshots are consistent cuts (stats updated atomically
+                # per batch), so the cross-counter invariant always holds
+                assert cur["points_in"] == \
+                    cur["points_out"] + cur["dropped_no_host"]
+                prev = cur
+                done.wait(0.001)
+        except Exception as e:              # noqa: BLE001
+            errors.append(e)
+
+    wthreads = [threading.Thread(target=writer, args=(w,))
+                for w in range(writers)]
+    others = [threading.Thread(target=querier) for _ in range(2)] + \
+        [threading.Thread(target=reaper), threading.Thread(target=monitor)]
+    for t in others + wthreads:
+        t.start()
+    for t in wthreads:
+        t.join(timeout=120)
+    done.set()
+    for t in others:
+        t.join(timeout=30)
+    assert not errors, errors
+    total = writers * n_batches * batch
+    snap = router.stats.snapshot()
+    assert snap["points_in"] == total
+    assert snap["points_out"] == total
+    assert snap["parse_errors"] == 0 and snap["dropped_no_host"] == 0
+    # global db: every metric point + the job_start event, nothing lost
+    assert db.point_count() == total + 1
+    assert db.stored_points() <= total + 1
+    # rollups saw every point even though retention culled raw storage
+    counted = db.aggregate("hpm", "mfu", agg="count", window_ns=60 * S,
+                           use_rollups=True)
+    assert sum(sum(v) for _, v in counted.values()) == total
+    # per-job duplicate database is sharded too, and complete
+    assert server.db("job_j1").point_count() == total
