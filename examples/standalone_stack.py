@@ -13,9 +13,14 @@ job-signal endpoint), then plays three external clients against it:
      with curl" (paper §III.A).
 
 Everything lands tagged in the TSDB; the dashboard agent renders the job.
+The stack runs with crash-safe persistence on (``persist_dir``): run the
+example twice and the second run recovers the first run's history from
+the segmented WAL before serving — kill it mid-run and it still comes
+back (torn tails are truncated, never fatal).
 """
 
 import sys
+import tempfile
 import urllib.request
 
 sys.path.insert(0, "src")
@@ -26,10 +31,17 @@ from repro.core.usermetric_cli import main as cli
 
 
 def main():
+    persist_dir = f"{tempfile.gettempdir()}/lms_standalone_wal"
     stack = MonitoringStack.inprocess(out_dir="standalone_out",
+                                      persist_dir=persist_dir,
                                       serve_http=True)
     url = stack.http.url
     print(f"LMS router HTTP endpoint: {url}")
+    if stack.recovery_stats:
+        rec = stack.recovery_stats.get("global", {})
+        print(f"recovered previous run from {persist_dir}: "
+              f"{rec.get('snapshot_points', 0)} snapshot points + "
+              f"{rec.get('points_replayed', 0)} WAL points")
 
     # job allocation signal (normally sent by the scheduler prolog)
     sink = HttpSink(url)

@@ -31,10 +31,12 @@ from repro.core.router import MetricsRouter
 from repro.core.shard import FederatedQuery, ShardedDatabase, shard_index
 from repro.core.tsdb import Database, TSDBServer
 from repro.core.usermetric import UserMetric
+from repro.core.wal import DurableStore, SegmentedWal, import_legacy_jsonl
 
 __all__ = [
     "DEFAULT_TIERS_NS", "DEFAULT_TREE", "Database", "DashboardAgent",
-    "FederatedQuery", "Finding", "GROUPS", "HBM_BW", "HostAgent",
+    "DurableStore", "FederatedQuery", "Finding", "GROUPS", "HBM_BW",
+    "HostAgent", "SegmentedWal", "import_legacy_jsonl",
     "HttpQueryClient", "HttpSink", "ICI_BW", "JobInfo", "JobRegistry",
     "LMSHttpServer", "MetricsRouter", "MonitoringStack", "PEAK_FLOPS",
     "PerfGroup", "Point", "ROLLUP_AGGS", "RollupConfig",
@@ -63,9 +65,15 @@ class MonitoringStack:
 
     def __init__(self, *, per_job_db: bool = True, per_user_db: bool = False,
                  rules: Optional[list] = None, out_dir: str = "lms_out",
-                 persist_dir: Optional[str] = None,
+                 persist_dir: Optional[str] = None, fsync: str = "batch",
+                 recover: bool = True,
                  serve_http: bool = False, shards: int = 1):
-        self.backend = TSDBServer(persist_dir=persist_dir, shards=shards)
+        self.backend = TSDBServer(persist_dir=persist_dir, shards=shards,
+                                  fsync=fsync)
+        # crash-safe durability: a restarted stack keeps serving the job
+        # histories it had already collected (repro.core.wal)
+        self.recovery_stats = self.backend.load_persisted() \
+            if (persist_dir and recover) else {}
         self.router = MetricsRouter(self.backend, per_job_db=per_job_db,
                                     per_user_db=per_user_db)
         self.analyzer = StreamAnalyzer(
@@ -130,3 +138,4 @@ class MonitoringStack:
     def close(self):
         if self.http:
             self.http.stop()
+        self.backend.close()

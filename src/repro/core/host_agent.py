@@ -38,17 +38,25 @@ def _read_proc_io() -> dict:
         return {"read_bytes": 0, "write_bytes": 0}
 
 
-def _read_net_dev() -> dict:
+def _read_net_dev(path: str = "/proc/net/dev") -> dict:
     try:
         rx = tx = 0
-        with open("/proc/net/dev") as f:
+        with open(path) as f:
             for line in f.readlines()[2:]:
                 name, _, rest = line.partition(":")
-                cols = rest.split()
                 if name.strip() == "lo":
                     continue
-                rx += int(cols[0])
-                tx += int(cols[8])
+                # guard per line: a malformed/truncated row (seen on
+                # exotic kernels and in torn sysfs reads) must not kill
+                # the whole collection tick — skip it (without partial
+                # sums) and keep counting the remaining interfaces
+                try:
+                    cols = rest.split()
+                    row_rx, row_tx = int(cols[0]), int(cols[8])
+                except (ValueError, IndexError):
+                    continue
+                rx += row_rx
+                tx += row_tx
         return {"net_rx_bytes": rx, "net_tx_bytes": tx}
     except OSError:
         return {"net_rx_bytes": 0, "net_tx_bytes": 0}

@@ -22,8 +22,14 @@ curl cronjobs, Ganglia pull-proxies in the paper) integrates unchanged:
                                     windowed form (window_ns defaults to
                                     the finest tier, survives retention)
     GET  /meta?what=measurements    introspection (also what=fields&m=,
-                                    what=tags&m=&tag=) for remote clients
+                                    what=tags&m=&tag=, and
+                                    what=persistence: WAL/snapshot stats
+                                    of the durability layer) for remote
+                                    clients
     GET  /dbs                       list databases
+    POST /admin/snapshot[?db=]      snapshot + compact the WAL of one or
+                                    all persisted databases
+                                    (``repro.core.wal``)
 
 The server is a ``ThreadingHTTPServer``: each request runs on its own
 thread, so with a sharded backend (``TSDBServer(shards=N)``) concurrent
@@ -174,6 +180,10 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
                 self._send(200, {"count": db.rollup_window_count(
                     q.get("m", ""), q.get("field", "value"), tags=tags,
                     tier_ns=tier)})
+            elif what == "persistence":
+                self._send(200,
+                           {"persistence":
+                            self.router.backend.persistence_stats()})
             else:
                 self._send(400, {"error": f"unknown meta {what!r}"})
         else:
@@ -195,6 +205,24 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
                 d = json.loads(body)
                 self.router.job_end(d["jobid"])
                 self._send(200, {"ok": True})
+            elif url.path == "/admin/snapshot":
+                # operator trigger: snapshot + compact one database (the
+                # ?db= param) or every persisted database
+                q = dict(urllib.parse.parse_qsl(url.query,
+                                                keep_blank_values=True))
+                backend = self.router.backend
+                name = q.get("db")
+                if not backend.persistence_stats().get("enabled"):
+                    self._send(409, {"error": "persistence not enabled "
+                                              "(no persist_dir)"})
+                elif name is not None and \
+                        name not in backend.databases():
+                    # a typo'd name must not silently register a fresh
+                    # empty database (and its on-disk WAL directories)
+                    self._send(404, {"error": f"unknown database "
+                                              f"{name!r}"})
+                else:
+                    self._send(200, {"snapshots": backend.snapshot(name)})
             else:
                 self._send(404, {"error": "not found"})
         except Exception as e:                      # noqa: BLE001

@@ -136,6 +136,19 @@ class WindowAgg:
             return self.last_v
         raise ValueError(f"agg {agg!r} not served by rollups")
 
+    # -- snapshot state (repro.core.wal) -------------------------------------
+
+    def state(self) -> list:
+        """JSON-safe state list — the snapshot form (``repro.core.wal``)."""
+        return [self.count, self.sum, self.min, self.max,
+                self.last_t, self.last_v]
+
+    @classmethod
+    def from_state(cls, s: list) -> "WindowAgg":
+        wa = cls()
+        wa.count, wa.sum, wa.min, wa.max, wa.last_t, wa.last_v = s
+        return wa
+
 
 def _is_numeric(v) -> bool:
     return isinstance(v, (int, float)) and not isinstance(v, bool)
@@ -278,6 +291,32 @@ class SeriesRollups:
                 cur = out[q0] = WindowAgg()
             cur.merge(agg)
         return out
+
+    # -- snapshot state (repro.core.wal) -------------------------------------
+
+    def dump_state(self) -> dict:
+        """JSON-safe dump of all window state: ``{field: {tier_ns(str):
+        {window_start(str): WindowAgg.state()}}}`` (string keys — JSON
+        objects).  Restoring with :meth:`restore_state` reproduces every
+        rollup answer exactly, without re-observing any raw point — what
+        makes crash recovery O(live data) (``repro.core.wal``)."""
+        return {field: {str(tier_ns): {str(w0): agg.state()
+                                       for w0, agg in wins.items()}
+                        for tier_ns, wins in tiers.items()}
+                for field, tiers in self._fields.items()}
+
+    def restore_state(self, state: dict):
+        """Inverse of :meth:`dump_state`.  Tiers are reconciled against the
+        *current* config: dumped tiers no longer configured are dropped,
+        newly configured tiers start empty (they fill from new writes)."""
+        for field, tiers in state.items():
+            restored = {t: {} for t in self.config.tiers_ns}
+            for tier_ns, wins in tiers.items():
+                tier_ns = int(tier_ns)
+                if tier_ns in restored:
+                    restored[tier_ns] = {int(w0): WindowAgg.from_state(s)
+                                         for w0, s in wins.items()}
+            self._fields[field] = restored
 
     # -- retention -----------------------------------------------------------
 

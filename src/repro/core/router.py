@@ -61,6 +61,16 @@ class RouterStats:
                     "dropped_no_host": self.dropped_no_host}
 
 
+def _safe_db_name(raw: str) -> str:
+    """Remote-supplied usernames/jobids become database names, and a
+    persisted database name becomes a directory — a '/' (or a bare
+    '.'/'..') in one would make the durable store reject every write to
+    that scope forever.  Map the hostile characters instead of failing
+    per-write."""
+    name = raw.replace("/", "_").replace("\\", "_")
+    return name if name not in ("", ".", "..") else name.replace(".", "_")
+
+
 class MetricsRouter:
     """Tag-enriching, duplicating, publishing metrics router."""
 
@@ -174,10 +184,13 @@ class MetricsRouter:
             by_db: dict = {}
             for p in enriched:
                 if self.per_user_db and "username" in p.tags:
-                    by_db.setdefault("user_" + p.tags["username"],
-                                     []).append(p)
+                    by_db.setdefault(
+                        "user_" + _safe_db_name(p.tags["username"]),
+                        []).append(p)
                 if self.per_job_db and "jobid" in p.tags:
-                    by_db.setdefault("job_" + p.tags["jobid"], []).append(p)
+                    by_db.setdefault(
+                        "job_" + _safe_db_name(p.tags["jobid"]),
+                        []).append(p)
             for db, pts in by_db.items():
                 self.backend.write(pts, db)
         self._publish("points", enriched)

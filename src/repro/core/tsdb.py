@@ -11,7 +11,9 @@ equivalent with the properties the paper relies on:
 * streaming rollups (``repro.core.rollup``): tiered windowed aggregates
   maintained incrementally at write time, so windowed queries are served
   from O(#windows) summaries and survive raw-point retention,
-* optional write-ahead persistence (JSONL) so dashboards survive restarts.
+* crash-safe durability (``repro.core.wal``): a segmented write-ahead log
+  plus snapshot/compaction, so job histories survive restarts and even
+  mid-write crashes (torn tails are truncated, never fatal).
 
 Writes take whole batches: points are grouped per series first, then
 appended column-wise under one lock acquisition, which is what makes the
@@ -32,7 +34,6 @@ layer combines across shards and across remote LMS instances.
 from __future__ import annotations
 
 import bisect
-import json
 import operator
 import os
 import threading
@@ -105,9 +106,18 @@ class Database:
         if by_series:
             self.write_grouped(by_series, tags_of)
 
-    def write_grouped(self, by_series: dict, tags_of: dict):
+    def write_grouped(self, by_series: dict, tags_of: dict,
+                      capture: bool = False):
         """Apply a pre-grouped batch (see :meth:`group_points`) under the
-        lock — the single lock acquisition of the batched ingest path."""
+        lock — the single lock acquisition of the batched ingest path.
+
+        With ``capture=True``, returns ``{(meas, key): (sorted_times,
+        {field: column})}`` — the columnar form this very apply
+        materialized, which the WAL (``repro.core.wal``) logs without a
+        second pass over the batch.  The captured lists are private
+        copies, safe to use after the lock is released.
+        """
+        captured = {} if capture else None
         with self._lock:
             for (meas, key), items in by_series.items():
                 store = self._meas[meas].get(key)
@@ -115,8 +125,81 @@ class Database:
                     store = _SeriesStore(dict(tags_of[(meas, key)]),
                                          self.rollup_config)
                     self._meas[meas][key] = store
-                store.extend(items)
+                cap = store.extend(items)
                 self._count += len(items)
+                if captured is not None:
+                    if cap is None:     # out-of-order fallback path
+                        cap = self.transpose_items(items)
+                    captured[(meas, key)] = cap
+        return captured
+
+    @staticmethod
+    def transpose_items(items: list):
+        """``[(ts, fields), ...]`` -> ``(sorted_times, {field: column})``
+        with ``None`` holes — the columnar form :meth:`write_columns`
+        applies and the WAL logs (one transpose, shared by both)."""
+        if len(items) > 1:
+            items = sorted(items, key=_first)
+        names = set()
+        for _, fields in items:
+            names.update(fields)
+        return ([ts for ts, _ in items],
+                {k: [fields.get(k) for _, fields in items] for k in names})
+
+    def write_columns(self, by_series_cols: dict, tags_of: dict):
+        """Apply a pre-grouped, pre-transposed batch:
+        ``by_series_cols[(meas, tags_key)] = (times, {field: column})``
+        with per-series ascending times (:meth:`transpose_items`).  The
+        columnar twin of :meth:`write_grouped` — the WAL write/replay path.
+        """
+        with self._lock:
+            for (meas, key), (times, cols) in by_series_cols.items():
+                store = self._meas[meas].get(key)
+                if store is None:
+                    store = _SeriesStore(dict(tags_of[(meas, key)]),
+                                         self.rollup_config)
+                    self._meas[meas][key] = store
+                store.extend_columns(times, cols)
+                self._count += len(times)
+
+    # -- snapshot state (repro.core.wal) -------------------------------------
+
+    def snapshot_state(self) -> dict:
+        """Deep-copied, JSON-safe dump of the live column stores plus
+        rollup window state, captured under the lock — what a WAL snapshot
+        persists so recovery is O(live data), not O(all-time writes)."""
+        with self._lock:
+            series = []
+            for meas, stores in self._meas.items():
+                for store in stores.values():
+                    series.append({
+                        "m": meas, "tags": dict(store.tags),
+                        "times": list(store.times),
+                        "values": {k: list(col)
+                                   for k, col in store.values.items()},
+                        "rollups": store.rollups.dump_state()
+                        if store.rollups is not None else None})
+            return {"count": self._count, "series": series}
+
+    def restore_series(self, entries: Iterable[dict]):
+        """Install snapshot series (inverse of :meth:`snapshot_state`) —
+        no re-sorting, no rollup re-aggregation.  Only for series whose
+        keys are not yet present (fresh recovery)."""
+        with self._lock:
+            for e in entries:
+                store = _SeriesStore(dict(e["tags"]), self.rollup_config)
+                store.times = list(e["times"])
+                store.values = defaultdict(
+                    list, {k: list(col) for k, col in e["values"].items()})
+                if store.rollups is not None and e.get("rollups"):
+                    store.rollups.restore_state(e["rollups"])
+                self._meas[e["m"]][_tags_key(store.tags)] = store
+
+    def add_count(self, n: int):
+        """Credit ``n`` toward :meth:`point_count` (snapshot restore: the
+        ever-written count includes retention-dropped points)."""
+        with self._lock:
+            self._count += n
 
     # -- introspection -------------------------------------------------------
 
@@ -463,8 +546,11 @@ class _SeriesStore:
         """Batched append of ``(ts, fields)`` pairs (the ingest hot path).
 
         In-order batches (the overwhelmingly common case) extend all
-        columns in one pass; any out-of-order item falls back to the
-        per-point sorted insert.
+        columns in one pass and return the ``(sorted_times, segs)``
+        columns they materialized — the WAL capture
+        (``Database.write_grouped``/``repro.core.wal``) logs exactly
+        these, so durability pays no second transpose.  Any out-of-order
+        item falls back to the per-point sorted insert and returns None.
         """
         if len(items) > 1:
             items = sorted(items, key=_first)
@@ -474,7 +560,7 @@ class _SeriesStore:
             if self.rollups is not None:
                 for ts, fields in items:
                     self.rollups.observe(ts, fields)
-            return
+            return None
         names = set(self.values)
         for _, fields in items:
             names.update(fields)
@@ -489,6 +575,44 @@ class _SeriesStore:
             seg = [fields.get(k) for _, fields in items]
             col.extend(seg)
             segs[k] = seg
+        if self.rollups is not None:
+            self.rollups.observe_columns(new_times, segs)
+        return new_times, segs
+
+    def extend_columns(self, new_times: list, segs: dict):
+        """Batched append of pre-transposed columns — the WAL write/replay
+        path (``repro.core.wal``), which transposes once and shares the
+        result between the log record and this apply.
+
+        ``new_times`` is ascending; ``segs`` maps field -> value list
+        aligned with ``new_times`` (``None`` holes for points missing the
+        field) — the same segment shape :meth:`extend` builds internally.
+        """
+        if self.times and new_times[0] < self.times[-1]:
+            # rare out-of-order fallback: rebuild rows, per-point insert
+            items = [(t, {k: col[i] for k, col in segs.items()
+                          if col[i] is not None})
+                     for i, t in enumerate(new_times)]
+            for ts, fields in items:
+                self._insert(ts, fields)
+            if self.rollups is not None:
+                for ts, fields in items:
+                    self.rollups.observe(ts, fields)
+            return
+        n0 = len(self.times)
+        self.times.extend(new_times)
+        total = n0 + len(new_times)
+        vals = self.values
+        for k, seg in segs.items():
+            col = vals[k]
+            if len(col) < n0:
+                col.extend([None] * (n0 - len(col)))
+            col.extend(seg)
+        if len(vals) > len(segs):
+            # pre-existing fields absent from this batch: pad the holes
+            for col in vals.values():
+                if len(col) < total:
+                    col.extend([None] * (total - len(col)))
         if self.rollups is not None:
             self.rollups.observe_columns(new_times, segs)
 
@@ -546,18 +670,34 @@ class TSDBServer:
     :class:`Database` partitions with per-shard locks, rollups and
     retention, query-federated behind the same interface — so concurrent
     batched writes from different hosts no longer contend on one lock.
+
+    ``persist_dir`` enables crash-safe durability (``repro.core.wal``):
+    every :meth:`write` batch goes through a per-database (per-shard, when
+    sharded) segmented write-ahead log before it is applied, with
+    ``fsync`` picking the durability/throughput trade-off
+    (``none|batch|always``).  :meth:`load_persisted` recovers snapshot +
+    WAL (tolerating torn tails from unclean shutdowns and importing the
+    legacy ``*.jsonl`` format), :meth:`snapshot` compacts the log, and
+    :meth:`enforce_retention` drops whole expired segments.
     """
 
     def __init__(self, persist_dir: Optional[str] = None,
                  rollup_config: Optional[RollupConfig] = RollupConfig(),
-                 shards: int = 1):
+                 shards: int = 1, fsync: str = "batch",
+                 wal_segment_bytes: int = 4 * 1024 * 1024):
         if shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
+        if fsync not in ("none", "batch", "always"):
+            raise ValueError(f"fsync must be none|batch|always, "
+                             f"got {fsync!r}")
         self._dbs: dict = {}
+        self._stores: dict = {}          # name -> wal.DurableStore
         self._lock = threading.RLock()
         self._persist_dir = persist_dir
         self._rollup_config = rollup_config
         self._shards = int(shards)
+        self._fsync = fsync
+        self._wal_segment_bytes = int(wal_segment_bytes)
         if persist_dir:
             os.makedirs(persist_dir, exist_ok=True)
 
@@ -573,31 +713,108 @@ class TSDBServer:
                     self._dbs[name] = Database(name, self._rollup_config)
             return self._dbs[name]
 
+    def store(self, name: str = "global"):
+        """The durable store (WAL + snapshot) behind one database; None
+        when the server runs without ``persist_dir``.
+
+        The database name becomes a directory under ``persist_dir``, so
+        names that would escape it (path separators, ``..``) are
+        rejected — ``/write?db=`` and ``/admin/snapshot?db=`` are
+        remote-reachable surfaces.
+        """
+        if not self._persist_dir:
+            return None
+        if name != os.path.basename(name) or name in ("", ".", ".."):
+            raise ValueError(f"invalid database name {name!r}")
+        with self._lock:
+            if name not in self._stores:
+                from repro.core.wal import DurableStore
+                self._stores[name] = DurableStore(
+                    self.db(name),
+                    os.path.join(self._persist_dir, name),
+                    fsync=self._fsync,
+                    segment_max_bytes=self._wal_segment_bytes)
+            return self._stores[name]
+
     def databases(self) -> list:
         with self._lock:
             return sorted(self._dbs)
 
     def write(self, points: Iterable[Point], db: str = "global"):
-        points = list(points)
-        self.db(db).write(points)
-        if self._persist_dir:
-            path = os.path.join(self._persist_dir, f"{db}.jsonl")
-            with open(path, "a") as f:
-                for p in points:
-                    f.write(json.dumps({
-                        "m": p.measurement, "t": p.tags, "f": p.fields,
-                        "ts": p.timestamp}) + "\n")
+        store = self.store(db)
+        if store is None:
+            self.db(db).write(points)
+        else:
+            store.write(points)
 
-    def load_persisted(self):
+    # -- durability (repro.core.wal) -----------------------------------------
+
+    def load_persisted(self) -> dict:
+        """Recover every persisted database: latest snapshot, then WAL
+        replay (torn tails truncated with a warning, never an abort),
+        then any legacy ``<db>.jsonl`` logs (imported into the WAL and
+        renamed ``*.jsonl.imported``).  Returns per-database recovery
+        stats.  Safe on an empty/fresh ``persist_dir``."""
         if not self._persist_dir:
-            return
-        for fn in os.listdir(self._persist_dir):
-            if not fn.endswith(".jsonl"):
-                continue
-            name = fn[:-len(".jsonl")]
-            with open(os.path.join(self._persist_dir, fn)) as f:
-                pts = []
-                for line in f:
-                    d = json.loads(line)
-                    pts.append(Point(d["m"], d["t"], d["f"], d["ts"]))
-            self.db(name).write(pts)
+            return {}
+        from repro.core.wal import import_legacy_jsonl
+        out = {}
+        for fn in sorted(os.listdir(self._persist_dir)):
+            path = os.path.join(self._persist_dir, fn)
+            if os.path.isdir(path):
+                out[fn] = self.store(fn).recover()
+        for fn in sorted(os.listdir(self._persist_dir)):
+            if fn.endswith(".jsonl"):
+                name = fn[:-len(".jsonl")]
+                stats = import_legacy_jsonl(
+                    os.path.join(self._persist_dir, fn), self.store(name))
+                out.setdefault(name, {})["legacy_import"] = stats
+        return out
+
+    # the modern name; load_persisted is kept for API continuity
+    recover = load_persisted
+
+    def snapshot(self, db: Optional[str] = None) -> dict:
+        """Snapshot + compact one database (or all): capture live column
+        stores + rollup state, then drop every WAL segment the snapshot
+        covers.  Returns per-database snapshot stats."""
+        if not self._persist_dir:
+            return {}
+        names = [db] if db is not None else self.databases()
+        return {name: self.store(name).snapshot() for name in names}
+
+    def persistence_stats(self) -> dict:
+        """Per-database WAL/snapshot stats (httpd ``/meta`` surface)."""
+        if not self._persist_dir:
+            return {"enabled": False}
+        with self._lock:
+            stores = dict(self._stores)
+        return {"enabled": True, "fsync": self._fsync,
+                "persist_dir": self._persist_dir,
+                "databases": {name: s.stats()
+                              for name, s in sorted(stores.items())}}
+
+    def enforce_retention(self, max_age_ns: Optional[int] = None,
+                          max_points_per_series: Optional[int] = None,
+                          rollup_max_age_ns: Optional[int] = None,
+                          db: Optional[str] = None):
+        """Apply retention to one database (or all).  With persistence
+        enabled this also drops whole expired WAL segments (compacting
+        through a snapshot first, so rollup windows survive recovery
+        exactly like they survive in-memory retention)."""
+        names = [db] if db is not None else self.databases()
+        for name in names:
+            store = self.store(name)
+            if store is None:
+                self.db(name).enforce_retention(
+                    max_age_ns, max_points_per_series, rollup_max_age_ns)
+            else:
+                store.enforce_retention(
+                    max_age_ns, max_points_per_series, rollup_max_age_ns)
+
+    def close(self):
+        """Seal and flush every WAL (no final snapshot: recovery replays)."""
+        with self._lock:
+            stores = list(self._stores.values())
+        for s in stores:
+            s.close()

@@ -27,19 +27,29 @@ class UserMetric:
     def __init__(self, sink, *, default_tags: Optional[dict] = None,
                  batch_size: int = 64, flush_interval_s: float = 5.0,
                  hostname: Optional[str] = None,
-                 auto_flush_thread: bool = False):
-        """sink: callable(list[Point]) or an object with .write(points)."""
+                 auto_flush_thread: bool = False,
+                 max_buffered_points: int = 65536):
+        """sink: callable(list[Point]) or an object with .write(points).
+
+        ``max_buffered_points`` bounds the re-buffer kept while the sink
+        is failing (e.g. the router endpoint is down): a dead sink drops
+        the *oldest* points past the bound instead of growing memory
+        forever.
+        """
         self._sink = sink.write if hasattr(sink, "write") else sink
         self.default_tags = dict(default_tags or {})
         self.default_tags.setdefault(
             "hostname", hostname or socket.gethostname())
         self.batch_size = batch_size
         self.flush_interval_s = flush_interval_s
+        self.max_buffered_points = int(max_buffered_points)
         self._buf: list = []
         self._lock = threading.Lock()
         self._last_flush = time.monotonic()
         self._sent_points = 0
         self._sent_batches = 0
+        self._dropped_points = 0
+        self._failed_flushes = 0
         self._stop = threading.Event()
         self._thread = None
         if auto_flush_thread:
@@ -101,14 +111,32 @@ class UserMetric:
         with self._lock:
             buf, self._buf = self._buf, []
             self._last_flush = time.monotonic()
-        if buf:
+        if not buf:
+            return
+        try:
             self._sink(buf)
+        except Exception:
+            # re-buffer at the front (bounded) so a transient sink
+            # failure loses nothing and a dead sink can't grow memory
+            # forever; the exception stays visible to the caller
+            with self._lock:
+                self._failed_flushes += 1
+                self._buf[:0] = buf
+                excess = len(self._buf) - self.max_buffered_points
+                if excess > 0:
+                    del self._buf[:excess]
+                    self._dropped_points += excess
+            raise
+        with self._lock:
             self._sent_points += len(buf)
             self._sent_batches += 1
 
     def _flush_loop(self):
         while not self._stop.wait(self.flush_interval_s):
-            self.flush()
+            try:
+                self.flush()
+            except Exception:
+                pass        # re-buffered above; retry next interval
 
     def close(self):
         self._stop.set()
@@ -125,6 +153,9 @@ class UserMetric:
 
     @property
     def stats(self) -> dict:
-        return {"sent_points": self._sent_points,
-                "sent_batches": self._sent_batches,
-                "buffered": len(self._buf)}
+        with self._lock:
+            return {"sent_points": self._sent_points,
+                    "sent_batches": self._sent_batches,
+                    "dropped_points": self._dropped_points,
+                    "failed_flushes": self._failed_flushes,
+                    "buffered": len(self._buf)}

@@ -87,7 +87,9 @@ def test_server_multiple_dbs(tmp_path):
     srv.write(_pts(host="h9"), "user_alice")
     assert set(srv.databases()) == {"global", "user_alice"}
     assert srv.db("user_alice").point_count() == 10
-    # persistence round-trip
+    # persistence round-trip (close() seals + flushes the WAL; the
+    # crash-without-close paths are covered in test_wal.py)
+    srv.close()
     srv2 = TSDBServer(persist_dir=str(tmp_path))
     srv2.load_persisted()
     assert srv2.db("global").point_count() == 10
