@@ -10,9 +10,12 @@ Three jobs run "concurrently" (simulated timestamps, no sleeps):
                     computation");
   * job-straggler — one host's step time is 30% above its peers.
 
-The streaming analyzer flags both pathological jobs the moment the timeout
-trips; the admin view (Fig. 2) lists every job with its alert count, and
-each job gets a templated dashboard with the analysis header.
+The continuous analysis engine flags both pathological jobs (alerts open,
+extend, and resolve — hysteresis keeps a flapping metric from re-firing),
+persists the full lifecycle plus a per-job footprint report into the TSDB
+as the ``analysis`` measurement, and the admin view (Fig. 2) lists every
+job with its alert count; each job gets a templated dashboard whose
+analysis header reads the persisted findings (no rule rescan per render).
 """
 
 import sys
@@ -71,10 +74,19 @@ def main():
     j3 = simulate(stack, "job-straggler",
                   straggler_host="job-straggler-h1")
 
-    print("\nfindings:")
-    for f in stack.findings():
-        print(f"  {f.rule:22s} {f.host:18s} {f.duration_s:6.0f}s "
-              f"[{f.severity}]")
+    print("\nalert lifecycle (all resolved at their last violation when "
+          "the job ended):")
+    for a in stack.findings():
+        print(f"  {a.rule:22s} {a.host:18s} {a.duration_s:6.0f}s "
+              f"[{a.severity}] state={a.state} job={a.jobid}")
+
+    print("\nper-job footprint reports (persisted as the `analysis` "
+          "measurement):")
+    for job in (j1, j2, j3):
+        rep = stack.analysis.job_report(job.job_id)
+        print(f"  {job.job_id:16s} status={rep['status']:9s} "
+              f"pattern={rep['pattern']:24s} alerts={len(rep['alerts'])} "
+              f"mfu~{rep['metrics']['mfu']['mean']:.3f}")
 
     for job in (j1, j2, j3):
         print(f"dashboard: {stack.dashboards.write_dashboard(job)}")

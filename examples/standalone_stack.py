@@ -19,6 +19,7 @@ the segmented WAL before serving — kill it mid-run and it still comes
 back (torn tails are truncated, never fatal).
 """
 
+import json
 import sys
 import tempfile
 import urllib.request
@@ -41,7 +42,8 @@ def main():
         rec = stack.recovery_stats.get("global", {})
         print(f"recovered previous run from {persist_dir}: "
               f"{rec.get('snapshot_points', 0)} snapshot points + "
-              f"{rec.get('points_replayed', 0)} WAL points")
+              f"{rec.get('points_replayed', 0)} WAL points; alert state: "
+              f"{stack.analysis_recovery}")
 
     # job allocation signal (normally sent by the scheduler prolog)
     sink = HttpSink(url)
@@ -69,6 +71,14 @@ def main():
         f"{url}/write?db=global", data=body, method="POST"))
 
     sink.job_end("batch-7")
+
+    # the continuous analysis engine persisted the job's alert history and
+    # footprint report — both are plain HTTP endpoints
+    alerts = json.load(urllib.request.urlopen(f"{url}/alerts?jobid=batch-7"))
+    print(f"alerts for batch-7: {alerts['alerts'] or 'none'}")
+    report = json.load(urllib.request.urlopen(f"{url}/jobs/batch-7/report"))
+    print(f"report: pattern={report['report']['pattern']!r} "
+          f"status={report['report']['status']}")
 
     db = stack.backend.db("global")
     print(f"measurements: {db.measurements()}")

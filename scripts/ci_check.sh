@@ -22,7 +22,8 @@ timeout "${CI_FAST_TIMEOUT:-600}" python -m pytest -q \
     tests/test_router.py \
     tests/test_federation.py \
     tests/test_lms_stack.py \
-    tests/test_analysis.py
+    tests/test_analysis.py \
+    tests/test_analysis_engine.py
 
 echo "[3/4] stress/property tier (bounded; timeout ${CI_STRESS_TIMEOUT:-600}s)"
 # Bounded example counts keep CI deterministic-ish and quick; raise the

@@ -14,8 +14,10 @@ import uuid
 from typing import Optional
 
 from repro.core.analysis import (
-    DEFAULT_TREE, Finding, RooflineAnalyzer, RooflineResult, StreamAnalyzer,
-    ThresholdRule, classify_job, default_rules, evaluate_rules_on_db)
+    ANALYSIS_MEASUREMENT, Alert, AnalysisEngine, DEFAULT_TREE, Finding,
+    RooflineAnalyzer, RooflineResult, StreamAnalyzer, ThresholdRule,
+    classify_job, default_rules, evaluate_rules_on_db, load_alerts,
+    load_job_report)
 from repro.core.dashboard import DashboardAgent
 from repro.core.host_agent import HostAgent
 from repro.core.httpd import HttpSink, LMSHttpServer
@@ -34,6 +36,7 @@ from repro.core.usermetric import UserMetric
 from repro.core.wal import DurableStore, SegmentedWal, import_legacy_jsonl
 
 __all__ = [
+    "ANALYSIS_MEASUREMENT", "Alert", "AnalysisEngine",
     "DEFAULT_TIERS_NS", "DEFAULT_TREE", "Database", "DashboardAgent",
     "DurableStore", "FederatedQuery", "Finding", "GROUPS", "HBM_BW",
     "HostAgent", "SegmentedWal", "import_legacy_jsonl",
@@ -44,8 +47,8 @@ __all__ = [
     "ShardedDatabase", "StreamAnalyzer", "TSDBServer", "ThresholdRule",
     "UserMetric", "WindowAgg", "classify_job", "decode_batch",
     "decode_line", "default_rules", "derive_all", "encode_batch",
-    "encode_point", "evaluate_rules_on_db", "now_ns", "parse_group",
-    "shard_index",
+    "encode_point", "evaluate_rules_on_db", "load_alerts",
+    "load_job_report", "now_ns", "parse_group", "shard_index",
 ]
 
 
@@ -76,17 +79,28 @@ class MonitoringStack:
             if (persist_dir and recover) else {}
         self.router = MetricsRouter(self.backend, per_job_db=per_job_db,
                                     per_user_db=per_user_db)
-        self.analyzer = StreamAnalyzer(
+        self._finding_cbs = []
+        # continuous analysis engine (repro.core.analysis): evaluates the
+        # rollup windows on a background thread (O(1) on the ingest path),
+        # persists alert lifecycle + job reports into the TSDB, and closes
+        # a job's state through the registry end hook
+        self.analysis = AnalysisEngine(
             rules if rules is not None else default_rules(),
-            on_finding=self._on_finding)
-        self.router.subscribe(self.analyzer)
-        self.dashboards = DashboardAgent(self.backend, out_dir=out_dir,
-                                         rules=self.analyzer.rules)
+            on_finding=self._on_finding, backend=self.backend,
+            db_name=self.router.global_db)
+        self.analyzer = self.analysis       # pre-engine name, kept working
+        self.router.subscribe(self.analysis)
+        self.router.analysis = self.analysis
+        self.router.jobs.on_end(self.analysis.on_job_end)
+        # restart: recovered analysis series bring the alert state back —
+        # open episodes continue instead of re-firing
+        self.analysis_recovery = self.analysis.recover() \
+            if (persist_dir and recover) else {}
+        self.dashboards = DashboardAgent(self.backend, out_dir=out_dir)
         self.roofline = RooflineAnalyzer()
         self.http: Optional[LMSHttpServer] = None
         if serve_http:
             self.http = LMSHttpServer(self.router).start()
-        self._finding_cbs = []
 
     @classmethod
     def inprocess(cls, **kw) -> "MonitoringStack":
@@ -133,9 +147,14 @@ class MonitoringStack:
         return _JobCtx()
 
     def findings(self) -> list:
-        return list(self.analyzer.findings)
+        """Every fired alert (active + resolved), after a synchronous
+        evaluation sweep — read-your-writes for callers that just
+        ingested."""
+        self.analysis.flush()
+        return list(self.analysis.findings)
 
     def close(self):
+        self.analysis.close()
         if self.http:
             self.http.stop()
         self.backend.close()

@@ -17,6 +17,12 @@ surface (``measurements``/``field_keys``/``select``/``rollup_*``), so
 partitioned ``repro.core.shard.ShardedDatabase`` or any federated view —
 per-job dashboards render identically either way (scatter-gather happens
 below this layer).
+
+The analysis header reads the findings the continuous engine
+(``repro.core.analysis.AnalysisEngine``) persisted into the ``analysis``
+measurement — O(#alerts) per render.  The seed agent re-ran every rule
+over the full database on *every* render (and again for every job in the
+admin view); that rescan is gone.
 """
 
 from __future__ import annotations
@@ -27,7 +33,7 @@ import os
 from dataclasses import dataclass, field
 from typing import Optional
 
-from repro.core.analysis import evaluate_rules_on_db, default_rules
+from repro.core.analysis import ANALYSIS_MEASUREMENT, load_alerts
 from repro.core.jobs import JobInfo
 from repro.core.tsdb import TSDBServer
 
@@ -99,7 +105,6 @@ class DashboardAgent:
     rows: list = field(default_factory=lambda: list(DEFAULT_ROWS))
     panel_templates: dict = field(
         default_factory=lambda: dict(PANEL_TEMPLATES))
-    rules: list = field(default_factory=default_rules)
 
     def __post_init__(self):
         os.makedirs(self.out_dir, exist_ok=True)
@@ -112,7 +117,7 @@ class DashboardAgent:
         available = set(db.measurements())
         mapping = {"jobid": job.job_id, "db": db_name,
                    "user": job.user}
-        findings = evaluate_rules_on_db(db, self.rules, jobid=job.job_id)
+        findings = load_alerts(db, jobid=job.job_id)
         rows_out = []
         for row_title, panels in self.rows:
             panels_out = []
@@ -129,8 +134,10 @@ class DashboardAgent:
             if panels_out:
                 rows_out.append({"title": row_title, "panels": panels_out})
         # app-level metrics beyond the defaults (paper §IV: extra metrics may
-        # be available with application-level monitoring)
-        extra = sorted(available - {"hpm", "system", "job_event"})
+        # be available with application-level monitoring); the engine's own
+        # analysis measurement is rendered as the header, not as panels
+        extra = sorted(available - {"hpm", "system", "job_event",
+                                    ANALYSIS_MEASUREMENT})
         for meas in extra:
             panels_out = [
                 _subst(self.panel_templates["timeseries"],
@@ -150,7 +157,8 @@ class DashboardAgent:
                 "header": {
                     "analysis": [
                         {"rule": f.rule, "severity": f.severity,
-                         "host": f.host, "duration_s": f.duration_s,
+                         "host": f.host, "state": f.state,
+                         "duration_s": f.duration_s,
                          "evidence": f.evidence}
                         for f in findings],
                     "status": ("unhealthy" if any(
@@ -178,7 +186,7 @@ class DashboardAgent:
         db = self.backend.db(db_name)
         out = []
         for job in jobs:
-            findings = evaluate_rules_on_db(db, self.rules, jobid=job.job_id)
+            findings = load_alerts(db, jobid=job.job_id)
             thumb = self._series_for(db, "hpm", "mfu", job.job_id)
             out.append({"jobid": job.job_id, "user": job.user,
                         "hosts": len(job.hosts),

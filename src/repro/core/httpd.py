@@ -22,10 +22,20 @@ curl cronjobs, Ganglia pull-proxies in the paper) integrates unchanged:
                                     windowed form (window_ns defaults to
                                     the finest tier, survives retention)
     GET  /meta?what=measurements    introspection (also what=fields&m=,
-                                    what=tags&m=&tag=, and
-                                    what=persistence: WAL/snapshot stats
-                                    of the durability layer) for remote
-                                    clients
+                                    what=tags&m=&tag=, what=persistence:
+                                    WAL/snapshot stats of the durability
+                                    layer, and what=analysis: continuous-
+                                    engine counters) for remote clients
+    GET  /alerts?[db=][&jobid=][&rule=][&state=active|resolved|all]
+                                    alert episodes reconstructed from the
+                                    persisted ``analysis`` measurement
+                                    (``repro.core.analysis``) — reads the
+                                    DB, not engine memory, so it answers
+                                    for recovered state and federates
+                                    like any other series query
+    GET  /jobs/<id>/report          per-job footprint report: live from
+                                    the attached engine while the job
+                                    runs, the persisted report afterwards
     GET  /dbs                       list databases
     POST /admin/snapshot[?db=]      snapshot + compact the WAL of one or
                                     all persisted databases
@@ -53,6 +63,7 @@ import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 
+from repro.core.analysis import Alert, load_alerts, load_job_report
 from repro.core.line_protocol import Point, encode_batch
 from repro.core.router import MetricsRouter
 from repro.core.shard import (decode_partials, encode_partials,
@@ -130,7 +141,8 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
             elif q.get("rollup_series") in ("1", "true"):
                 series = db.rollup_series(meas, fieldname,
                                           agg=q.get("agg", "mean"),
-                                          tags=tags, window_ns=window)
+                                          tags=tags, window_ns=window,
+                                          t_min=t_min, t_max=t_max)
                 self._send(200, {"series": [
                     {"tags": s.tags, "times": s.times,
                      "values": s.values.get(fieldname, [])}
@@ -184,8 +196,34 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
                 self._send(200,
                            {"persistence":
                             self.router.backend.persistence_stats()})
+            elif what == "analysis":
+                engine = self.router.analysis
+                self._send(200, {"analysis": engine.engine_stats()
+                                 if engine is not None else None})
             else:
                 self._send(400, {"error": f"unknown meta {what!r}"})
+        elif url.path == "/alerts":
+            engine = self.router.analysis
+            if engine is not None:
+                engine.flush()      # read-your-writes for fresh ingest
+            alerts = load_alerts(
+                self.router.backend.db(q.get("db", "global")),
+                jobid=q.get("jobid"), host=q.get("host"),
+                rule=q.get("rule"), state=q.get("state", "all"))
+            self._send(200, {"alerts": [a.to_dict() for a in alerts]})
+        elif url.path.startswith("/jobs/") and url.path.endswith("/report"):
+            jid = urllib.parse.unquote(url.path[len("/jobs/"):
+                                                -len("/report")])
+            engine = self.router.analysis
+            if engine is not None:
+                report = engine.flush().job_report(jid)
+            else:
+                report = load_job_report(
+                    self.router.backend.db(q.get("db", "global")), jid)
+            if report is None:
+                self._send(404, {"error": f"no report for job {jid!r}"})
+            else:
+                self._send(200, {"report": report})
         else:
             self._send(404, {"error": "not found"})
 
@@ -431,8 +469,10 @@ class HttpQueryClient:
 
     def rollup_series(self, measurement: str, field: str, *,
                       agg: str = "mean", tags: Optional[dict] = None,
-                      window_ns: Optional[int] = None) -> list:
-        params = self._query_params(measurement, field, tags, None, None,
+                      window_ns: Optional[int] = None,
+                      t_min: Optional[int] = None,
+                      t_max: Optional[int] = None) -> list:
+        params = self._query_params(measurement, field, tags, t_min, t_max,
                                     None, window_ns)
         params["rollup_series"] = "1"
         params["agg"] = agg
@@ -440,6 +480,30 @@ class HttpQueryClient:
         return [Series(measurement, s["tags"], s["times"],
                        {field: s["values"]})
                 for s in resp["series"]]
+
+    # -- analysis surface (repro.core.analysis) ------------------------------
+
+    def alerts(self, *, jobid: Optional[str] = None,
+               rule: Optional[str] = None, host: Optional[str] = None,
+               state: str = "all") -> list:
+        """Alert episodes from the remote instance's persisted ``analysis``
+        measurement, as :class:`repro.core.analysis.Alert` objects —
+        concatenable across instances exactly like ``load_alerts`` over a
+        federated view."""
+        params = {"db": self.db, "jobid": jobid, "rule": rule,
+                  "host": host, "state": state}
+        return [Alert.from_dict(d)
+                for d in self._get("/alerts", params)["alerts"]]
+
+    def job_report(self, jobid: str) -> Optional[dict]:
+        """The remote instance's footprint report for one job, or None
+        when it has none (404)."""
+        try:
+            return self._get(
+                f"/jobs/{urllib.parse.quote(jobid, safe='')}/report",
+                {"db": self.db})["report"]
+        except ValueError:
+            return None
 
     def rollup_window_count(self, measurement: str, field: str, *,
                             tags: Optional[dict] = None,

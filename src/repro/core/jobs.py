@@ -51,6 +51,16 @@ class JobRegistry:
         self._lock = threading.RLock()
         self._jobs: dict = {}
         self._host_jobs: dict = {}        # hostname -> [job_id, ...] stack
+        self._end_hooks: list = []
+
+    def on_end(self, fn):
+        """Register ``fn(JobInfo)`` to run when a job ends — the hook the
+        analysis engine uses to close a job's open alert state and prune
+        its per-series evaluation state.  Hooks run *outside* the registry
+        lock (they may query/write the TSDB) and are exception-guarded: a
+        broken hook must not break job deallocation."""
+        self._end_hooks.append(fn)
+        return fn
 
     def start(self, job_id: str, user: str, hosts: list,
               tags: Optional[dict] = None, ts: Optional[int] = None) -> JobInfo:
@@ -83,7 +93,13 @@ class JobRegistry:
                 return None
             job.end_ns = ts if ts is not None else now_ns()
             self._drop_from_hosts(job_id, job.hosts)
-            return job
+            hooks = list(self._end_hooks)
+        for fn in hooks:
+            try:
+                fn(job)
+            except Exception:       # noqa: BLE001 — see on_end
+                pass
+        return job
 
     def tags_for_host(self, hostname: str) -> dict:
         with self._lock:

@@ -86,6 +86,10 @@ class MetricsRouter:
         self.per_job_db = per_job_db
         self.require_host_tag = require_host_tag
         self.stats = RouterStats()
+        # the continuous analysis engine serving this router's data, when
+        # one is attached (MonitoringStack wires it); the HTTP face uses it
+        # for live job reports and engine stats
+        self.analysis = None
         self._subs: list = []
         self._lock = threading.RLock()
 

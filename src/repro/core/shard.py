@@ -261,11 +261,14 @@ class FederatedQuery:
 
     def rollup_series(self, measurement: str, field: str, *,
                       agg: str = "mean", tags: Optional[dict] = None,
-                      window_ns: Optional[int] = None) -> list:
+                      window_ns: Optional[int] = None,
+                      t_min: Optional[int] = None,
+                      t_max: Optional[int] = None) -> list:
         out: list = []
         for b in self.backends:
             out.extend(b.rollup_series(measurement, field, agg=agg,
-                                       tags=tags, window_ns=window_ns))
+                                       tags=tags, window_ns=window_ns,
+                                       t_min=t_min, t_max=t_max))
         return out
 
     def rollup_window_count(self, measurement: str, field: str, *,

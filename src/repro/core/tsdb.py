@@ -450,10 +450,15 @@ class Database:
 
     def rollup_series(self, measurement: str, field: str, *,
                       agg: str = "mean", tags: Optional[dict] = None,
-                      window_ns: Optional[int] = None) -> list:
+                      window_ns: Optional[int] = None,
+                      t_min: Optional[int] = None,
+                      t_max: Optional[int] = None) -> list:
         """Per-series rollup readout: one :class:`Series` per raw series,
         with window starts as times — the downsampled view the dashboard
-        sparklines and the analysis rules consume."""
+        sparklines and the analysis rules consume.  ``t_min``/``t_max``
+        bound the range at window granularity (whole epoch-aligned
+        windows), which is what the continuous analysis engine uses to
+        sweep only windows past its per-series cursor."""
         if self.rollup_config is None:
             return []
         if window_ns is None:
@@ -463,7 +468,7 @@ class Database:
             for store in self._stores(measurement, tags):
                 if store.rollups is None:
                     continue
-                wins = store.rollups.windows(field, window_ns)
+                wins = store.rollups.windows(field, window_ns, t_min, t_max)
                 if not wins:
                     continue
                 starts = sorted(wins)

@@ -1,0 +1,600 @@
+"""Continuous analysis engine (ISSUE 4): alert lifecycle with hysteresis,
+streaming == offline parity, persistence into the ``analysis`` measurement,
+restart recovery through the WAL, and the HTTP alert/report endpoints.
+
+The parity contract: the window-driven :class:`AnalysisEngine`, the
+point-driven :class:`StreamAnalyzer` and the offline evaluators share one
+stretch state machine, so on identical data they report byte-identical
+episodes — including data gaps (a gap before the recovery sample must not
+inflate a violation past ``min_duration_s``) and out-of-order input.
+"""
+
+import json
+import os
+import random
+import threading
+import urllib.request
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import MonitoringStack
+from repro.core.analysis import (AnalysisEngine, StreamAnalyzer,
+                                 ThresholdRule, classify_job, default_rules,
+                                 evaluate_rule, evaluate_rules_on_db,
+                                 load_alerts, load_job_report)
+from repro.core.httpd import HttpQueryClient, LMSHttpServer
+from repro.core.line_protocol import Point
+from repro.core.tsdb import Database, TSDBServer
+
+S = 1_000_000_000
+
+RULE = ThresholdRule("idle", "hpm", "mfu", "<", 0.05, 30.0, "critical",
+                     "idle rule", clear_duration_s=20.0)
+
+
+def _put(db, ts_s, v, host="h0", tags=None):
+    t = dict(tags or {})
+    t["hostname"] = host
+    db.write([Point("hpm", t, {"mfu": v}, int(ts_s * S))])
+
+
+def _spans(alerts):
+    """Comparable episode view: active alerts end at their last violation,
+    exactly like the offline evaluator's tail finding."""
+    return sorted((a.rule, a.host, a.start_ns,
+                   a.end_ns if a.end_ns is not None else a.last_ns)
+                  for a in alerts)
+
+
+def _finding_spans(findings):
+    return sorted((f.rule, f.host, f.start_ns, f.end_ns) for f in findings)
+
+
+# --------------------------------------------------------------------------
+# Offline evaluator fixes (satellite: boundary semantics + OOO guard)
+# --------------------------------------------------------------------------
+
+
+def test_evaluate_rule_closes_at_last_violating_sample():
+    """Regression: a data gap before the recovery sample used to be counted
+    into the violation's duration."""
+    rule = ThresholdRule("r", "hpm", "mfu", "<", 0.05, 300.0)
+    times = [i * 10 * S for i in range(11)] + [1000 * S]
+    values = [0.0] * 11 + [0.9]
+    # violations span only 100 s; the seed evaluator closed at 1000 s and
+    # reported a 1000 s stretch for a 300 s rule
+    assert evaluate_rule(rule, times, values) == []
+    short = ThresholdRule("r", "hpm", "mfu", "<", 0.05, 60.0)
+    fs = evaluate_rule(short, times, values)
+    assert len(fs) == 1
+    assert (fs[0].start_ns, fs[0].end_ns) == (0, 100 * S)
+
+
+def test_evaluate_rule_drops_out_of_order_samples():
+    rule = ThresholdRule("r", "hpm", "mfu", "<", 0.05, 150.0)
+    # a stale in-range recovery sample arrives after t=100 — it must not
+    # reset the open stretch
+    times = [0, 100 * S, 50 * S, 200 * S]
+    values = [0.0, 0.0, 0.9, 0.0]
+    fs = evaluate_rule(rule, times, values)
+    assert _finding_spans(fs) == [("r", "", 0, 200 * S)]
+
+
+def test_evaluate_rule_hysteresis():
+    rule = ThresholdRule("r", "hpm", "mfu", "<", 0.05, 30.0,
+                         clear_duration_s=20.0)
+    times = [i * 10 * S for i in range(12)]
+    # flapping: one clear sample inside the hysteresis window does not
+    # close the stretch
+    values = [0.0, 0.0, 0.0, 0.9, 0.0, 0.0, 0.9, 0.0, 0.9, 0.9, 0.9, 0.9]
+    fs = evaluate_rule(rule, times, values)
+    assert _finding_spans(fs) == [("r", "", 0, 70 * S)]
+
+
+# --------------------------------------------------------------------------
+# StreamAnalyzer (point-driven): fixed semantics + thread safety + pruning
+# --------------------------------------------------------------------------
+
+
+def _stream_points(seq, host="h0"):
+    return [Point("hpm", {"hostname": host}, {"mfu": v}, int(t))
+            for t, v in seq]
+
+
+def test_stream_analyzer_matches_offline_incl_gaps():
+    rng = random.Random(7)
+    for _ in range(25):
+        n = rng.randint(5, 60)
+        t, seq = 0, []
+        for _i in range(n):
+            t += rng.choice([S, 5 * S, 10 * S, 120 * S])   # gaps included
+            seq.append((t, rng.choice([0.0, 0.01, 0.2, 0.9,
+                                       float("nan")])))
+        rule = ThresholdRule("r", "hpm", "mfu", "<", 0.05,
+                             rng.choice([10.0, 30.0, 60.0]),
+                             clear_duration_s=rng.choice([0.0, 15.0]))
+        an = StreamAnalyzer([rule])
+        for p in _stream_points(seq):
+            an.observe(p)
+        offline = evaluate_rule(rule, [t for t, _ in seq],
+                                [v for _, v in seq], "h0")
+        assert _spans(an.findings) == _finding_spans(offline), seq
+
+
+def test_stream_analyzer_out_of_order_matches_monotonic_filter():
+    rng = random.Random(11)
+    for _ in range(10):
+        seq = [(i * 10 * S, rng.choice([0.0, 0.9])) for i in range(40)]
+        shuffled = seq[:]
+        rng.shuffle(shuffled)
+        an = StreamAnalyzer([RULE])
+        for p in _stream_points(shuffled):
+            an.observe(p)
+        # the documented guard: samples older than the per-key clock drop
+        kept, last = [], None
+        for t, v in shuffled:
+            if last is None or t >= last:
+                kept.append((t, v))
+                last = t
+        offline = evaluate_rule(RULE, [t for t, _ in kept],
+                                [v for _, v in kept], "h0")
+        assert _spans(an.findings) == _finding_spans(offline)
+
+
+def test_stream_analyzer_concurrent_hosts():
+    """Satellite regression: router subscribers run on concurrent ingest
+    threads; per-key state must not corrupt."""
+    an = StreamAnalyzer([RULE])
+    errs = []
+
+    def feed(host):
+        try:
+            for i in range(200):
+                an.observe(Point("hpm", {"hostname": host},
+                                 {"mfu": 0.0}, i * 10 * S))
+        except Exception as e:      # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=feed, args=(f"h{i}",))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert sorted(a.host for a in an.findings) == [f"h{i}" for i in range(4)]
+    assert all(a.active for a in an.findings)
+
+
+def test_stream_analyzer_pruned_on_job_end():
+    """Satellite regression: per-(rule, host) state leaked forever when a
+    host stopped reporting."""
+    from repro.core.jobs import JobRegistry
+    an = StreamAnalyzer([RULE])
+    reg = JobRegistry()
+    reg.on_end(an.on_job_end)
+    reg.start("j1", "u", ["h0", "h1"])
+    for i in range(10):
+        an.observe(Point("hpm", {"hostname": "h0"}, {"mfu": 0.0},
+                         i * 10 * S))
+    assert len(an._keys) == 1 and len(an.findings) == 1
+    reg.end("j1")
+    assert an._keys == {}
+    # the open tail stretch was closed at its last violation
+    assert an.findings[0].state == "resolved"
+    assert an.findings[0].end_ns == 90 * S
+
+
+# --------------------------------------------------------------------------
+# AnalysisEngine lifecycle (window-driven)
+# --------------------------------------------------------------------------
+
+
+def _engine(rules=None, server=None, **kw):
+    server = server or TSDBServer()
+    kw.setdefault("auto_tick", False)
+    return server, AnalysisEngine(rules or [RULE], backend=server, **kw)
+
+
+def test_engine_open_extend_resolve():
+    server, eng = _engine()
+    db = server.db("global")
+    for t in range(0, 61, 10):
+        _put(db, t, 0.0)
+    eng.tick()
+    # newest window (60) held back; fired at 30 s, extended to 50 s
+    assert len(eng.alerts) == 1
+    a = eng.alerts[0]
+    assert a.active and a.start_ns == 0 and a.last_ns == 50 * S
+    # clear samples inside the hysteresis window keep it firing
+    for t in (70, 75):
+        _put(db, t, 0.9)
+        eng.tick()
+    assert a.active and a.last_ns == 60 * S
+    # a clear sample past clear_duration_s resolves at the LAST VIOLATION
+    _put(db, 95, 0.9)
+    _put(db, 100, 0.9)
+    eng.tick()
+    assert a.state == "resolved"
+    assert a.end_ns == 60 * S
+    assert a.duration_s == pytest.approx(60.0)
+    # ... and the whole lifecycle is persisted + reconstructable
+    episodes = load_alerts(db)
+    assert _spans(episodes) == _spans([a])
+    assert episodes[0].state == "resolved"
+    assert load_alerts(db, state="active") == []
+
+
+def test_engine_hysteresis_prevents_flapping():
+    # 30 s violation stretches separated by single 10 s recovery blips
+    flappy = [(t, 0.0 if (t // 10) % 4 != 3 else 0.9)
+              for t in range(0, 400, 10)]
+    spans = {}
+    for clear in (0.0, 25.0):
+        rule = ThresholdRule("r", "hpm", "mfu", "<", 0.05, 20.0,
+                             clear_duration_s=clear)
+        server, eng = _engine([rule])
+        db = server.db("global")
+        for t, v in flappy:
+            _put(db, t, v)
+        eng.tick(final=True)
+        spans[clear] = _spans(eng.alerts)
+    # without hysteresis every 10 s dip is its own fire/resolve episode;
+    # with it the flapping metric is ONE continuous alert
+    assert len(spans[0.0]) > 5
+    assert len(spans[25.0]) == 1
+
+
+def test_engine_matches_offline_rollup_path_seeded():
+    """THE acceptance property (seeded fallback): any stream — including
+    out-of-order and gapped — final-ticked through the engine reports
+    exactly the episodes of the offline rollup-path scan."""
+    rng = random.Random(3)
+    for case in range(20):
+        rules = [ThresholdRule("low", "hpm", "mfu", "<", 0.05,
+                               rng.choice([10.0, 30.0]),
+                               clear_duration_s=rng.choice([0.0, 15.0])),
+                 ThresholdRule("high", "hpm", "mfu", ">", 0.8, 20.0)]
+        server, eng = _engine(rules)
+        db = server.db("global")
+        pts = []
+        for host in ("h0", "h1"):
+            t = 0
+            for _ in range(rng.randint(5, 50)):
+                t += rng.choice([1, 2, 10, 90])
+                pts.append(Point("hpm", {"hostname": host},
+                                 {"mfu": rng.choice(
+                                     [0.0, 0.01, 0.2, 0.9, 1.5,
+                                      float("nan")])}, t * S))
+        rng.shuffle(pts)                        # out-of-order ingest
+        i = 0
+        while i < len(pts):
+            k = rng.randint(1, 16)
+            db.write(pts[i:i + k])
+            i += k
+        eng.tick(final=True)
+        offline = evaluate_rules_on_db(db, rules)
+        assert _spans(eng.alerts) == _finding_spans(offline), case
+
+
+def test_engine_incremental_ticks_match_offline():
+    """In-order ingest with ticks interleaved at arbitrary points (the
+    held-back newest window makes mid-stream evaluation safe) ends at the
+    same episodes as one offline scan."""
+    rng = random.Random(5)
+    for case in range(10):
+        server, eng = _engine()
+        db = server.db("global")
+        seq = []
+        t = 0
+        for _ in range(rng.randint(20, 80)):
+            t += rng.choice([1, 5, 40])
+            seq.append((t, rng.choice([0.0, 0.9])))
+        for ts, v in seq:
+            _put(db, ts, v)
+            if rng.random() < 0.3:
+                eng.tick()
+        eng.tick(final=True)
+        offline = evaluate_rules_on_db(db, [RULE])
+        assert _spans(eng.alerts) == _finding_spans(offline), case
+
+
+@pytest.mark.stress
+@settings(max_examples=int(os.environ.get("LMS_PROPERTY_EXAMPLES", 30)),
+          deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 90),
+                          st.sampled_from([0.0, 0.01, 0.2, 0.9])),
+                min_size=2, max_size=80),
+       st.integers(0, 2 ** 32 - 1))
+def test_property_engine_equals_offline(deltas, seed):
+    rng = random.Random(seed)
+    rule = ThresholdRule("r", "hpm", "mfu", "<", 0.05,
+                         rng.choice([10.0, 30.0]),
+                         clear_duration_s=rng.choice([0.0, 15.0]))
+    server = TSDBServer(shards=rng.choice([1, 4]))
+    eng = AnalysisEngine([rule], backend=server, auto_tick=False)
+    db = server.db("global")
+    t = 0
+    pts = []
+    for dt, v in deltas:
+        t += dt
+        pts.append(Point("hpm", {"hostname": f"h{rng.randint(0, 1)}"},
+                         {"mfu": v}, t * S))
+    rng.shuffle(pts)
+    db.write(pts)
+    eng.tick(final=True)
+    offline = evaluate_rules_on_db(db, [rule])
+    assert _spans(eng.alerts) == _finding_spans(offline)
+
+
+def test_engine_discovers_backfilled_series_below_lowwater():
+    """Review regression: a series backfilled entirely below the per-rule
+    cursor low-water must still be discovered (periodic/final full sweeps)
+    — incremental filtering must never hide a host's violations."""
+    server, eng = _engine()
+    db = server.db("global")
+    for t in range(1000, 1300, 10):         # healthy host advances cursor
+        _put(db, t, 0.9, host="hA")
+    for _ in range(3):
+        eng.tick()
+    # hB backfills a violating history entirely in the past
+    for t in range(0, 200, 10):
+        _put(db, t, 0.0, host="hB")
+    eng.tick(final=True)
+    offline = evaluate_rules_on_db(db, [RULE])
+    assert _spans(eng.alerts) == _finding_spans(offline)
+    assert any(a.host == "hB" for a in eng.alerts)
+
+
+def test_restart_report_includes_resolved_history(tmp_path):
+    """Review regression: a job's pre-restart resolved episodes must still
+    appear in the report written at its (post-restart) end."""
+    persist = str(tmp_path / "wal")
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path / "d1"),
+                                      persist_dir=persist)
+    stack.router.job_start("j1", "u", ["h0"])
+    stack.router.write([Point("hpm", {"hostname": "h0"}, {"mfu": 0.0},
+                              t * S) for t in range(0, 120, 10)])
+    stack.router.write([Point("hpm", {"hostname": "h0"}, {"mfu": 0.9},
+                              t * S) for t in range(120, 220, 10)])
+    stack.analysis.flush(final=True)
+    assert stack.analysis.resolved_alerts(jobid="j1")
+    stack.close()
+
+    stack2 = MonitoringStack.inprocess(out_dir=str(tmp_path / "d2"),
+                                       persist_dir=persist)
+    stack2.router.job_start("j1", "u", ["h0"])
+    stack2.router.job_end("j1")
+    report = load_job_report(stack2.backend.db("global"), "j1")
+    assert report is not None
+    assert any(a["rule"] == "compute_break" and a["state"] == "resolved"
+               for a in report["alerts"])
+    assert report["status"] == "unhealthy"
+    stack2.close()
+
+
+def test_recovery_writes_report_for_job_ended_while_down(tmp_path):
+    persist = str(tmp_path / "wal")
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path / "d1"),
+                                      persist_dir=persist)
+    stack.router.job_start("j1", "u", ["h0"])
+    stack.router.write([Point("hpm", {"hostname": "h0"}, {"mfu": 0.0},
+                              t * S) for t in range(0, 120, 10)])
+    stack.analysis.flush()
+    stack.backend.write([Point("job_event",
+                               {"jobid": "j1", "username": "u"},
+                               {"event": "end"}, 130 * S)], "global")
+    stack.close()
+    stack2 = MonitoringStack.inprocess(out_dir=str(tmp_path / "d2"),
+                                       persist_dir=persist)
+    report = load_job_report(stack2.backend.db("global"), "j1")
+    assert report is not None and report["status"] == "unhealthy"
+    stack2.close()
+
+
+def test_engine_raw_only_database_fallback():
+    """Rules keep evaluating (point granularity) on a rollup-disabled DB."""
+    server = TSDBServer(rollup_config=None)
+    _, eng = _engine(server=server)
+    db = server.db("global")
+    for t in range(0, 100, 10):
+        _put(db, t, 0.0)
+    eng.tick()
+    offline = evaluate_rules_on_db(db, [RULE], use_rollups=False)
+    assert _spans(eng.alerts) == _finding_spans(offline)
+    assert len(eng.alerts) == 1
+
+
+# --------------------------------------------------------------------------
+# Job lifecycle through the stack: end hook, pruning, footprint reports
+# --------------------------------------------------------------------------
+
+
+def _run_job(stack, job_id="j1", idle_host=None, steps=40, user="alice"):
+    hosts = [f"h{i}" for i in range(4)]
+    from repro.core import now_ns
+    with stack.job(job_id, user=user, hosts=hosts,
+                   tags={"arch": "demo"}) as job:
+        agents = [stack.host_agent(h, hlo_flops=5e14, model_flops=4e14,
+                                   hlo_bytes=2e11, collective_bytes=1e10,
+                                   tokens_per_step=1024) for h in hosts]
+        t0 = now_ns()
+        for step in range(steps):
+            ts = t0 + step * 5 * 10 ** 9
+            for a in agents:
+                stt = 500.0 if (a.hostname == idle_host and step > 10) \
+                    else 5.0
+                a.collect_step(step=step, step_time_s=stt,
+                               extra_events={"data_wait_s": 0.1}, ts=ts)
+    return job
+
+
+def test_job_end_resolves_prunes_and_reports(tmp_path):
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path))
+    _run_job(stack, idle_host="h3")
+    alerts = stack.findings()
+    assert any(a.rule == "compute_break" and a.host == "h3" for a in alerts)
+    # job end closed every episode at its last violation and pruned state
+    assert all(not a.active for a in alerts)
+    stats = stack.analysis.engine_stats()
+    assert stats["series_tracked"] == 0 and stats["alerts_active"] == 0
+    # footprint report was persisted; the engine serves it back
+    report = stack.analysis.job_report("j1")
+    assert report is not None and report["running"] is False
+    assert report["status"] == "unhealthy"
+    assert report["metrics"]["mfu"]["samples"] > 0
+    assert report["pattern"]
+    assert any(a["rule"] == "compute_break" for a in report["alerts"])
+    assert load_job_report(stack.backend.db("global"), "j1") == report
+    # sequential reuse of the host in a NEW job starts a fresh episode
+    _run_job(stack, job_id="j2", idle_host="h3")
+    j2 = [a for a in stack.findings() if a.jobid == "j2"]
+    assert any(a.rule == "compute_break" for a in j2)
+
+
+def test_dashboard_reads_persisted_findings_no_rescan(tmp_path,
+                                                      monkeypatch):
+    """Acceptance: build_dashboard must not rescan the DB with the rule
+    evaluator per render — it reads the engine's persisted findings."""
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path))
+    job = _run_job(stack, idle_host="h3")
+
+    def boom(*a, **k):
+        raise AssertionError("dashboard re-ran the full-DB rule scan")
+
+    import repro.core.analysis as analysis_mod
+    monkeypatch.setattr(analysis_mod, "evaluate_rules_on_db", boom)
+    monkeypatch.setattr(analysis_mod, "evaluate_rule", boom)
+    dash = stack.dashboards.build_dashboard(job)
+    head = dash["dashboard"]["header"]
+    assert head["status"] == "unhealthy"
+    assert any(a["rule"] == "compute_break" and a["state"] == "resolved"
+               for a in head["analysis"])
+    # the analysis measurement itself is a header, not an app panel row
+    assert not any(r["title"].startswith("app:analysis")
+                   for r in dash["dashboard"]["rows"])
+    view = stack.dashboards.build_admin_view([job])
+    assert view["jobs"][0]["alerts"] >= 1
+    assert view["jobs"][0]["status"] == "unhealthy"
+
+
+# --------------------------------------------------------------------------
+# Restart recovery through the WAL
+# --------------------------------------------------------------------------
+
+
+def test_alert_state_survives_restart(tmp_path):
+    persist = str(tmp_path / "wal")
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path / "d1"),
+                                      persist_dir=persist)
+    stack.router.job_start("j1", "u", ["h0"])
+    pts = [Point("hpm", {"hostname": "h0"}, {"mfu": 0.0}, t * S)
+           for t in range(0, 120, 10)]
+    stack.router.write(pts)
+    stack.analysis.flush()
+    (a,) = stack.analysis.active_alerts()
+    start0 = a.start_ns
+    stack.close()
+
+    stack2 = MonitoringStack.inprocess(out_dir=str(tmp_path / "d2"),
+                                       persist_dir=persist)
+    assert stack2.analysis_recovery["alerts_recovered"] == 1
+    (a2,) = stack2.analysis.active_alerts()
+    assert a2.active and a2.start_ns == start0 and a2.jobid == "j1"
+    # the scheduler replays the allocation; the SAME episode continues —
+    # no duplicate re-fire — then resolves at its true last violation
+    stack2.router.job_start("j1", "u", ["h0"])
+    stack2.router.write([Point("hpm", {"hostname": "h0"}, {"mfu": 0.0},
+                               t * S) for t in range(120, 160, 10)])
+    stack2.router.write([Point("hpm", {"hostname": "h0"}, {"mfu": 0.9},
+                               t * S) for t in range(160, 260, 10)])
+    stack2.analysis.flush()
+    episodes = load_alerts(stack2.backend.db("global"))
+    assert len(episodes) == 1
+    assert episodes[0].start_ns == start0
+    assert episodes[0].state == "resolved"
+    assert episodes[0].end_ns == 150 * S
+    stack2.close()
+
+
+def test_recovery_resolves_alerts_of_dead_jobs(tmp_path):
+    persist = str(tmp_path / "wal")
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path / "d1"),
+                                      persist_dir=persist)
+    stack.router.job_start("j1", "u", ["h0"])
+    stack.router.write([Point("hpm", {"hostname": "h0"}, {"mfu": 0.0},
+                              t * S) for t in range(0, 120, 10)])
+    stack.analysis.flush()
+    assert stack.analysis.active_alerts()
+    # the job's end lands in the DB without the engine seeing it (e.g.
+    # another instance recorded it while this one was down)
+    stack.backend.write([Point("job_event",
+                               {"jobid": "j1", "username": "u"},
+                               {"event": "end"}, 130 * S)], "global")
+    stack.close()
+
+    stack2 = MonitoringStack.inprocess(out_dir=str(tmp_path / "d2"),
+                                       persist_dir=persist)
+    assert stack2.analysis_recovery["alerts_closed"] == 1
+    assert stack2.analysis_recovery["alerts_recovered"] == 0
+    assert load_alerts(stack2.backend.db("global"), state="active") == []
+    stack2.close()
+
+
+# --------------------------------------------------------------------------
+# HTTP endpoints on a sharded backend (+ remote client surface)
+# --------------------------------------------------------------------------
+
+
+def _get_json(url):
+    with urllib.request.urlopen(url) as r:
+        return json.loads(r.read())
+
+
+def test_http_alerts_and_reports_sharded(tmp_path):
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path), shards=4)
+    _run_job(stack, job_id="jdone", idle_host="h3")       # ended, resolved
+    # a second job still running with an active violation
+    stack.router.job_start("jlive", "bob", ["g0"])
+    stack.router.write([Point("hpm", {"hostname": "g0"}, {"mfu": 0.0},
+                              t * S) for t in range(0, 120, 10)])
+    with LMSHttpServer(stack.router) as srv:
+        alerts = _get_json(f"{srv.url}/alerts")["alerts"]
+        assert {a["jobid"] for a in alerts} >= {"jdone", "jlive"}
+        active = _get_json(f"{srv.url}/alerts?state=active")["alerts"]
+        assert {a["jobid"] for a in active} == {"jlive"}
+        assert all(a["state"] == "firing" for a in active)
+        done = _get_json(f"{srv.url}/alerts?jobid=jdone")["alerts"]
+        assert done and all(a["state"] == "resolved" for a in done)
+        # reports: persisted for the ended job, live for the running one
+        rep = _get_json(f"{srv.url}/jobs/jdone/report")["report"]
+        assert rep["running"] is False and rep["status"] == "unhealthy"
+        live = _get_json(f"{srv.url}/jobs/jlive/report")["report"]
+        assert live["running"] is True
+        assert any(a["rule"] == "compute_break" for a in live["alerts"])
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{srv.url}/jobs/nope/report")
+        assert ei.value.code == 404
+        # engine counters over /meta
+        stats = _get_json(f"{srv.url}/meta?what=analysis")["analysis"]
+        assert stats["alerts_fired"] >= 2
+        # remote client surface + federation-by-concatenation (persisted
+        # last_ns lags live state by up to the extend-persist interval,
+        # so compare episode identity, not the moving edge)
+        client = HttpQueryClient(srv.url)
+        remote = client.alerts(state="active")
+        assert sorted((a.rule, a.host, a.jobid, a.start_ns)
+                      for a in remote) == \
+            sorted((a.rule, a.host, a.jobid, a.start_ns)
+                   for a in stack.analysis.active_alerts())
+        assert client.job_report("jdone")["pattern"] == rep["pattern"]
+        assert client.job_report("nope") is None
+        # load_alerts works over the Database-shaped remote view too
+        local = load_alerts(stack.backend.db("global"), jobid="jdone")
+        assert _spans(load_alerts(client, jobid="jdone")) == _spans(local)
+    stack.close()
