@@ -10,7 +10,11 @@ job-signal endpoint), then plays three external clients against it:
   2. the libusermetric CLI sending app metrics/events from a "batch
      script" (paper §IV),
   3. a raw ``urllib`` client standing in for "cronjobs sending metrics
-     with curl" (paper §III.A).
+     with curl" (paper §III.A),
+  4. a ``POST /query/v2`` client running a *derived-metric query*
+     (``repro.core.query``): a performance-group formula evaluated at
+     query time over the stored windows, grouped and top-k'd server-side
+     — nothing in the stored points ever carried the derived metric.
 
 Everything lands tagged in the TSDB; the dashboard agent renders the job.
 The stack runs with crash-safe persistence on (``persist_dir``): run the
@@ -69,6 +73,23 @@ def main():
     body = f"temperature,hostname=n01 celsius=61.5 {now_ns()}".encode()
     urllib.request.urlopen(urllib.request.Request(
         f"{url}/write?db=global", data=body, method="POST"))
+
+    # 4. derived-metric query over the wire: load per MB of network send,
+    #    derived at query time from the daemon's stored raw fields (no
+    #    such metric was ever POSTed), 10 s windows, grouped by host
+    spec = {"measurement": "system",
+            "metrics": [["load_per_net_mb",
+                         "cpu_load_1m / (net_tx_bytes / 1e6 + 1)"]],
+            "window_ns": 10 * 10 ** 9, "group_by": "hostname",
+            "order_by": "load_per_net_mb", "limit": 3}
+    req = urllib.request.Request(
+        f"{url}/query/v2", data=json.dumps({"spec": spec}).encode(),
+        method="POST", headers={"Content-Type": "application/json"})
+    res = json.load(urllib.request.urlopen(req))["result"]
+    for host, metrics in res["groups"].items():
+        windows = metrics["load_per_net_mb"]["values"]
+        print(f"derived load_per_net_mb[{host}]: {len(windows)} windows, "
+              f"last={windows[-1]:.4g}")
 
     sink.job_end("batch-7")
 

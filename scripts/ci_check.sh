@@ -22,6 +22,7 @@ timeout "${CI_FAST_TIMEOUT:-600}" python -m pytest -q \
     tests/test_router.py \
     tests/test_federation.py \
     tests/test_lms_stack.py \
+    tests/test_query.py \
     tests/test_analysis.py \
     tests/test_analysis_engine.py
 

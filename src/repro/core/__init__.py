@@ -25,7 +25,12 @@ from repro.core.jobs import JobInfo, JobRegistry
 from repro.core.line_protocol import (Point, decode_batch, decode_line,
                                       encode_batch, encode_point, now_ns)
 from repro.core.perf_groups import (GROUPS, HBM_BW, ICI_BW, PEAK_FLOPS,
-                                    PerfGroup, derive_all, parse_group)
+                                    CompiledFormula, PerfGroup,
+                                    compile_formula, derive_all,
+                                    formula_for, parse_group,
+                                    register_group)
+from repro.core.query import (QueryEngine, QueryResult, QuerySpec,
+                              derived_rollup_series, make_plan)
 from repro.core.rollup import (DEFAULT_TIERS_NS, ROLLUP_AGGS, RollupConfig,
                                SeriesRollups, WindowAgg)
 from repro.core.httpd import HttpQueryClient
@@ -36,19 +41,22 @@ from repro.core.usermetric import UserMetric
 from repro.core.wal import DurableStore, SegmentedWal, import_legacy_jsonl
 
 __all__ = [
-    "ANALYSIS_MEASUREMENT", "Alert", "AnalysisEngine",
+    "ANALYSIS_MEASUREMENT", "Alert", "AnalysisEngine", "CompiledFormula",
     "DEFAULT_TIERS_NS", "DEFAULT_TREE", "Database", "DashboardAgent",
     "DurableStore", "FederatedQuery", "Finding", "GROUPS", "HBM_BW",
     "HostAgent", "SegmentedWal", "import_legacy_jsonl",
     "HttpQueryClient", "HttpSink", "ICI_BW", "JobInfo", "JobRegistry",
     "LMSHttpServer", "MetricsRouter", "MonitoringStack", "PEAK_FLOPS",
-    "PerfGroup", "Point", "ROLLUP_AGGS", "RollupConfig",
+    "PerfGroup", "Point", "QueryEngine", "QueryResult", "QuerySpec",
+    "ROLLUP_AGGS", "RollupConfig",
     "RooflineAnalyzer", "RooflineResult", "SeriesRollups",
     "ShardedDatabase", "StreamAnalyzer", "TSDBServer", "ThresholdRule",
-    "UserMetric", "WindowAgg", "classify_job", "decode_batch",
-    "decode_line", "default_rules", "derive_all", "encode_batch",
-    "encode_point", "evaluate_rules_on_db", "load_alerts",
-    "load_job_report", "now_ns", "parse_group", "shard_index",
+    "UserMetric", "WindowAgg", "classify_job", "compile_formula",
+    "decode_batch", "decode_line", "default_rules", "derive_all",
+    "derived_rollup_series", "encode_batch", "encode_point",
+    "evaluate_rules_on_db", "formula_for", "load_alerts",
+    "load_job_report", "make_plan", "now_ns", "parse_group",
+    "register_group", "shard_index",
 ]
 
 

@@ -91,6 +91,13 @@ class ThresholdRule:
     resolves only after the metric has stayed non-violating for this long
     past the last violation (0 = resolve at the first clear sample, the
     exact offline-scan semantics).
+
+    ``expr`` makes ``metric`` a *query-time derived* metric: a
+    performance-group formula (``repro.core.perf_groups``) over the
+    measurement's stored fields, evaluated per rollup window (or per raw
+    point on rollup-disabled databases) by ``repro.core.query`` — so a
+    rule can threshold a metric that was never emitted at collection
+    time (e.g. ``hbm_bw_util`` over stored raw byte counters).
     """
 
     name: str
@@ -102,6 +109,7 @@ class ThresholdRule:
     severity: str = "warning"          # warning | critical
     description: str = ""
     clear_duration_s: float = 0.0
+    expr: Optional[str] = None
 
     def check(self, value: float) -> bool:
         if value is None or (isinstance(value, float) and math.isnan(value)):
@@ -304,11 +312,27 @@ def evaluate_rules_on_db(db, rules: list, *, jobid: Optional[str] = None,
     for rule in rules:
         tags = {"jobid": jobid} if jobid else None
         series_list = None
-        if use_rollups is not False and rollups_available:
-            series_list = db.rollup_series(rule.measurement, rule.metric,
-                                           agg="mean", tags=tags)
-        if not series_list and use_rollups is not True:
-            series_list = db.select(rule.measurement, [rule.metric], tags)
+        if rule.expr:
+            # query-time derived metric (repro.core.query): per-series
+            # windows (or raw points) of a formula over stored fields
+            from repro.core.query import (derived_rollup_series,
+                                          derived_select_series)
+            if use_rollups is not False and rollups_available:
+                series_list = derived_rollup_series(
+                    db, rule.measurement, rule.metric, rule.expr,
+                    tags=tags)
+            if not series_list and use_rollups is not True:
+                series_list = derived_select_series(
+                    db, rule.measurement, rule.metric, rule.expr,
+                    tags=tags)
+        else:
+            if use_rollups is not False and rollups_available:
+                series_list = db.rollup_series(rule.measurement,
+                                               rule.metric,
+                                               agg="mean", tags=tags)
+            if not series_list and use_rollups is not True:
+                series_list = db.select(rule.measurement, [rule.metric],
+                                        tags)
         for series in series_list or []:
             vals = series.values.get(rule.metric)
             if not vals:
@@ -769,6 +793,18 @@ class AnalysisEngine:
     @staticmethod
     def _rule_series(db, rule: ThresholdRule, tags: Optional[dict],
                      t_min: Optional[int], rollups: bool) -> list:
+        if rule.expr:
+            # derived rule input (repro.core.query): the metric is a
+            # formula over the measurement's stored fields, evaluated per
+            # rollup window — it need never have been emitted
+            from repro.core.query import (derived_rollup_series,
+                                          derived_select_series)
+            if rollups:
+                return derived_rollup_series(db, rule.measurement,
+                                             rule.metric, rule.expr,
+                                             tags=tags, t_min=t_min)
+            return derived_select_series(db, rule.measurement, rule.metric,
+                                         rule.expr, tags=tags, t_min=t_min)
         if rollups:
             return db.rollup_series(rule.measurement, rule.metric,
                                     agg="mean", tags=tags, t_min=t_min)

@@ -16,7 +16,10 @@ surface (``measurements``/``field_keys``/``select``/``rollup_*``), so
 ``backend.db(name)`` may hand back a plain ``Database``, a hash-
 partitioned ``repro.core.shard.ShardedDatabase`` or any federated view —
 per-job dashboards render identically either way (scatter-gather happens
-below this layer).
+below this layer).  Panel sparklines execute through the derived-metric
+query engine (``repro.core.query``): the per-panel window query is
+planned once and cached against the ingest watermark, so re-rendering an
+unchanged dashboard costs O(1) per panel.
 
 The analysis header reads the findings the continuous engine
 (``repro.core.analysis.AnalysisEngine``) persisted into the ``analysis``
@@ -30,11 +33,14 @@ from __future__ import annotations
 import html
 import json
 import os
+import weakref
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core.analysis import ANALYSIS_MEASUREMENT, load_alerts
 from repro.core.jobs import JobInfo
+from repro.core.query import QueryEngine, QuerySpec
 from repro.core.tsdb import TSDBServer
 
 # --------------------------------------------------------------------------
@@ -106,8 +112,39 @@ class DashboardAgent:
     panel_templates: dict = field(
         default_factory=lambda: dict(PANEL_TEMPLATES))
 
+    # fallback engines kept for at most this many distinct views — per-
+    # render throwaway views (a fresh FederatedQuery per request) must
+    # not accumulate engines + caches for the process lifetime
+    MAX_FALLBACK_ENGINES = 8
+
     def __post_init__(self):
         os.makedirs(self.out_dir, exist_ok=True)
+        # id(db) -> (weakref-to-db, engine): the weakref validates the id
+        # against object reuse after GC; a WeakKeyDictionary would not
+        # work here (the engine strongly references its backend — the
+        # key — so entries would never be collected)
+        self._engines: "OrderedDict" = OrderedDict()
+
+    def _engine(self, db, db_name: Optional[str] = None) -> QueryEngine:
+        # prefer the backend's shared per-database registry
+        # (TSDBServer.query_engine) so dashboard renders and /query/v2
+        # requests hit the SAME watermark-keyed cache — a private engine
+        # here would recompute panels the server already cached
+        registry = getattr(self.backend, "query_engine", None)
+        if registry is not None and db_name is not None and \
+                db is self.backend.db(db_name):
+            return registry(db_name)
+        key = id(db)
+        ent = self._engines.get(key)
+        if ent is not None and ent[0]() is db:
+            self._engines.move_to_end(key)
+            return ent[1]
+        eng = QueryEngine(db)
+        self._engines[key] = (weakref.ref(db), eng)
+        self._engines.move_to_end(key)
+        while len(self._engines) > self.MAX_FALLBACK_ENGINES:
+            self._engines.popitem(last=False)
+        return eng
 
     # -- template assembly (the paper's core mechanism) -----------------------
 
@@ -187,7 +224,8 @@ class DashboardAgent:
         out = []
         for job in jobs:
             findings = load_alerts(db, jobid=job.job_id)
-            thumb = self._series_for(db, "hpm", "mfu", job.job_id)
+            thumb = self._series_for(db, "hpm", "mfu", job.job_id,
+                                     db_name=db_name)
             out.append({"jobid": job.job_id, "user": job.user,
                         "hosts": len(job.hosts),
                         "running": job.running,
@@ -212,7 +250,8 @@ class DashboardAgent:
     MAX_PANEL_POINTS = 400
 
     def _series_for(self, db, meas: str, fieldname: str,
-                    jobid: str, host: Optional[str] = None):
+                    jobid: str, host: Optional[str] = None,
+                    db_name: Optional[str] = None):
         # ``db`` is any Database-shaped view (plain, sharded, federated)
         tags = {"jobid": jobid}
         if host:
@@ -220,7 +259,9 @@ class DashboardAgent:
         # transparent rollup read: finest tier that fits the panel budget,
         # coarsest tier if nothing fits — O(#windows) instead of a raw
         # rescan, and still renders after raw-point retention.  The tier is
-        # chosen from cheap stored-window counts so only one merge runs.
+        # chosen from cheap stored-window counts; the panel query itself
+        # goes through the query engine, so a repeated render of the same
+        # dashboard is a cache hit until the measurement ingests again.
         cfg = getattr(db, "rollup_config", None)
         if cfg is not None:
             chosen = None
@@ -234,10 +275,12 @@ class DashboardAgent:
                 if cnt <= self.MAX_PANEL_POINTS:
                     break
             if chosen is not None:
-                out = db.rollup_aggregate(meas, fieldname, agg="mean",
-                                          tags=tags, window_ns=chosen)
-                if out:
-                    return out[""]
+                res = self._engine(db, db_name).query(QuerySpec(
+                    measurement=meas, metrics=(fieldname,), tags=tags,
+                    window_ns=chosen))
+                ts, vs = res.column(fieldname)
+                if ts:
+                    return ts, vs
         ts, vs = [], []
         for s in db.select(meas, [fieldname], tags):
             ts.extend(s.times)
@@ -285,7 +328,8 @@ class DashboardAgent:
             for panel in row["panels"]:
                 tgt = panel["targets"][0]
                 ts, vs = self._series_for(db, tgt["measurement"],
-                                          tgt["field"], job.job_id)
+                                          tgt["field"], job.job_id,
+                                          db_name=db_name)
                 parts.append(f"<div><b>{html.escape(panel['title'])}</b><br>"
                              f"{self._sparkline(ts, vs)}</div>")
         parts.append("</body></html>")

@@ -74,6 +74,8 @@ class HostAgent:
         # compile): hlo_flops, hlo_bytes, collective_bytes, model_flops,
         # tokens_per_step, hbm_bytes_in_use
         self.step_constants = dict(device_constants or {})
+        # previous cumulative-counter sample + its monotonic clock, for
+        # the per-interval rate fields (see RATE_FIELDS)
         self._last_sys: Optional[dict] = None
         self._last_t = time.monotonic()
         # >1: buffer points and hand the router whole batches (paper §III.A
@@ -89,6 +91,42 @@ class HostAgent:
 
     # -- system metrics (Diamond/Ganglia analogue) -------------------------------
 
+    # cumulative counter field -> the per-interval rate field derived from
+    # consecutive samples; cpu seconds become fractions of the wall
+    # interval (1.0 = one core fully busy)
+    RATE_FIELDS = {
+        "cpu_user_s": "cpu_user_frac",
+        "cpu_sys_s": "cpu_sys_frac",
+        "read_bytes": "read_bytes_per_s",
+        "write_bytes": "write_bytes_per_s",
+        "net_rx_bytes": "net_rx_bytes_per_s",
+        "net_tx_bytes": "net_tx_bytes_per_s",
+    }
+
+    def _rate_fields(self, counters: dict, now_m: float) -> dict:
+        """Per-interval rates from consecutive cumulative-counter samples.
+
+        A negative delta means the counter reset underneath us (process
+        restart feeding the same hostname, kernel counter wrap): that
+        field's rate is skipped for this interval and the new value
+        becomes the baseline — a reset must never emit a huge negative
+        (or wrapped-positive) rate.
+        """
+        prev, dt = self._last_sys, now_m - self._last_t
+        out = {}
+        if prev is not None and dt > 0:
+            for k, rate_name in self.RATE_FIELDS.items():
+                cur, last = counters.get(k), prev.get(k)
+                if cur is None or last is None:
+                    continue
+                delta = cur - last
+                if delta < 0:           # counter reset -> skip, re-baseline
+                    continue
+                out[rate_name] = delta / dt
+        self._last_sys = counters
+        self._last_t = now_m
+        return out
+
     def collect_system(self) -> Point:
         ru = resource.getrusage(resource.RUSAGE_SELF)
         try:
@@ -103,6 +141,8 @@ class HostAgent:
             **{k: float(v) for k, v in _read_proc_io().items()},
             **{k: float(v) for k, v in _read_net_dev().items()},
         }
+        counters = {k: fields[k] for k in self.RATE_FIELDS if k in fields}
+        fields.update(self._rate_fields(counters, time.monotonic()))
         return Point("system", {"hostname": self.hostname}, fields, now_ns())
 
     # -- per-step HPM ------------------------------------------------------------

@@ -8,6 +8,19 @@ curl cronjobs, Ganglia pull-proxies in the paper) integrates unchanged:
     POST /write?db=global           body: line protocol (batched)
     POST /job/start                 body: JSON {jobid, user, hosts, tags}
     POST /job/end                   body: JSON {jobid}
+    POST /query/v2[?db=]            body: JSON {"spec": QuerySpec.to_dict(),
+                                    "mode": "result"|"partials"} — the
+                                    derived-metric query engine
+                                    (``repro.core.query``).  mode=result
+                                    executes the whole spec server-side
+                                    (planned against this instance's
+                                    tiers, served from the watermark-
+                                    keyed cache) and returns the
+                                    finalized groups; mode=partials
+                                    returns the *mergeable* per-input
+                                    WindowAgg partials — the federated
+                                    pushdown wire format
+                                    (``HttpQueryClient.query_partials``)
     GET  /ping
     GET  /query?db=&m=&field=&agg=  simple JSON query (dashboards/tests);
                                     &window_ns= adds windowed aggregation
@@ -92,6 +105,12 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
         n = int(self.headers.get("Content-Length", 0))
         return self.rfile.read(n) if n else b""
 
+    def _known_db(self, name: str) -> bool:
+        """True for databases that already exist (or the router's global
+        scope, which may simply not have ingested yet)."""
+        return name == self.router.global_db or \
+            name in self.router.backend.databases()
+
     def do_GET(self):
         try:
             self._do_get()
@@ -167,8 +186,27 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
                     {"tags": s.tags, "times": s.times, "fields": s.values}
                     for s in series]})
         elif url.path == "/meta":
-            db = self.router.backend.db(q.get("db", "global"))
             what = q.get("what", "measurements")
+            if what in ("query_cache", "data_version"):
+                # checked BEFORE backend.db() resolves (and registers)
+                # the name: these metas are hit programmatically per
+                # cache check, and an unknown database must 404, not
+                # mint a database (+ engine) per caller-supplied name
+                name = q.get("db", "global")
+                if not self._known_db(name):
+                    self._send(404, {"error": f"unknown database "
+                                              f"{name!r}"})
+                elif what == "query_cache":
+                    self._send(200, {"query_cache": self.router.backend
+                                     .query_engine(name).cache_info()})
+                else:
+                    # the query-cache ingest watermark (repro.core.query):
+                    # lets a *local* engine cache results over this remote
+                    self._send(200, {"version": self.router.backend
+                                     .db(name).data_version(
+                                         q.get("m") or None)})
+                return
+            db = self.router.backend.db(q.get("db", "global"))
             if what == "measurements":
                 self._send(200, {"values": db.measurements()})
             elif what == "fields":
@@ -243,6 +281,35 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
                 d = json.loads(body)
                 self.router.job_end(d["jobid"])
                 self._send(200, {"ok": True})
+            elif url.path == "/query/v2":
+                from repro.core.query import (QuerySpec,
+                                              encode_plan_partials)
+                q = dict(urllib.parse.parse_qsl(url.query,
+                                                keep_blank_values=True))
+                d = json.loads(body)
+                spec = QuerySpec.from_dict(d["spec"])
+                name = q.get("db", d.get("db", "global"))
+                if not self._known_db(name):
+                    # like /admin/snapshot: a caller-supplied name must
+                    # not register a fresh database + engine per request
+                    # (a remote-fillable leak)
+                    self._send(404, {"error": f"unknown database "
+                                              f"{name!r}"})
+                    return
+                engine = self.router.backend.query_engine(name)
+                if d.get("mode") == "partials":
+                    # the pushdown half: this instance plans against its
+                    # own tiers/retention and ships mergeable partials
+                    windowed = spec.window_ns is not None
+                    collected = engine.collect(spec)
+                    self._send(200, {
+                        "windowed": windowed,
+                        "inputs": encode_plan_partials(collected,
+                                                       windowed)})
+                else:
+                    res = engine.query(spec)
+                    self._send(200, {"result": res.to_dict(),
+                                     "meta": res.meta})
             elif url.path == "/admin/snapshot":
                 # operator trigger: snapshot + compact one database (the
                 # ?db= param) or every persisted database
@@ -389,6 +456,49 @@ class HttpQueryClient:
             except Exception:               # noqa: BLE001
                 msg = str(e)
             raise ValueError(f"remote query failed: {msg}") from None
+
+    def _post(self, path: str, payload: dict) -> dict:
+        req = urllib.request.Request(
+            f"{self.url}{path}", data=json.dumps(payload).encode(),
+            method="POST", headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout_s) as r:
+                return json.loads(r.read())
+        except urllib.error.HTTPError as e:
+            try:
+                msg = json.loads(e.read()).get("error", str(e))
+            except Exception:               # noqa: BLE001
+                msg = str(e)
+            raise ValueError(f"remote query failed: {msg}") from None
+
+    # -- derived-metric query engine (repro.core.query) -----------------------
+
+    def query_partials(self, spec) -> dict:
+        """Whole-spec pushdown: one ``POST /query/v2`` carrying the spec;
+        the remote plans against its own tiers/retention and returns
+        *mergeable* per-input ``WindowAgg`` partials — no raw series
+        cross the wire.  This is what a ``FederatedQuery`` /
+        ``QueryEngine`` calls when this client is a backend."""
+        from repro.core.query import decode_plan_partials
+        resp = self._post("/query/v2", {"db": self.db, "mode": "partials",
+                                        "spec": spec.to_dict()})
+        return decode_plan_partials(resp["inputs"], resp["windowed"])
+
+    def query(self, spec):
+        """Execute a full spec remotely (``mode=result``): planned,
+        cached and finalized server-side — repeated dashboard-shape
+        queries hit the remote's watermark-keyed cache."""
+        from repro.core.query import QueryResult
+        resp = self._post("/query/v2", {"db": self.db, "mode": "result",
+                                        "spec": spec.to_dict()})
+        return QueryResult.from_dict(resp["result"], resp.get("meta"))
+
+    def data_version(self, measurement=None) -> int:
+        """The remote ingest watermark — lets a local engine cache
+        results over this remote (one cheap ``/meta`` round trip per
+        cache check instead of re-running the query)."""
+        return self._get("/meta", {"db": self.db, "what": "data_version",
+                                   "m": measurement})["version"]
 
     def _query_params(self, measurement, field, tags, t_min, t_max,
                       group_by_tag, window_ns, use_rollups="auto") -> dict:

@@ -22,6 +22,7 @@ and evaluated with a tiny safe arithmetic evaluator (no eval()).
 from __future__ import annotations
 
 import ast
+import functools
 import operator
 from dataclasses import dataclass, field
 from typing import Optional
@@ -42,7 +43,7 @@ HW_CONSTANTS = {
 
 
 # --------------------------------------------------------------------------
-# Safe formula evaluation
+# Safe formula evaluation (compiled once, applied many times)
 # --------------------------------------------------------------------------
 
 _BINOPS = {ast.Add: operator.add, ast.Sub: operator.sub,
@@ -52,30 +53,127 @@ _UNOPS = {ast.USub: operator.neg, ast.UAdd: operator.pos}
 _FUNCS = {"min": min, "max": max, "abs": abs}
 
 
+def _build(node, names: list):
+    """AST node -> ``fn(env) -> float`` closure (no AST walking at eval
+    time).  Only the whitelisted arithmetic subset compiles; anything else
+    raises ValueError at *compile* time.  ``names`` collects every bare
+    identifier the formula references (first-seen order, deduplicated) —
+    what the query planner turns into input columns."""
+    if isinstance(node, ast.Expression):
+        return _build(node.body, names)
+    if isinstance(node, ast.Constant):
+        if isinstance(node.value, (int, float)) and \
+                not isinstance(node.value, bool):
+            c = float(node.value)
+            return lambda env: c
+        raise ValueError(f"bad constant {node.value!r}")
+    if isinstance(node, ast.Name) or (
+            isinstance(node, ast.Attribute) and
+            isinstance(node.value, ast.Name)):
+        # a bare identifier, or the query engine's cross-measurement
+        # reference ``measurement.field`` (one dotted level) — both look
+        # up ``env`` by their full spelling
+        ident = node.id if isinstance(node, ast.Name) \
+            else f"{node.value.id}.{node.attr}"
+        if ident not in names:
+            names.append(ident)
+
+        def name_fn(env, ident=ident):
+            if ident in env:
+                return float(env[ident])
+            if ident in HW_CONSTANTS:
+                return HW_CONSTANTS[ident]
+            raise KeyError(ident)
+        return name_fn
+    if isinstance(node, ast.BinOp) and type(node.op) in _BINOPS:
+        op = _BINOPS[type(node.op)]
+        left, right = _build(node.left, names), _build(node.right, names)
+        return lambda env: op(left(env), right(env))
+    if isinstance(node, ast.UnaryOp) and type(node.op) in _UNOPS:
+        op = _UNOPS[type(node.op)]
+        operand = _build(node.operand, names)
+        return lambda env: op(operand(env))
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in _FUNCS:
+        func = _FUNCS[node.func.id]
+        args = [_build(a, names) for a in node.args]
+        return lambda env: func(*[a(env) for a in args])
+    raise ValueError(f"disallowed syntax: {ast.dump(node)}")
+
+
+class CompiledFormula:
+    """One parsed + compiled formula: a closure tree built once from the
+    AST, then applied per evaluation — no re-parse, no AST walk.
+
+    ``eval`` reproduces the historical ``eval_formula`` semantics exactly
+    (env lookup first, then ``HW_CONSTANTS``, else ``KeyError``).
+    ``eval_columns`` is the query engine's vectorized form: the same
+    compiled closure applied across aligned window columns, with a ``None``
+    hole wherever the scalar evaluation would have raised ``KeyError`` /
+    ``ZeroDivisionError`` (missing input or domain error for that window).
+    """
+
+    __slots__ = ("expr", "names", "_fn")
+
+    def __init__(self, expr: str):
+        self.expr = expr
+        names: list = []
+        self._fn = _build(ast.parse(expr, mode="eval"), names)
+        self.names = tuple(names)
+
+    def eval(self, env: dict) -> float:
+        return self._fn(env)
+
+    def eval_columns(self, cols: dict, n: int) -> list:
+        """Apply across ``n`` aligned windows.  ``cols`` maps input name ->
+        value list of length ``n`` (``None`` holes where the window has no
+        value for that input; names absent from ``cols`` entirely fall back
+        to ``HW_CONSTANTS`` exactly like scalar evaluation).
+
+        A window whose evaluation is unanswerable yields ``None``:
+        missing input (KeyError) and domain errors — division by zero,
+        overflow, or a complex result (``(a-b) ** 0.5`` with a < b) —
+        must skip the window, never leak a non-float into query results
+        or threshold comparisons."""
+        fn = self._fn
+        series = [(k, cols.get(k)) for k in self.names]
+        out = []
+        for i in range(n):
+            env = {}
+            for k, col in series:
+                if col is not None:
+                    v = col[i]
+                    if v is not None:
+                        env[k] = v
+            try:
+                v = fn(env)
+            except (KeyError, ZeroDivisionError, OverflowError):
+                v = None
+            else:
+                if isinstance(v, complex):
+                    v = None
+            out.append(v)
+        return out
+
+
+# Module-level parse cache: every PerfGroup.derive / query-engine plan
+# compiles a given formula text exactly once per process.  Bounded (a
+# remote /query/v2 spec carries caller-written formula text, so an
+# unbounded cache would be a remote-fillable leak), thread-safe and
+# LRU-by-recency — sustained distinct-formula traffic cannot evict the
+# hot built-in group formulas that every collection tick derives.
+# Parse errors are not cached, so a bad formula raises on every call,
+# exactly like direct construction.
+compile_formula = functools.lru_cache(maxsize=4096)(CompiledFormula)
+
+
 def eval_formula(expr: str, env: dict) -> float:
-    """Evaluate an arithmetic expression over ``env`` (names -> numbers)."""
-    def ev(node):
-        if isinstance(node, ast.Expression):
-            return ev(node.body)
-        if isinstance(node, ast.Constant):
-            if isinstance(node.value, (int, float)):
-                return float(node.value)
-            raise ValueError(f"bad constant {node.value!r}")
-        if isinstance(node, ast.Name):
-            if node.id in env:
-                return float(env[node.id])
-            if node.id in HW_CONSTANTS:
-                return HW_CONSTANTS[node.id]
-            raise KeyError(node.id)
-        if isinstance(node, ast.BinOp) and type(node.op) in _BINOPS:
-            return _BINOPS[type(node.op)](ev(node.left), ev(node.right))
-        if isinstance(node, ast.UnaryOp) and type(node.op) in _UNOPS:
-            return _UNOPS[type(node.op)](ev(node.operand))
-        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
-                and node.func.id in _FUNCS:
-            return _FUNCS[node.func.id](*[ev(a) for a in node.args])
-        raise ValueError(f"disallowed syntax: {ast.dump(node)}")
-    return ev(ast.parse(expr, mode="eval"))
+    """Evaluate an arithmetic expression over ``env`` (names -> numbers).
+
+    Compiles through the module-level cache, so repeated evaluation of the
+    same formula (every collection tick, every query window) pays the
+    parse exactly once."""
+    return compile_formula(expr).eval(env)
 
 
 # --------------------------------------------------------------------------
@@ -90,15 +188,30 @@ class PerfGroup:
     metrics: list                      # (metric name, formula) pairs
     description: str = ""
 
-    def derive(self, raw_events: dict, strict: bool = False) -> dict:
-        """raw events -> derived metrics; missing events skip the metric."""
+    def derive(self, raw_events: dict, strict: bool = False,
+               skipped: Optional[list] = None) -> dict:
+        """raw events -> derived metrics; missing events skip the metric.
+
+        With ``strict=False`` a skipped metric is *recorded*, not silently
+        swallowed: pass ``skipped`` (a list) to receive ``(metric_name,
+        reason)`` pairs — ``reason`` names the missing event or the
+        division by zero.  Formulas are compiled once per process
+        (module-level parse cache in :func:`compile_formula`).
+        """
         out = {}
         for mname, formula in self.metrics:
             try:
-                out[mname] = eval_formula(formula, raw_events)
-            except (KeyError, ZeroDivisionError):
+                out[mname] = compile_formula(formula).eval(raw_events)
+            except KeyError as e:
                 if strict:
                     raise
+                if skipped is not None:
+                    skipped.append((mname, f"missing event {e.args[0]!r}"))
+            except ZeroDivisionError:
+                if strict:
+                    raise
+                if skipped is not None:
+                    skipped.append((mname, "division by zero"))
         return out
 
 
@@ -188,9 +301,46 @@ def available_groups() -> list:
     return sorted(GROUPS)
 
 
-def derive_all(raw_events: dict) -> dict:
+def register_group(text: str) -> PerfGroup:
+    """Parse and register a deployment-specific group (LIKWID drops group
+    files into a directory; here the text registers in-process).  Its
+    metrics immediately become resolvable by :func:`formula_for`, i.e.
+    answerable by the query engine *retroactively* over stored raw events
+    — no collection-time change needed."""
+    g = parse_group(text)
+    GROUPS[g.name] = g
+    return g
+
+
+def formula_for(metric: str) -> Optional[str]:
+    """The formula behind a group metric name, or None.
+
+    ``metric`` may be qualified (``MEM.hbm_bw_util``) to pin a group, or
+    bare (``hbm_bw_util``) to search every registered group — the hook
+    that lets a query spec (``repro.core.query``) or an analysis rule name
+    any group metric and have it derived at query time from stored raw
+    events."""
+    if "." in metric:
+        gname, _, mname = metric.partition(".")
+        g = GROUPS.get(gname)
+        if g is not None:
+            for name, formula in g.metrics:
+                if name == mname:
+                    return formula
+        return None
+    # snapshot before iterating: register_group may insert concurrently
+    # (the httpd is a threading server), and a size change mid-iteration
+    # would raise RuntimeError out of a perfectly valid query
+    for g in list(GROUPS.values()):
+        for name, formula in g.metrics:
+            if name == metric:
+                return formula
+    return None
+
+
+def derive_all(raw_events: dict, skipped: Optional[list] = None) -> dict:
     """Run every group whose event set is (partially) satisfied."""
     out = {}
-    for g in GROUPS.values():
-        out.update(g.derive(raw_events))
+    for g in list(GROUPS.values()):     # snapshot vs concurrent register
+        out.update(g.derive(raw_events, skipped=skipped))
     return out

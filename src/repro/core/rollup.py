@@ -320,17 +320,22 @@ class SeriesRollups:
 
     # -- retention -----------------------------------------------------------
 
-    def trim(self, now_ts: int, max_age_ns: Optional[int] = None):
-        """Drop windows whose *end* is older than ``max_age_ns``."""
+    def trim(self, now_ts: int, max_age_ns: Optional[int] = None) -> int:
+        """Drop windows whose *end* is older than ``max_age_ns``;
+        returns the number of windows dropped (0 = nothing changed, so
+        retention need not invalidate query caches)."""
         age = max_age_ns if max_age_ns is not None else self.config.max_age_ns
         if age is None:
-            return
+            return 0
+        dropped = 0
         for tiers in self._fields.values():
             for tier_ns, wins in tiers.items():
                 cutoff = now_ts - age
                 stale = [w0 for w0 in wins if w0 + tier_ns <= cutoff]
                 for w0 in stale:
                     del wins[w0]
+                dropped += len(stale)
+        return dropped
 
     def window_count(self) -> int:
         return sum(len(w) for tiers in self._fields.values()

@@ -218,6 +218,31 @@ class FederatedQuery:
             return merge_scalar_partials(parts)
         return merge_windowed_partials(parts)
 
+    def query_partials(self, spec) -> dict:
+        """Whole-spec pushdown of a ``repro.core.query.QuerySpec``: each
+        backend executes the full sub-plan (against its *own* tier and
+        retention state — backends exposing ``query_partials``, i.e.
+        remote instances and nested federations, receive the spec in one
+        round trip) and the per-input ``WindowAgg`` partials merge with
+        the standard rules.  Replaces pulling raw series off remotes."""
+        from repro.core.query import (collect_backend_partials,
+                                      merge_plan_partials)
+
+        def collect(b):
+            qp = getattr(b, "query_partials", None)
+            return qp(spec) if qp is not None \
+                else collect_backend_partials(b, spec)
+
+        return merge_plan_partials(self._fanout(collect),
+                                   spec.window_ns is not None)
+
+    def data_version(self, measurement=None) -> int:
+        """Summed backend watermarks — moves iff some backend's data for
+        the measurement moved, which is all the query cache needs.
+        Raises AttributeError if any backend cannot report one (the
+        engine then simply never caches over this view)."""
+        return sum(b.data_version(measurement) for b in self.backends)
+
     def rollup_window_partials(self, measurement: str, field: str,
                                **kw) -> dict:
         return merge_windowed_partials(self._fanout(
@@ -391,6 +416,13 @@ class ShardedDatabase:
     def rollup_window_partials(self, measurement: str, field: str,
                                **kw) -> dict:
         return self._fed.rollup_window_partials(measurement, field, **kw)
+
+    def query_partials(self, spec) -> dict:
+        """Sub-plan per shard, partials merged (repro.core.query)."""
+        return self._fed.query_partials(spec)
+
+    def data_version(self, measurement=None) -> int:
+        return self._fed.data_version(measurement)
 
     def rollup_series(self, measurement: str, field: str, **kw) -> list:
         return self._fed.rollup_series(measurement, field, **kw)

@@ -36,6 +36,7 @@ from __future__ import annotations
 import bisect
 import operator
 import os
+import random
 import threading
 from collections import defaultdict
 from dataclasses import dataclass
@@ -76,6 +77,18 @@ class Database:
         self._lock = threading.RLock()
         self._meas: dict = defaultdict(dict)     # meas -> tags_key -> store
         self._count = 0
+        # per-measurement ingest watermark (monotonic; bumped by writes,
+        # snapshot restores and retention) — what the query-engine result
+        # cache keys on (repro.core.query).  The random per-instance
+        # epoch makes watermarks from different database *incarnations*
+        # disjoint: without it, a long-lived client engine could cache a
+        # result at counter N, watch the backend restart and re-count its
+        # way back to exactly N with different data, and serve the stale
+        # entry as a hit.
+        self._versions: dict = defaultdict(int)
+        # SystemRandom: immune to user random.seed() calls, which would
+        # otherwise reproduce identical epochs across incarnations
+        self._version_epoch = random.SystemRandom().getrandbits(62)
         self.rollup_config = rollup_config
 
     # -- write --------------------------------------------------------------
@@ -127,6 +140,7 @@ class Database:
                     self._meas[meas][key] = store
                 cap = store.extend(items)
                 self._count += len(items)
+                self._versions[meas] += 1
                 if captured is not None:
                     if cap is None:     # out-of-order fallback path
                         cap = self.transpose_items(items)
@@ -161,6 +175,7 @@ class Database:
                     self._meas[meas][key] = store
                 store.extend_columns(times, cols)
                 self._count += len(times)
+                self._versions[meas] += 1
 
     # -- snapshot state (repro.core.wal) -------------------------------------
 
@@ -194,6 +209,7 @@ class Database:
                 if store.rollups is not None and e.get("rollups"):
                     store.rollups.restore_state(e["rollups"])
                 self._meas[e["m"]][_tags_key(store.tags)] = store
+                self._versions[e["m"]] += 1
 
     def add_count(self, n: int):
         """Credit ``n`` toward :meth:`point_count` (snapshot restore: the
@@ -233,6 +249,19 @@ class Database:
             return sum(len(store.times)
                        for stores in self._meas.values()
                        for store in stores.values())
+
+    def data_version(self, measurement: Optional[str] = None) -> int:
+        """Ingest watermark: changes whenever the measurement's data
+        changes (write batch, snapshot restore, retention trim), and
+        never repeats across database incarnations (random epoch base).
+        ``None`` covers all measurements.  The query engine
+        (``repro.core.query``) keys its result cache on this — O(1) to
+        read, and a repeated query is served from cache exactly until
+        the data underneath it moved."""
+        with self._lock:
+            if measurement is None:
+                return self._version_epoch + sum(self._versions.values())
+            return self._version_epoch + self._versions.get(measurement, 0)
 
     # -- query ---------------------------------------------------------------
 
@@ -506,11 +535,20 @@ class Database:
         now = now_ns()
         cutoff = now - max_age_ns if max_age_ns else None
         with self._lock:
-            for stores in self._meas.values():
+            for meas, stores in self._meas.items():
+                changed = False
                 for store in stores.values():
-                    store.trim(cutoff, max_points_per_series)
-                    if store.rollups is not None:
-                        store.rollups.trim(now, rollup_max_age_ns)
+                    if store.trim(cutoff, max_points_per_series):
+                        changed = True
+                    if store.rollups is not None and \
+                            store.rollups.trim(now, rollup_max_age_ns):
+                        changed = True
+                # invalidate cached query results over this measurement —
+                # but only when the sweep actually dropped something, so
+                # a periodic retention timer that finds nothing expired
+                # does not defeat the O(1)-re-render cache
+                if changed:
+                    self._versions[meas] += 1
 
 
 def _agg(vals: list, agg: str):
@@ -653,7 +691,10 @@ class _SeriesStore:
             return None
         return self.times[lo:hi], vals
 
-    def trim(self, cutoff, max_points):
+    def trim(self, cutoff, max_points) -> bool:
+        """Drop raw points before ``cutoff`` / beyond ``max_points``;
+        True iff anything was removed (retention bumps the measurement's
+        data version only then)."""
         lo = 0
         if cutoff is not None:
             lo = bisect.bisect_left(self.times, cutoff)
@@ -665,6 +706,8 @@ class _SeriesStore:
             # materializing columns for fields first seen after a trim
             self.values = defaultdict(
                 list, {k: v[lo:] for k, v in self.values.items()})
+            return True
+        return False
 
 
 class TSDBServer:
@@ -697,6 +740,7 @@ class TSDBServer:
                              f"got {fsync!r}")
         self._dbs: dict = {}
         self._stores: dict = {}          # name -> wal.DurableStore
+        self._engines: dict = {}         # name -> query.QueryEngine
         self._lock = threading.RLock()
         self._persist_dir = persist_dir
         self._rollup_config = rollup_config
@@ -740,6 +784,18 @@ class TSDBServer:
                     fsync=self._fsync,
                     segment_max_bytes=self._wal_segment_bytes)
             return self._stores[name]
+
+    def query_engine(self, name: str = "global"):
+        """The shared derived-metric query engine over one database
+        (``repro.core.query.QueryEngine``) — one per database, so the
+        HTTP ``/query/v2`` endpoint and the dashboard agent hit the same
+        watermark-keyed result cache."""
+        with self._lock:
+            eng = self._engines.get(name)
+            if eng is None:
+                from repro.core.query import QueryEngine
+                eng = self._engines[name] = QueryEngine(self.db(name))
+            return eng
 
     def databases(self) -> list:
         with self._lock:

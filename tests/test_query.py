@@ -1,0 +1,733 @@
+"""Derived-metric query engine (``repro.core.query``).
+
+Contracts under test:
+
+* **Derivation parity** — vectorized query-time derivation
+  (``CompiledFormula.eval_columns``) equals per-window scalar
+  ``eval_formula``, including skip semantics (missing input / division by
+  zero), for arbitrary window columns (hypothesis property + seeded
+  fallback).
+* **Planner tier selection** — a window nesting into a rollup tier plans
+  onto the rollup path (and keeps answering after raw retention); a
+  misaligned window falls back to a raw rescan with the same
+  window-granularity range semantics.
+* **Cache** — results are cached per (plan fingerprint, ingest
+  watermark): repeat queries are hits, ingest into a touched measurement
+  (and retention) invalidates, ingest into *other* measurements does not.
+* **Execution transparency** — one spec answers byte-identically local,
+  sharded (sub-plans per shard, merged ``WindowAgg`` partials) and
+  HTTP-federated (``POST /query/v2`` whole-spec pushdown).
+* Satellites: precompiled formulas (module parse cache), ``PerfGroup.
+  derive`` skip recording, ``ThresholdRule.expr`` derived rule inputs,
+  ``HostAgent`` per-interval rate fields with counter-reset guards.
+"""
+
+import json
+import random
+import urllib.error
+import urllib.request
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import MonitoringStack
+from repro.core.analysis import AnalysisEngine, ThresholdRule, \
+    evaluate_rules_on_db
+from repro.core.host_agent import HostAgent
+from repro.core.httpd import HttpQueryClient, LMSHttpServer
+from repro.core.line_protocol import Point
+from repro.core.perf_groups import (GROUPS, HBM_BW, CompiledFormula,
+                                    compile_formula, derive_all,
+                                    eval_formula, formula_for,
+                                    register_group)
+from repro.core.query import (QueryEngine, QuerySpec,
+                              derived_rollup_series, derived_select_series,
+                              make_plan)
+from repro.core.router import MetricsRouter
+from repro.core.rollup import RollupConfig
+from repro.core.shard import FederatedQuery, ShardedDatabase
+from repro.core.tsdb import Database, TSDBServer
+
+S = 1_000_000_000
+
+
+# --------------------------------------------------------------------------
+# dataset helpers — float-exact values (binary fractions) so federated
+# merge order cannot perturb sums and byte-identical comparisons hold
+# --------------------------------------------------------------------------
+
+
+def _raw_event_points(n_steps=120, hosts=4):
+    """hpm points carrying ONLY raw events (no derived metric stored) +
+    system points for cross-measurement joins."""
+    pts = []
+    for i in range(n_steps):
+        for h in range(hosts):
+            tags = {"hostname": f"h{h}", "jobid": f"j{h % 2}"}
+            pts.append(Point("hpm", tags,
+                             {"hlo_bytes": float((h + 1) * 2 ** 30),
+                              "hlo_flops": float((h + 1) * 2 ** 40),
+                              "step_time_s": 0.5 + 0.25 * (i % 2)},
+                             i * S))
+            pts.append(Point("system", tags,
+                             {"cpu_load_1m": 1.0 + 0.5 * h}, i * S))
+    return pts
+
+
+def _write(db, pts, batch=64):
+    for i in range(0, len(pts), batch):
+        db.write(pts[i:i + batch])
+
+
+# --------------------------------------------------------------------------
+# compiled formulas (satellite: precompile once, record skips)
+# --------------------------------------------------------------------------
+
+
+def test_formula_parse_cache_returns_same_object():
+    a = compile_formula("hlo_bytes / step_time_s / HBM_BW")
+    b = compile_formula("hlo_bytes / step_time_s / HBM_BW")
+    assert a is b
+    assert a.names == ("hlo_bytes", "step_time_s", "HBM_BW")
+
+
+def test_eval_formula_unchanged_semantics():
+    assert eval_formula("a + 2 * b", {"a": 1, "b": 3}) == 7.0
+    assert eval_formula("min(a, b)", {"a": 4, "b": 3}) == 3.0
+    assert eval_formula("HBM_BW / 1e9", {}) == pytest.approx(819.0)
+    # env shadows hardware constants, like it always did
+    assert eval_formula("HBM_BW", {"HBM_BW": 2.0}) == 2.0
+    with pytest.raises(KeyError):
+        eval_formula("missing + 1", {})
+    with pytest.raises(ValueError):
+        compile_formula("__import__('os')")
+
+
+def test_dotted_cross_measurement_names():
+    cf = compile_formula("hpm.mfu / system.cpu_load_1m")
+    assert cf.names == ("hpm.mfu", "system.cpu_load_1m")
+    assert cf.eval({"hpm.mfu": 1.0, "system.cpu_load_1m": 2.0}) == 0.5
+
+
+def test_derive_records_skipped_metrics():
+    skipped = []
+    out = GROUPS["MEM"].derive({"hlo_bytes": 1e9, "step_time_s": 0.0},
+                               skipped=skipped)
+    # step_time_s == 0 -> division by zero; hbm_bytes_in_use missing
+    assert "mem_gb_per_s" not in out
+    reasons = dict(skipped)
+    assert reasons["mem_gb_per_s"] == "division by zero"
+    assert "hbm_bytes_in_use" in reasons["hbm_used_gb"]
+    # derive_all threads the same recording through every group
+    skipped2 = []
+    derive_all({"step_time_s": 1.0}, skipped=skipped2)
+    assert ("gflops_per_s", "missing event 'hlo_flops'") in skipped2
+    # strict still raises
+    with pytest.raises(ZeroDivisionError):
+        GROUPS["MEM"].derive({"hlo_bytes": 1e9, "step_time_s": 0.0},
+                             strict=True)
+
+
+def test_formula_for_and_register_group():
+    assert formula_for("hbm_bw_util") == "hlo_bytes / step_time_s / HBM_BW"
+    assert formula_for("MEM.hbm_bw_util") == \
+        "hlo_bytes / step_time_s / HBM_BW"
+    assert formula_for("nope") is None
+    register_group("""
+    GROUP QTEST
+    EVENTSET
+      a
+    METRICS
+      qtest_double  a * 2
+    """)
+    try:
+        assert formula_for("qtest_double") == "a * 2"
+        spec = QuerySpec("m", ("@QTEST.qtest_double",))
+        assert spec.metrics == (("qtest_double", "a * 2"),)
+    finally:
+        del GROUPS["QTEST"]
+
+
+# --------------------------------------------------------------------------
+# parity property: vectorized == per-window scalar eval_formula
+# --------------------------------------------------------------------------
+
+_PARITY_FORMULAS = (
+    "a / b",
+    "a + 2 * b - c",
+    "min(a, b) / max(c, 1)",
+    "a / (b - b)",                    # always divides by zero
+    "a / step_time_s / HBM_BW",
+    "-a ** 2 + abs(c)",
+)
+
+
+def _check_parity(formula, cols, n):
+    cf = compile_formula(formula)
+    vec = cf.eval_columns(cols, n)
+    assert len(vec) == n
+    for i in range(n):
+        env = {k: col[i] for k, col in cols.items()
+               if col[i] is not None}
+        try:
+            expect = eval_formula(formula, env)
+            if isinstance(expect, complex):     # domain error -> skipped
+                expect = None
+        except (KeyError, ZeroDivisionError, OverflowError):
+            expect = None
+        assert vec[i] == expect or (
+            expect != expect and vec[i] != vec[i])    # NaN == NaN
+
+
+def _random_cols(rng, n):
+    cols = {}
+    for name in ("a", "b", "c", "step_time_s"):
+        if rng.random() < 0.8:
+            cols[name] = [
+                None if rng.random() < 0.3
+                else rng.choice([0.0, 0.25, -1.5, 3.0, rng.random()])
+                for _ in range(n)]
+    return cols
+
+
+def test_domain_errors_skip_the_window():
+    """Complex results and overflow must skip (None), never leak a
+    non-float into JSON results or threshold comparisons."""
+    cf = compile_formula("(a - b) ** 0.5")
+    assert cf.eval_columns({"a": [1.0, 3.0], "b": [3.0, 1.0]}, 2) == \
+        [None, pytest.approx(2 ** 0.5)]
+    cf = compile_formula("a ** b")
+    assert cf.eval_columns({"a": [9.0], "b": [1e9]}, 1) == [None]
+    # through the full engine (windowed and scalar forms)
+    db = Database("t")
+    db.write([Point("hpm", {"hostname": "h0"}, {"a": 1.0, "b": 3.0},
+                    i * S) for i in range(3)])
+    for spec in (QuerySpec("hpm", ("m=(a - b) ** 0.5",), window_ns=S),
+                 QuerySpec("hpm", ("m=(a - b) ** 0.5",))):
+        res = QueryEngine(db).query(spec)
+        assert all("m" not in g for g in res.groups.values())
+        json.dumps(res.to_dict())           # JSON-safe, no complex
+
+
+def test_vectorized_equals_scalar_eval_seeded():
+    rng = random.Random(1234)
+    for _ in range(200):
+        n = rng.randrange(0, 12)
+        cols = _random_cols(rng, n)
+        for formula in _PARITY_FORMULAS:
+            _check_parity(formula, cols, n)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2 ** 32 - 1), st.integers(0, 15))
+def test_property_vectorized_equals_scalar_eval(seed, n):
+    rng = random.Random(seed)
+    cols = _random_cols(rng, n)
+    for formula in _PARITY_FORMULAS:
+        _check_parity(formula, cols, n)
+
+
+# --------------------------------------------------------------------------
+# planner: tier selection
+# --------------------------------------------------------------------------
+
+
+def test_planner_aligned_window_uses_rollups():
+    cfg = RollupConfig()
+    spec = QuerySpec("hpm", ("@hbm_bw_util",), window_ns=10 * S)
+    plan = make_plan(spec, cfg)
+    assert plan.use_rollups and plan.tier_ns == 10 * S
+    # a coarser multiple nests too (60s tier under a 120s window)
+    plan = make_plan(QuerySpec("hpm", ("x",), window_ns=120 * S), cfg)
+    assert plan.use_rollups and plan.tier_ns == 60 * S
+
+
+def test_planner_misaligned_window_falls_back_to_raw():
+    cfg = RollupConfig()
+    plan = make_plan(QuerySpec("hpm", ("x",), window_ns=int(1.5 * S)), cfg)
+    assert not plan.use_rollups and plan.tier_ns is None
+    # no rollups at all -> raw
+    plan = make_plan(QuerySpec("hpm", ("x",), window_ns=10 * S), None)
+    assert not plan.use_rollups
+    # scalar specs always scan raw
+    plan = make_plan(QuerySpec("hpm", ("x",)), cfg)
+    assert not plan.use_rollups
+
+
+def test_planner_inputs_resolution():
+    spec = QuerySpec("hpm", ("r=hlo_flops / system.cpu_load_1m / HBM_BW",
+                             "step_time_s"))
+    plan = make_plan(spec, RollupConfig())
+    assert plan.inputs == (("hpm", "hlo_flops"),
+                           ("system", "cpu_load_1m"),
+                           ("hpm", "step_time_s"))
+    assert plan.measurements == ("hpm", "system")
+
+
+def test_misaligned_raw_equals_aligned_rollup_content():
+    """The raw fallback uses the same window-granularity range semantics
+    as the rollup path: the same grid, expanded to whole windows."""
+    db = Database("t")
+    _write(db, _raw_event_points())
+    aligned = QuerySpec("hpm", ("step_time_s",), window_ns=10 * S,
+                        t_min=15 * S, t_max=94 * S)
+    raw = QuerySpec("hpm", ("step_time_s",), window_ns=10 * S,
+                    t_min=15 * S, t_max=94 * S, agg="mean",
+                    group_by="hostname")
+    eng = QueryEngine(db)
+    res = eng.query(aligned)
+    (times, _vals) = res.column("step_time_s")
+    # whole windows: the window containing t_min and t_max both included
+    assert times[0] == 10 * S and times[-1] == 90 * S
+    # force raw by breaking tier nesting is covered above; here compare
+    # rollup-planned vs raw-collected content through a raw-only database
+    db_raw = Database("raw", rollup_config=None)
+    _write(db_raw, _raw_event_points())
+    res_raw = QueryEngine(db_raw).query(aligned)
+    assert res_raw.to_json() == res.to_json()
+
+
+def test_post_retention_served_from_rollup_tier():
+    """Raw points trimmed away: the aligned plan answers identically
+    from the surviving rollup windows."""
+    db = Database("t")
+    _write(db, _raw_event_points())
+    spec = QuerySpec("hpm", ("@hbm_bw_util", "step_time_s"),
+                     window_ns=10 * S, group_by="jobid")
+    before = QueryEngine(db).query(spec).to_json()
+    db.enforce_retention(max_points_per_series=1)
+    assert db.stored_points() < 20
+    after = QueryEngine(db).query(spec).to_json()
+    assert after == before
+    # the raw-only twin loses the history
+    db_raw = Database("raw", rollup_config=None)
+    _write(db_raw, _raw_event_points())
+    db_raw.enforce_retention(max_points_per_series=1)
+    res = QueryEngine(db_raw).query(spec)
+    got = sum(len(m["times"]) for g in res.groups.values()
+              for m in g.values())
+    assert got < 20
+
+
+# --------------------------------------------------------------------------
+# cache: watermark-keyed LRU
+# --------------------------------------------------------------------------
+
+
+def test_cache_hit_and_invalidation_on_ingest():
+    db = Database("t")
+    _write(db, _raw_event_points())
+    eng = QueryEngine(db)
+    spec = QuerySpec("hpm", ("@hbm_bw_util",), window_ns=10 * S,
+                     group_by="hostname")
+    r1 = eng.query(spec)
+    r2 = eng.query(spec)
+    assert r2 is r1                      # O(1) repeat render
+    assert eng.cache_info()["cache_hits"] == 1
+    # ingest into a touched measurement invalidates...
+    db.write([Point("hpm", {"hostname": "h0", "jobid": "j0"},
+                    {"hlo_bytes": float(2 ** 30), "step_time_s": 0.5},
+                    500 * S)])
+    r3 = eng.query(spec)
+    assert r3 is not r1
+    assert r3.column("hbm_bw_util", "h0")[0][-1] == 500 * S
+    # ...ingest into an unrelated measurement does not
+    db.write([Point("other", {"hostname": "h0"}, {"v": 1.0}, 1 * S)])
+    assert eng.query(spec) is r3
+    # a retention sweep that finds nothing expired keeps the cache warm
+    db.enforce_retention(max_points_per_series=10 ** 9)
+    assert eng.query(spec) is r3
+    # retention that actually drops data invalidates (data moved)
+    db.enforce_retention(max_points_per_series=1)
+    r4 = eng.query(spec)
+    assert r4 is not r3 and r4.to_json() == r3.to_json()
+
+
+def test_watermark_failure_degrades_to_uncached():
+    """A backend whose watermark probe fails (older remote without
+    /meta?what=data_version) must still answer — uncached, never a
+    crash."""
+    db = Database("t")
+    _write(db, _raw_event_points(n_steps=10))
+
+    class View:
+        rollup_config = db.rollup_config
+
+        def aggregate_partials(self, *a, **k):
+            return db.aggregate_partials(*a, **k)
+
+        def data_version(self, measurement=None):
+            raise ValueError("remote query failed: unknown meta "
+                             "'data_version'")
+
+    eng = QueryEngine(View())
+    spec = QuerySpec("hpm", ("step_time_s",), window_ns=10 * S)
+    res = eng.query(spec)
+    assert res.groups and eng.query(spec) is not res    # runs, uncached
+
+
+def test_cache_lru_eviction_and_plan_reuse():
+    db = Database("t")
+    _write(db, _raw_event_points(n_steps=20))
+    eng = QueryEngine(db, cache_size=2)
+    specs = [QuerySpec("hpm", ("step_time_s",), window_ns=w)
+             for w in (S, 10 * S, 60 * S)]
+    for spec in specs:
+        eng.query(spec)
+    info = eng.cache_info()
+    assert info["cached_results"] == 2 and info["cached_plans"] == 3
+    # distinct specs -> distinct fingerprints; same spec -> same plan
+    assert eng.plan(specs[0]) is eng.plan(
+        QuerySpec("hpm", ("step_time_s",), window_ns=S))
+
+
+# --------------------------------------------------------------------------
+# spec wire form
+# --------------------------------------------------------------------------
+
+
+def test_spec_roundtrip_and_fingerprint():
+    spec = QuerySpec("hpm", ("@hbm_bw_util", "s=step_time_s * 2", "step"),
+                     tags={"jobid": "j1"}, t_min=S, t_max=90 * S,
+                     window_ns=10 * S, group_by="hostname",
+                     order_by="hbm_bw_util", limit=3)
+    back = QuerySpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert back == spec
+    assert back.fingerprint() == spec.fingerprint()
+    # group references resolve into the fingerprint (formula text), so a
+    # changed group definition cannot serve a stale cached result
+    assert dict(spec.metrics)["hbm_bw_util"] == \
+        "hlo_bytes / step_time_s / HBM_BW"
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        QuerySpec("hpm", ())
+    with pytest.raises(ValueError):
+        QuerySpec("hpm", ("a", "a"))
+    with pytest.raises(ValueError):
+        QuerySpec("hpm", ("a",), agg="median")
+    with pytest.raises(ValueError):
+        QuerySpec("hpm", ("a",), order_by="b")
+    with pytest.raises(ValueError):
+        QuerySpec("hpm", ("@no_such_metric",))
+
+
+# --------------------------------------------------------------------------
+# execution transparency: local == sharded == HTTP-federated
+# --------------------------------------------------------------------------
+
+_EQ_SPECS = [
+    QuerySpec("hpm", ("@hbm_bw_util", "step_time_s"), window_ns=10 * S,
+              group_by="hostname"),
+    QuerySpec("hpm", ("@hbm_bw_util",), window_ns=10 * S,
+              group_by="jobid", order_by="hbm_bw_util", limit=3,
+              t_min=10 * S, t_max=110 * S),
+    # cross-measurement join: bytes per unit of host load
+    QuerySpec("hpm", ("bpl=hlo_bytes / system.cpu_load_1m",),
+              window_ns=60 * S, group_by="hostname",
+              order_by="bpl", limit=2),
+    QuerySpec("hpm", ("@hbm_bw_util",), group_by="jobid"),    # scalar
+    QuerySpec("hpm", ("@gflops_per_s",), window_ns=int(1.5 * S),
+              group_by="hostname"),                           # raw plan
+]
+
+
+def test_sharded_equals_unsharded():
+    pts = _raw_event_points()
+    single = Database("one")
+    _write(single, pts)
+    for shards in (2, 4, 7):
+        sharded = ShardedDatabase("many", shards=shards)
+        _write(sharded, pts)
+        for spec in _EQ_SPECS:
+            a = QueryEngine(single).query(spec)
+            b = QueryEngine(sharded).query(spec)
+            assert a.to_json() == b.to_json(), (shards, spec.metrics)
+
+
+def test_http_federated_equals_local():
+    """Two LMS instances (each sharded), spec pushed down via
+    /query/v2 — byte-identical to one local database holding the union,
+    with pushdown round-trips cached on the remote."""
+    pts = _raw_event_points()
+    single = Database("one")
+    _write(single, pts)
+    routers = [MetricsRouter(TSDBServer(shards=2)) for _ in range(2)]
+    for p in pts:       # each host's series lives on exactly one instance
+        routers[int(p.tags["hostname"][1:]) % 2].backend.write([p])
+    with LMSHttpServer(routers[0]) as sa, LMSHttpServer(routers[1]) as sb:
+        fed = FederatedQuery([HttpQueryClient(sa.url),
+                              HttpQueryClient(sb.url)])
+        eng = QueryEngine(fed)
+        for spec in _EQ_SPECS:
+            a = QueryEngine(single).query(spec)
+            b = eng.query(spec)
+            assert a.to_json() == b.to_json(), spec.metrics
+        # remote watermarks unchanged -> the federated engine serves the
+        # repeat from its local cache
+        spec = _EQ_SPECS[0]
+        assert eng.query(spec) is eng.query(spec)
+        # full server-side execution (mode=result) agrees per instance
+        client = HttpQueryClient(sa.url)
+        remote = client.query(spec)
+        local = QueryEngine(routers[0].backend.db("global")).query(spec)
+        assert remote.to_json() == local.to_json()
+        # the remote's own engine cached the executed spec
+        meta = json.loads(urllib.request.urlopen(
+            f"{sa.url}/meta?what=query_cache").read())["query_cache"]
+        assert meta["queries"] >= 1
+        # data_version is remote-readable (the local cache key half)
+        assert client.data_version("hpm") == \
+            routers[0].backend.db("global").data_version("hpm")
+
+
+def test_derived_metric_from_raw_events_grouped_topk_post_retention():
+    """THE acceptance query: ``hbm_bw_util`` was never stored (points
+    carry raw events only); over a t_min/t_max range, grouped by jobid,
+    top-3 — answerable from the rollup tiers alone after raw retention,
+    locally and over HTTP."""
+    server = TSDBServer(shards=4)
+    db = server.db("global")
+    _write(db, _raw_event_points())
+    assert "hbm_bw_util" not in db.field_keys("hpm")
+    spec = QuerySpec("hpm", ("@hbm_bw_util",), t_min=10 * S, t_max=110 * S,
+                     window_ns=10 * S, group_by="jobid",
+                     order_by="hbm_bw_util", limit=3)
+    eng = QueryEngine(db)
+    before = eng.query(spec)
+    # j1 hosts (h1, h3) move more bytes -> ranked first
+    assert list(before.groups) == ["j1", "j0"]
+    expect = (2 ** 30 * (2 + 4) / 2) / 0.625 / HBM_BW
+    got = before.column("hbm_bw_util", "j1")[1]
+    assert got[0] == pytest.approx(expect)
+    # raw points gone -> identical answer from the rollup tiers
+    db.enforce_retention(max_points_per_series=1)
+    after = eng.query(spec)
+    assert after.to_json() == before.to_json()
+    # and over the wire
+    router = MetricsRouter(server)
+    with LMSHttpServer(router) as srv:
+        remote = HttpQueryClient(srv.url).query(spec)
+        assert remote.to_json() == before.to_json()
+
+
+# --------------------------------------------------------------------------
+# derived rule inputs (ThresholdRule.expr) through the analysis engine
+# --------------------------------------------------------------------------
+
+
+def _bw_rule():
+    # hbm_bw_util is never emitted by these points; the rule derives it
+    return ThresholdRule("low_bw", "hpm", "hbm_bw_util", "<", 0.001,
+                         min_duration_s=20.0, severity="warning",
+                         expr=formula_for("hbm_bw_util"))
+
+
+def test_derived_rule_series_and_offline_eval():
+    db = Database("t")
+    pts = []
+    for i in range(90):
+        bytes_ = 2 ** 30 if i < 40 else 2 ** 10     # collapses at i=40
+        pts.append(Point("hpm", {"hostname": "h0", "jobid": "j"},
+                         {"hlo_bytes": float(bytes_), "step_time_s": 1.0},
+                         i * S))
+    _write(db, pts)
+    series = derived_rollup_series(db, "hpm", "hbm_bw_util",
+                                   formula_for("hbm_bw_util"))
+    assert len(series) == 1
+    assert series[0].values["hbm_bw_util"][0] == \
+        pytest.approx(2 ** 30 / HBM_BW)
+    # raw twin agrees on a rollup-disabled database
+    db_raw = Database("r", rollup_config=None)
+    _write(db_raw, pts)
+    raw = derived_select_series(db_raw, "hpm", "hbm_bw_util",
+                                formula_for("hbm_bw_util"))
+    assert raw[0].values["hbm_bw_util"] == series[0].values["hbm_bw_util"]
+    findings = evaluate_rules_on_db(db, [_bw_rule()], jobid="j")
+    assert findings and findings[0].rule == "low_bw"
+    assert findings[0].start_ns == 40 * S
+
+
+def test_analysis_engine_fires_on_derived_metric():
+    server = TSDBServer()
+    router = MetricsRouter(server)
+    engine = AnalysisEngine([_bw_rule()], backend=server, auto_tick=False)
+    router.subscribe(engine)
+    router.jobs.on_end(engine.on_job_end)
+    router.job_start("j", "u", ["h0"])
+    pts = [Point("hpm", {"hostname": "h0"},
+                 {"hlo_bytes": float(2 ** 10), "step_time_s": 1.0}, i * S)
+           for i in range(60)]
+    for i in range(0, len(pts), 20):
+        router.write(pts[i:i + 20])
+    engine.flush(final=True)
+    assert engine.alerts, "derived-metric rule must fire"
+    a = engine.alerts[0]
+    assert a.rule == "low_bw" and a.host == "h0" and a.jobid == "j"
+    # parity with the offline scan over the same derived series
+    offline = evaluate_rules_on_db(server.db("global"), [_bw_rule()],
+                                   jobid="j")
+    assert offline[0].start_ns == a.start_ns
+    engine.close()
+
+
+# --------------------------------------------------------------------------
+# host agent rate fields (satellite)
+# --------------------------------------------------------------------------
+
+
+class _Router:
+    def __init__(self):
+        self.points = []
+
+    def write(self, p):
+        self.points.append(p)
+
+
+def test_host_agent_emits_interval_rates():
+    agent = HostAgent(_Router(), hostname="h0")
+    agent._rate_fields({"net_rx_bytes": 1000.0, "cpu_user_s": 1.0}, 10.0)
+    rates = agent._rate_fields({"net_rx_bytes": 3000.0, "cpu_user_s": 1.5},
+                               12.0)
+    assert rates["net_rx_bytes_per_s"] == pytest.approx(1000.0)
+    assert rates["cpu_user_frac"] == pytest.approx(0.25)
+    # counter reset: negative delta skipped, baseline renewed
+    rates = agent._rate_fields({"net_rx_bytes": 100.0, "cpu_user_s": 1.6},
+                               14.0)
+    assert "net_rx_bytes_per_s" not in rates
+    assert rates["cpu_user_frac"] == pytest.approx(0.05)
+    rates = agent._rate_fields({"net_rx_bytes": 300.0, "cpu_user_s": 1.7},
+                               16.0)
+    assert rates["net_rx_bytes_per_s"] == pytest.approx(100.0)
+
+
+def test_host_agent_collect_system_carries_rates():
+    agent = HostAgent(_Router(), hostname="h0")
+    p1 = agent.collect_system()
+    assert "cpu_user_frac" not in p1.fields          # no baseline yet
+    p2 = agent.collect_system()
+    assert "cpu_user_frac" in p2.fields
+    assert p2.fields["cpu_user_frac"] >= 0.0
+    assert "net_rx_bytes_per_s" in p2.fields or \
+        "net_rx_bytes" not in p2.fields
+
+
+def test_data_version_distinct_across_incarnations():
+    """A restarted (re-created) database must not re-count its way back
+    to a previously seen watermark with different data underneath — the
+    per-incarnation epoch keeps cache keys disjoint, even when the
+    process seeds the global random module deterministically."""
+    random.seed(7)
+    a = Database("t")
+    a.write([Point("m", {"hostname": "h"}, {"v": 1.0}, S)])
+    random.seed(7)
+    b = Database("t")
+    b.write([Point("m", {"hostname": "h"}, {"v": 2.0}, S)])
+    assert a.data_version("m") != b.data_version("m")
+
+
+def test_formula_cache_bounded_lru():
+    """The parse cache is bounded (remote specs carry caller-written
+    formula text) and LRU-by-recency, so a hot formula that keeps being
+    touched stays resident under distinct-formula floods."""
+    info = compile_formula.cache_info()
+    assert info.maxsize == 4096
+    hot = compile_formula("a + 314159")
+    for i in range(50):
+        compile_formula(f"a + {i} * 271828")
+        assert compile_formula("a + 314159") is hot
+    # compile errors are never cached; they raise on every call
+    for _ in range(2):
+        with pytest.raises(ValueError):
+            compile_formula("getattr(a, 'x')")
+
+
+def test_derived_select_series_over_http_client():
+    """ThresholdRule.expr raw-path inputs must stay federation-
+    transparent: the remote select wire form is single-field."""
+    server = TSDBServer()
+    db = server.db("global")
+    db.write([Point("hpm", {"hostname": "h0"},
+                    {"a": 6.0, "b": 2.0 + (i % 2)}, i * S)
+              for i in range(4)])
+    with LMSHttpServer(MetricsRouter(server)) as srv:
+        remote = HttpQueryClient(srv.url)
+        got = derived_select_series(remote, "hpm", "r", "a / b")
+        local = derived_select_series(db, "hpm", "r", "a / b")
+        assert [s.values for s in got] == [s.values for s in local]
+        assert got[0].values["r"] == [3.0, 2.0, 3.0, 2.0]
+
+
+def test_unknown_db_name_is_404_not_registered():
+    stack = MonitoringStack.inprocess(out_dir="/tmp/lms_q404")
+    with LMSHttpServer(stack.router) as srv:
+        body = json.dumps({"db": "nope",
+                           "spec": {"measurement": "m",
+                                    "metrics": [["v", None]]}}).encode()
+        req = urllib.request.Request(f"{srv.url}/query/v2", data=body,
+                                     method="POST")
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(req)
+        assert e.value.code == 404
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(
+                f"{srv.url}/meta?what=query_cache&db=nope")
+        assert e.value.code == 404
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(
+                f"{srv.url}/meta?what=data_version&db=nope")
+        assert e.value.code == 404
+    assert "nope" not in stack.backend.databases()
+    stack.close()
+
+
+def test_dashboard_fallback_engines_bounded():
+    """Per-render throwaway views must not pin an engine + caches each
+    for the process lifetime; same view keeps its engine."""
+    from repro.core import DashboardAgent
+    backend = TSDBServer()
+    agent = DashboardAgent(backend, out_dir="/tmp/lms_qdash")
+    views = [Database(f"v{i}") for i in range(20)]
+    engines = [agent._engine(v) for v in views]
+    assert len(agent._engines) <= agent.MAX_FALLBACK_ENGINES
+    assert agent._engine(views[-1]) is engines[-1]       # reused
+    # the backend's own databases go through the shared registry
+    db = backend.db("global")
+    assert agent._engine(db, "global") is backend.query_engine("global")
+
+
+# --------------------------------------------------------------------------
+# stack integration: dashboards render through the cached engine
+# --------------------------------------------------------------------------
+
+
+def test_dashboard_renders_through_query_engine(tmp_path):
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path))
+    hosts = ["h0", "h1"]
+    with stack.job("jq", user="u", hosts=hosts) as job:
+        agents = [stack.host_agent(h, hlo_flops=1e15, model_flops=8e14,
+                                   hlo_bytes=1e12, collective_bytes=1e11,
+                                   tokens_per_step=1e6) for h in hosts]
+        for s in range(120):
+            for a in agents:
+                a.collect_step(step=s, step_time_s=1.0, ts=s * S)
+    dash = stack.dashboards.build_dashboard(job)
+    html = stack.dashboards.render_html(job, dash)
+    assert "svg" in html
+    # renders go through the backend's SHARED engine registry — the same
+    # cache /query/v2 uses — not a private dashboard-only engine
+    eng = stack.backend.query_engine("global")
+    assert eng.stats["queries"] > 0
+    assert stack.dashboards._engine(stack.backend.db("global"),
+                                    "global") is eng
+    # an unchanged re-render is served from the cache
+    before = dict(eng.stats)
+    stack.dashboards.render_html(job, dash)
+    assert eng.stats["cache_hits"] > before["cache_hits"]
+    assert eng.stats["cache_misses"] == before["cache_misses"]
+    stack.close()
