@@ -11,6 +11,10 @@ job-signal endpoint), then plays three external clients against it:
      script" (paper §IV),
   3. a raw ``urllib`` client standing in for "cronjobs sending metrics
      with curl" (paper §III.A),
+  3b. a high-rate collector on the *binary ingest plane*
+     (``repro.core.ingest``): persistent socket, columnar frames sharing
+     the WAL codec, explicit backpressure — with the HTTP line path as
+     automatic fallback,
   4. a ``POST /query/v2`` client running a *derived-metric query*
      (``repro.core.query``): a performance-group formula evaluated at
      query time over the stored windows, grouped and top-k'd server-side
@@ -39,7 +43,7 @@ def main():
     persist_dir = f"{tempfile.gettempdir()}/lms_standalone_wal"
     stack = MonitoringStack.inprocess(out_dir="standalone_out",
                                       persist_dir=persist_dir,
-                                      serve_http=True)
+                                      serve_http=True, serve_ingest=True)
     url = stack.http.url
     print(f"LMS router HTTP endpoint: {url}")
     if stack.recovery_stats:
@@ -73,6 +77,20 @@ def main():
     body = f"temperature,hostname=n01 celsius=61.5 {now_ns()}".encode()
     urllib.request.urlopen(urllib.request.Request(
         f"{url}/write?db=global", data=body, method="POST"))
+
+    # 3b. binary ingest plane: a high-rate collector on a persistent
+    #     socket (columnar frames = the WAL's own codec), HTTP fallback
+    #     configured; the server surfaces its counters on /meta
+    bsink = stack.binary_sink(fallback=HttpSink(url))
+    bsink.write([Point("hpm", {"hostname": "n01"},
+                       {"mfu": 0.41 + 0.0001 * s, "step": float(s)},
+                       t0 + s * 10 ** 9) for s in range(256)])
+    bsink.close()
+    ing = json.load(urllib.request.urlopen(
+        f"{url}/meta?what=ingest"))["ingest"]
+    print(f"binary ingest plane: {ing['points_ok']} pts over "
+          f"{ing['connections_total']} connection(s), "
+          f"{ing['shed_frames']} shed frames")
 
     # 4. derived-metric query over the wire: load per MB of network send,
     #    derived at query time from the daemon's stored raw fields (no

@@ -20,6 +20,7 @@ timeout "${CI_FAST_TIMEOUT:-600}" python -m pytest -q \
     tests/test_shard.py \
     tests/test_wal.py \
     tests/test_router.py \
+    tests/test_ingest.py \
     tests/test_federation.py \
     tests/test_lms_stack.py \
     tests/test_query.py \

@@ -34,6 +34,7 @@ from repro.core.query import (QueryEngine, QueryResult, QuerySpec,
 from repro.core.rollup import (DEFAULT_TIERS_NS, ROLLUP_AGGS, RollupConfig,
                                SeriesRollups, WindowAgg)
 from repro.core.httpd import HttpQueryClient
+from repro.core.ingest import BinarySink, IngestServer
 from repro.core.router import MetricsRouter
 from repro.core.shard import FederatedQuery, ShardedDatabase, shard_index
 from repro.core.tsdb import Database, TSDBServer
@@ -41,10 +42,11 @@ from repro.core.usermetric import UserMetric
 from repro.core.wal import DurableStore, SegmentedWal, import_legacy_jsonl
 
 __all__ = [
-    "ANALYSIS_MEASUREMENT", "Alert", "AnalysisEngine", "CompiledFormula",
+    "ANALYSIS_MEASUREMENT", "Alert", "AnalysisEngine", "BinarySink",
+    "CompiledFormula",
     "DEFAULT_TIERS_NS", "DEFAULT_TREE", "Database", "DashboardAgent",
     "DurableStore", "FederatedQuery", "Finding", "GROUPS", "HBM_BW",
-    "HostAgent", "SegmentedWal", "import_legacy_jsonl",
+    "HostAgent", "IngestServer", "SegmentedWal", "import_legacy_jsonl",
     "HttpQueryClient", "HttpSink", "ICI_BW", "JobInfo", "JobRegistry",
     "LMSHttpServer", "MetricsRouter", "MonitoringStack", "PEAK_FLOPS",
     "PerfGroup", "Point", "QueryEngine", "QueryResult", "QuerySpec",
@@ -78,7 +80,8 @@ class MonitoringStack:
                  rules: Optional[list] = None, out_dir: str = "lms_out",
                  persist_dir: Optional[str] = None, fsync: str = "batch",
                  recover: bool = True,
-                 serve_http: bool = False, shards: int = 1):
+                 serve_http: bool = False, serve_ingest: bool = False,
+                 shards: int = 1):
         self.backend = TSDBServer(persist_dir=persist_dir, shards=shards,
                                   fsync=fsync)
         # crash-safe durability: a restarted stack keeps serving the job
@@ -109,6 +112,11 @@ class MonitoringStack:
         self.http: Optional[LMSHttpServer] = None
         if serve_http:
             self.http = LMSHttpServer(self.router).start()
+        # binary ingest plane (repro.core.ingest), served alongside the
+        # HTTP endpoint: persistent sockets, backpressure, shed frames
+        self.ingest: Optional[IngestServer] = None
+        if serve_ingest:
+            self.ingest = IngestServer(self.router).start()
 
     @classmethod
     def inprocess(cls, **kw) -> "MonitoringStack":
@@ -161,8 +169,18 @@ class MonitoringStack:
         self.analysis.flush()
         return list(self.analysis.findings)
 
+    def binary_sink(self, db: str = "global", **kw) -> "BinarySink":
+        """A client for this stack's binary ingest plane (requires
+        ``serve_ingest=True``); pass ``fallback=HttpSink(...)`` to add
+        the HTTP line-path fallback."""
+        if self.ingest is None:
+            raise RuntimeError("stack was built without serve_ingest=True")
+        return BinarySink(self.ingest.host, self.ingest.port, db=db, **kw)
+
     def close(self):
         self.analysis.close()
         if self.http:
             self.http.stop()
+        if self.ingest:
+            self.ingest.stop()
         self.backend.close()

@@ -710,22 +710,27 @@ class AnalysisEngine:
     def flush(self, final: bool = False) -> "AnalysisEngine":
         """Synchronous tick — call before reading live state in tests or
         request handlers (``final`` also consumes held-back newest
-        windows)."""
-        self.tick(final=final)
+        windows).  Always a full sweep: the read-your-writes promise must
+        not depend on where the background ticker's counter happens to
+        sit (a series backfilled entirely below the cursor low-water —
+        e.g. a new job at older timestamps than a finished one — would
+        otherwise stay invisible for up to FULL_SWEEP_EVERY ticks)."""
+        self.tick(final=final, full=True)
         return self
 
     # incremental ticks bound their readout by the per-rule cursor
-    # low-water; every FULL_SWEEP_EVERY-th tick (and every final tick) is
-    # an unbounded full sweep, which is what discovers a series backfilled
-    # entirely below the low-water — worst-case staleness for such a
-    # series is FULL_SWEEP_EVERY ticks, and job-end/final evaluation is
-    # always exact.  (A stalled series pins the low-water, degrading
-    # incremental ticks toward full-sweep cost until its job ends — the
-    # underlying per-series window scan is O(stored windows) either way;
-    # the low-water only trims result materialization.)
+    # low-water; every FULL_SWEEP_EVERY-th tick (and every final or
+    # explicitly full tick) is an unbounded full sweep, which is what
+    # discovers a series backfilled entirely below the low-water —
+    # worst-case staleness for such a series is FULL_SWEEP_EVERY
+    # *background* ticks, and flush()/job-end evaluation is always exact.
+    # (A stalled series pins the low-water, degrading incremental ticks
+    # toward full-sweep cost until its job ends — the underlying
+    # per-series window scan is O(stored windows) either way; the
+    # low-water only trims result materialization.)
     FULL_SWEEP_EVERY = 8
 
-    def tick(self, final: bool = False) -> int:
+    def tick(self, final: bool = False, full: Optional[bool] = None) -> int:
         """Advance every rule over the windows (or raw points) that became
         visible since the last tick; returns samples evaluated."""
         db = self._db()
@@ -734,7 +739,9 @@ class AnalysisEngine:
         out: list = []
         fired: list = []
         with self._lock:
-            full = final or self._tick_count % self.FULL_SWEEP_EVERY == 0
+            if full is None:
+                full = self._tick_count % self.FULL_SWEEP_EVERY == 0
+            full = full or final
             self._tick_count += 1
             n = self._tick_locked(db, None, final, fired, out, full=full)
             self.stats["ticks"] += 1

@@ -67,7 +67,8 @@ class HostAgent:
 
     def __init__(self, router, hostname: Optional[str] = None,
                  device_constants: Optional[dict] = None,
-                 batch_size: int = 1):
+                 batch_size: int = 1,
+                 max_pending_points: int = 65536):
         self.router = router
         self.hostname = hostname or socket.gethostname()
         # static per-step facts from the compiled artifact (set once after
@@ -82,7 +83,13 @@ class HostAgent:
         # batched transmission); 1 keeps the historical emit-per-call path
         # so live analyzers see every point immediately
         self.batch_size = max(int(batch_size), 1)
+        # points waiting for the next batch, plus any re-buffered after a
+        # failed send (bounded: a dead router drops the oldest points
+        # past max_pending_points instead of growing memory forever)
+        self.max_pending_points = int(max_pending_points)
         self._pending: list = []
+        self._failed_flushes = 0
+        self._dropped_points = 0
 
     # -- compiled-artifact facts ------------------------------------------------
 
@@ -178,18 +185,39 @@ class HostAgent:
     # -- batched emission --------------------------------------------------------
 
     def _emit(self, point: Point):
-        if self.batch_size <= 1:
-            self.router.write(point)
-            return
         self._pending.append(point)
         if len(self._pending) >= self.batch_size:
-            self.flush()
+            # implicit flush: a down router/sink must never crash the
+            # collection tick — the failure is counted, the points are
+            # re-buffered (bounded) and retried on the next emit
+            self._flush(raise_errors=False)
 
     def flush(self):
-        """Send any buffered points as one batch."""
-        if self._pending:
-            pending, self._pending = self._pending, []
+        """Send any buffered points as one batch.  Explicit flushes
+        re-buffer AND raise on a failing sink."""
+        self._flush(raise_errors=True)
+
+    def _flush(self, raise_errors: bool):
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        try:
             self.router.write(pending)
+        except Exception:
+            self._failed_flushes += 1
+            self._pending[:0] = pending
+            excess = len(self._pending) - self.max_pending_points
+            if excess > 0:
+                del self._pending[:excess]
+                self._dropped_points += excess
+            if raise_errors:
+                raise
+
+    @property
+    def emit_stats(self) -> dict:
+        return {"pending": len(self._pending),
+                "failed_flushes": self._failed_flushes,
+                "dropped_points": self._dropped_points}
 
     def __enter__(self):
         return self

@@ -5,7 +5,13 @@ Server: mimics the InfluxDB 1.x write API plus the router's job-signal
 endpoint, so any existing collector that can POST line protocol (Diamond,
 curl cronjobs, Ganglia pull-proxies in the paper) integrates unchanged:
 
-    POST /write?db=global           body: line protocol (batched)
+    POST /write?db=global           body: line protocol (batched);
+                                    partial-write semantics — every line
+                                    that parses is written, the response
+                                    is ``{"written": n, "errors":
+                                    [{"line", "error"}, ...]}`` (400 only
+                                    when nothing parsed); bodies past the
+                                    configurable cap (8 MiB) answer 413
     POST /job/start                 body: JSON {jobid, user, hosts, tags}
     POST /job/end                   body: JSON {jobid}
     POST /query/v2[?db=]            body: JSON {"spec": QuerySpec.to_dict(),
@@ -37,8 +43,10 @@ curl cronjobs, Ganglia pull-proxies in the paper) integrates unchanged:
     GET  /meta?what=measurements    introspection (also what=fields&m=,
                                     what=tags&m=&tag=, what=persistence:
                                     WAL/snapshot stats of the durability
-                                    layer, and what=analysis: continuous-
-                                    engine counters) for remote clients
+                                    layer, what=analysis: continuous-
+                                    engine counters, and what=ingest:
+                                    binary ingest plane shed/queue
+                                    counters) for remote clients
     GET  /alerts?[db=][&jobid=][&rule=][&state=active|resolved|all]
                                     alert episodes reconstructed from the
                                     persisted ``analysis`` measurement
@@ -87,15 +95,28 @@ _ROLLUPS_PARAM = {"auto": "auto", "force": True, "raw": False}
 _UNSET = object()           # HttpQueryClient's not-yet-fetched sentinel
 
 
+DEFAULT_MAX_BODY_BYTES = 8 * 1024 * 1024
+
+
+class _PayloadTooLarge(Exception):
+    """Request body exceeds the handler's cap (-> 413)."""
+
+
 class LMSRequestHandler(BaseHTTPRequestHandler):
     router: MetricsRouter = None      # set by make_server
+    max_body_bytes: int = DEFAULT_MAX_BODY_BYTES
 
     def log_message(self, fmt, *args):   # quiet
         pass
 
     def _send(self, code: int, payload: Optional[dict] = None):
-        body = json.dumps(payload or {}).encode()
         self.send_response(code)
+        if code == 204:
+            # RFC 9110 §6.4.1: a 204 response MUST NOT carry a body —
+            # a body here desynchronizes keep-alive clients
+            self.end_headers()
+            return
+        body = json.dumps(payload or {}).encode()
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
         self.end_headers()
@@ -103,6 +124,12 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
 
     def _body(self) -> bytes:
         n = int(self.headers.get("Content-Length", 0))
+        if n > self.max_body_bytes:
+            # refuse before reading: an unbounded (or hostile)
+            # Content-Length must not buffer gigabytes per request
+            raise _PayloadTooLarge(
+                f"request body of {n} bytes exceeds limit "
+                f"{self.max_body_bytes}")
         return self.rfile.read(n) if n else b""
 
     def _known_db(self, name: str) -> bool:
@@ -238,6 +265,12 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
                 engine = self.router.analysis
                 self._send(200, {"analysis": engine.engine_stats()
                                  if engine is not None else None})
+            elif what == "ingest":
+                # binary ingest plane shed/queue counters
+                # (repro.core.ingest); null when no plane is attached
+                ingest = self.router.ingest
+                self._send(200, {"ingest": ingest.stats()
+                                 if ingest is not None else None})
             else:
                 self._send(400, {"error": f"unknown meta {what!r}"})
         elif url.path == "/alerts":
@@ -267,11 +300,23 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
 
     def do_POST(self):
         url = urllib.parse.urlparse(self.path)
-        body = self._body()
+        try:
+            body = self._body()
+        except _PayloadTooLarge as e:
+            # the oversized body was never read off the socket, so this
+            # connection cannot be reused for a next request
+            self.close_connection = True
+            self._send(413, {"error": str(e),
+                             "max_body_bytes": self.max_body_bytes})
+            return
         try:
             if url.path == "/write":
-                n = self.router.write_lines(body.decode())
-                self._send(204 if n else 200, {"written": n})
+                res = self.router.write_lines(body.decode())
+                # partial-write semantics: 200 reports per-line errors
+                # alongside the written count; only a batch where
+                # *nothing* parsed is a 400
+                code = 400 if res["errors"] and not res["written"] else 200
+                self._send(code, res)
             elif url.path == "/job/start":
                 d = json.loads(body)
                 self.router.job_start(d["jobid"], d.get("user", "unknown"),
@@ -334,19 +379,31 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
             self._send(400, {"error": str(e)})
 
 
+class _LMSThreadingHTTPServer(ThreadingHTTPServer):
+    # stdlib default backlog is 5: a burst of connects from a few dozen
+    # concurrent agents overflows the accept queue and the kernel resets
+    # the excess.  Match the binary ingest plane's listen(128).
+    request_queue_size = 128
+
+
 def make_server(router: MetricsRouter, host: str = "127.0.0.1",
-                port: int = 0) -> ThreadingHTTPServer:
+                port: int = 0,
+                max_body_bytes: int = DEFAULT_MAX_BODY_BYTES
+                ) -> ThreadingHTTPServer:
     """Create (but do not start) the HTTP endpoint; port=0 picks a free one."""
-    handler = type("BoundHandler", (LMSRequestHandler,), {"router": router})
-    return ThreadingHTTPServer((host, port), handler)
+    handler = type("BoundHandler", (LMSRequestHandler,),
+                   {"router": router,
+                    "max_body_bytes": int(max_body_bytes)})
+    return _LMSThreadingHTTPServer((host, port), handler)
 
 
 class LMSHttpServer:
     """Server lifecycle helper (background thread)."""
 
     def __init__(self, router: MetricsRouter, host: str = "127.0.0.1",
-                 port: int = 0):
-        self.httpd = make_server(router, host, port)
+                 port: int = 0,
+                 max_body_bytes: int = DEFAULT_MAX_BODY_BYTES):
+        self.httpd = make_server(router, host, port, max_body_bytes)
         self._thread = threading.Thread(target=self.httpd.serve_forever,
                                         daemon=True)
 

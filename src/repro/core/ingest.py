@@ -1,0 +1,540 @@
+"""Binary ingest plane — persistent connections, backpressure, shedding.
+
+ROADMAP item 1: one-shot HTTP per batch is the wrong shape for millions
+of emitting agents (connection setup per batch, text encode/decode per
+point, and a silent *stall* is the only overload response).  This module
+is the transport the edge actually needs, shaped like the collection
+planes of MPCDF's monitoring system and PerSyst: persistent sockets,
+length-prefixed binary frames, bounded per-connection queues, and
+*explicit* load shedding the client can act on.
+
+Wire format
+-----------
+
+The connection opens with a fixed handshake::
+
+    client -> MAGIC b"LMSBIN01"  <u16 db_len>  db_name_utf8
+    server -> T_HELLO frame (payload: JSON server parameters)
+
+after which both directions speak length-prefixed frames::
+
+    <u8 type> <u32 req_id> <u32 payload_len> payload
+
+======== ======= ==================================================
+type     dir     payload
+======== ======= ==================================================
+T_HELLO  s->c    JSON {"db", "queue_max", "max_frame_bytes"}
+T_WRITE  c->s    columnar batch — ``wal.encode_batch_payload`` bytes
+T_OK     s->c    <u32 points_written>
+T_SHED   s->c    <f64 retry_after_s> (queue full; batch NOT applied)
+T_ERR    s->c    utf-8 error message (batch rejected)
+T_PING   c->s    empty
+T_PONG   s->c    empty
+======== ======= ==================================================
+
+``req_id`` is chosen by the client and echoed verbatim in the response,
+so a client may keep several writes in flight on one socket and match
+responses out of order (the server answers T_PING immediately from its
+reader thread, ahead of queued writes).
+
+A T_WRITE payload is *exactly* a WAL record payload
+(``wal.encode_batch_payload`` / ``wal.decode_batch_payload``: JSON meta
++ raw little-endian int64/float64 column blobs).  The same bytes appear
+on the wire and in the write-ahead log, and the decoded columns feed
+``MetricsRouter.write_entries`` -> ``Database.write_columns`` without
+ever materializing per-point objects — ingest -> WAL is near-zero-copy.
+
+Backpressure and shedding
+-------------------------
+
+Each connection owns a bounded queue between its reader thread (frame
+parsing) and its worker thread (decode + route).  When the queue is
+full the reader answers T_SHED *immediately* with a retry-after hint —
+the batch was **not** applied, so a client resend after a shed is
+exactly-once.  Nothing ever silently stalls and nothing is silently
+dropped: every overload response is an explicit client-visible frame.
+
+Client fallback rules (:class:`BinarySink`)
+-------------------------------------------
+
+* **T_SHED**: sleep ``retry_after_s`` (with backoff, bounded by
+  ``max_shed_retries``) and resend — safe, the server did not apply.
+* **socket death** mid-request: reconnect and resend — *at-least-once*
+  (the server may have applied the batch before the connection died).
+* **transport failure** (connect refused, handshake failure, reconnect
+  exhausted): fall back to the HTTP line path (``fallback`` sink) when
+  one is configured, and retry the binary path after
+  ``fallback_cooldown_s``.
+* **T_ERR** (malformed batch): raised to the caller — re-sending the
+  same bytes over HTTP would fail the same way.
+"""
+
+from __future__ import annotations
+
+import json
+import queue
+import socket
+import struct
+import threading
+import time
+from typing import Iterable, Optional
+
+from repro.core.line_protocol import Point
+from repro.core.tsdb import Database
+from repro.core.wal import decode_batch_payload, encode_batch_payload
+
+MAGIC = b"LMSBIN01"
+
+_HELLO_DB = struct.Struct("<H")         # db name length
+_FRAME = struct.Struct("<BII")          # type, req_id, payload_len
+_OK_BODY = struct.Struct("<I")          # points written
+_SHED_BODY = struct.Struct("<d")        # retry-after seconds
+
+T_HELLO = 1
+T_WRITE = 2
+T_OK = 3
+T_SHED = 4
+T_ERR = 5
+T_PING = 6
+T_PONG = 7
+
+DEFAULT_MAX_FRAME_BYTES = 8 * 1024 * 1024
+DEFAULT_QUEUE_MAX = 64
+DEFAULT_SHED_RETRY_AFTER_S = 0.05
+
+
+class IngestError(Exception):
+    """The server rejected a batch (T_ERR) or shed it past the client's
+    retry budget — the batch was NOT applied (exactly-once safe for
+    sheds; a T_ERR batch is malformed and must not be resent)."""
+
+
+def points_to_entries(points) -> list:
+    """``[Point, ...]`` -> wire/WAL entries ``[(measurement, tags,
+    times, {field: column}), ...]`` with per-series ascending times —
+    one grouping + one transpose, shared with the row write path."""
+    if isinstance(points, Point):
+        points = [points]
+    by_series, tags_of = Database.group_points(points)
+    out = []
+    for (meas, key), items in by_series.items():
+        times, cols = Database.transpose_items(items)
+        out.append((meas, tags_of[(meas, key)], times, cols))
+    return out
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    """Read exactly ``n`` bytes or raise ConnectionError on EOF."""
+    chunks = []
+    while n:
+        chunk = sock.recv(min(n, 1 << 20))
+        if not chunk:
+            raise ConnectionError("peer closed connection")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks) if len(chunks) != 1 else chunks[0]
+
+
+def _send_frame(sock: socket.socket, ftype: int, req_id: int,
+                payload: bytes = b""):
+    sock.sendall(_FRAME.pack(ftype, req_id, len(payload)) + payload)
+
+
+class _Connection:
+    """One accepted socket: reader thread + worker thread + bounded
+    queue between them (the backpressure boundary)."""
+
+    def __init__(self, server: "IngestServer", sock: socket.socket):
+        self.server = server
+        self.sock = sock
+        self.q: queue.Queue = queue.Queue(maxsize=server.queue_max)
+        self.db = None
+        self.closed = threading.Event()
+        # reader and worker both write to the socket (SHED/PONG vs
+        # OK/ERR) — frames must not interleave
+        self._send_lock = threading.Lock()
+        self._reader = threading.Thread(
+            target=self._read_loop, daemon=True, name="lms-ingest-reader")
+        self._worker = threading.Thread(
+            target=self._work_loop, daemon=True, name="lms-ingest-worker")
+
+    def start(self):
+        self._reader.start()
+        self._worker.start()
+
+    def close(self):
+        self.closed.set()
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+    def _reply(self, ftype: int, req_id: int, payload: bytes = b""):
+        try:
+            with self._send_lock:
+                _send_frame(self.sock, ftype, req_id, payload)
+        except OSError:
+            self.closed.set()
+
+    # -- reader: handshake, framing, ping, shed ---------------------------
+
+    def _read_loop(self):
+        try:
+            self._handshake()
+            while not self.closed.is_set():
+                hdr = _recv_exact(self.sock, _FRAME.size)
+                ftype, req_id, ln = _FRAME.unpack(hdr)
+                if ftype == T_PING:
+                    if ln:
+                        self._drain(ln)
+                    self.server._count(pings=1)
+                    self._reply(T_PONG, req_id)
+                    continue
+                if ftype != T_WRITE:
+                    self._drain(ln)
+                    self.server._count(frame_errors=1)
+                    self._reply(T_ERR, req_id,
+                                f"unexpected frame type {ftype}".encode())
+                    continue
+                if ln > self.server.max_frame_bytes:
+                    # oversized: drain in chunks (keep the stream in
+                    # sync) and reject — the binary twin of HTTP 413
+                    self._drain(ln)
+                    self.server._count(frame_errors=1, oversized_frames=1)
+                    self._reply(T_ERR, req_id,
+                                f"frame of {ln} bytes exceeds limit "
+                                f"{self.server.max_frame_bytes}".encode())
+                    continue
+                payload = _recv_exact(self.sock, ln)
+                self.server._count(frames_in=1)
+                try:
+                    self.q.put_nowait((req_id, payload))
+                except queue.Full:
+                    # explicit shed: the batch was NOT enqueued, so a
+                    # client resend is exactly-once — never a stall,
+                    # never a silent drop
+                    self.server._count(shed_frames=1)
+                    self._reply(T_SHED, req_id, _SHED_BODY.pack(
+                        self.server.shed_retry_after_s))
+        except (ConnectionError, OSError):
+            pass
+        finally:
+            self.close()
+            self.server._forget(self)
+
+    def _handshake(self):
+        magic = _recv_exact(self.sock, len(MAGIC))
+        if magic != MAGIC:
+            raise ConnectionError(f"bad magic {magic!r}")
+        (db_len,) = _HELLO_DB.unpack(_recv_exact(self.sock, _HELLO_DB.size))
+        self.db = _recv_exact(self.sock, db_len).decode() if db_len \
+            else "global"
+        self._reply(T_HELLO, 0, json.dumps({
+            "db": self.db,
+            "queue_max": self.server.queue_max,
+            "max_frame_bytes": self.server.max_frame_bytes,
+        }).encode())
+
+    def _drain(self, n: int):
+        while n:
+            n -= len(_recv_exact(self.sock, min(n, 1 << 16)))
+
+    # -- worker: decode + route ------------------------------------------
+
+    def _work_loop(self):
+        while not self.closed.is_set():
+            try:
+                req_id, payload = self.q.get(timeout=0.2)
+            except queue.Empty:
+                continue
+            try:
+                entries = decode_batch_payload(payload)
+                n = self.server.router.write_entries(entries)
+            except Exception as e:          # noqa: BLE001 — per-batch
+                self.server._count(batch_errors=1)
+                self._reply(T_ERR, req_id, str(e)[:1024].encode())
+                continue
+            self.server._count(batches_ok=1, points_ok=n)
+            self._reply(T_OK, req_id, _OK_BODY.pack(min(n, 0xFFFFFFFF)))
+
+
+class IngestServer:
+    """Persistent-socket binary ingest endpoint for one router.
+
+    Serves alongside the HTTP endpoint (``MonitoringStack(serve_ingest=
+    True)``); attaches itself as ``router.ingest`` so the HTTP face can
+    surface its counters (``GET /meta?what=ingest``).
+    """
+
+    def __init__(self, router, host: str = "127.0.0.1", port: int = 0, *,
+                 queue_max: int = DEFAULT_QUEUE_MAX,
+                 max_frame_bytes: int = DEFAULT_MAX_FRAME_BYTES,
+                 shed_retry_after_s: float = DEFAULT_SHED_RETRY_AFTER_S):
+        self.router = router
+        self.queue_max = int(queue_max)
+        self.max_frame_bytes = int(max_frame_bytes)
+        self.shed_retry_after_s = float(shed_retry_after_s)
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(128)
+        self.host, self.port = self._sock.getsockname()[:2]
+        self._conns: set = set()
+        self._lock = threading.Lock()
+        self._stats = {"connections_total": 0, "frames_in": 0,
+                       "batches_ok": 0, "points_ok": 0, "shed_frames": 0,
+                       "frame_errors": 0, "oversized_frames": 0,
+                       "batch_errors": 0, "pings": 0}
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        router.ingest = self
+
+    @property
+    def address(self) -> tuple:
+        return (self.host, self.port)
+
+    def start(self) -> "IngestServer":
+        self._thread = threading.Thread(
+            target=self._accept_loop, daemon=True, name="lms-ingest-accept")
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns = list(self._conns)
+        for c in conns:
+            c.close()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+        return False
+
+    def _accept_loop(self):
+        while not self._stop.is_set():
+            try:
+                sock, _ = self._sock.accept()
+            except OSError:
+                return                  # listener closed (stop())
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            conn = _Connection(self, sock)
+            with self._lock:
+                self._conns.add(conn)
+                self._stats["connections_total"] += 1
+            conn.start()
+
+    def _forget(self, conn: _Connection):
+        with self._lock:
+            self._conns.discard(conn)
+
+    def _count(self, **deltas: int):
+        with self._lock:
+            for k, v in deltas.items():
+                self._stats[k] += v
+
+    def stats(self) -> dict:
+        """Shed/queue counters — the ``/meta?what=ingest`` payload."""
+        with self._lock:
+            out = dict(self._stats)
+            conns = list(self._conns)
+        out["connections_active"] = len(conns)
+        out["queued_batches"] = sum(c.q.qsize() for c in conns)
+        out["queue_max"] = self.queue_max
+        out["max_frame_bytes"] = self.max_frame_bytes
+        return out
+
+
+class BinarySink:
+    """Persistent-connection binary client with automatic reconnect,
+    shed-aware retry, and fallback to the HTTP line path.
+
+    Drop-in for :class:`repro.core.httpd.HttpSink` anywhere a sink with
+    ``.write(points)`` is expected (``UserMetric``, ``HostAgent``,
+    forward agents) — same points in, same database state out, at a
+    fraction of the per-batch cost.
+
+    Thread-safe: one in-flight request at a time per sink (an internal
+    lock); spin up one sink per emitting thread for parallelism.
+    """
+
+    def __init__(self, host: str, port: int, *, db: str = "global",
+                 timeout_s: float = 5.0, fallback=None,
+                 fallback_cooldown_s: float = 30.0,
+                 max_shed_retries: int = 8,
+                 max_reconnects: int = 1):
+        self.host = host
+        self.port = int(port)
+        self.db = db
+        self.timeout_s = float(timeout_s)
+        self.fallback = fallback
+        self.fallback_cooldown_s = float(fallback_cooldown_s)
+        self.max_shed_retries = int(max_shed_retries)
+        self.max_reconnects = int(max_reconnects)
+        self._sock: Optional[socket.socket] = None
+        self._req_id = 0
+        self._lock = threading.Lock()
+        self._fallback_until = 0.0
+        self._stats = {"batches": 0, "points": 0, "sheds": 0,
+                       "reconnects": 0, "fallback_batches": 0,
+                       "fallback_points": 0}
+
+    # -- connection management --------------------------------------------
+
+    def _connect(self) -> socket.socket:
+        sock = socket.create_connection((self.host, self.port),
+                                        timeout=self.timeout_s)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        try:
+            db = self.db.encode()
+            sock.sendall(MAGIC + _HELLO_DB.pack(len(db)) + db)
+            ftype, _, ln = _FRAME.unpack(_recv_exact(sock, _FRAME.size))
+            body = _recv_exact(sock, ln)
+            if ftype != T_HELLO:
+                raise ConnectionError(
+                    f"handshake failed: frame type {ftype}")
+            self.server_params = json.loads(body) if body else {}
+        except Exception:
+            sock.close()
+            raise
+        return sock
+
+    def _ensure_sock(self) -> socket.socket:
+        if self._sock is None:
+            self._sock = self._connect()
+        return self._sock
+
+    def _drop_sock(self):
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    # -- write -------------------------------------------------------------
+
+    def write(self, points) -> int:
+        """Send one batch; returns the number of points the server
+        routed.  See the module docstring for the retry/fallback rules.
+        """
+        entries = points_to_entries(points)
+        if not entries:
+            return 0
+        payload = encode_batch_payload(entries)
+        with self._lock:
+            if self.fallback is not None and \
+                    time.monotonic() < self._fallback_until:
+                return self._write_fallback(points, entries)
+            try:
+                n = self._write_binary(payload)
+            except (OSError, ConnectionError):
+                self._drop_sock()
+                if self.fallback is None:
+                    raise
+                self._fallback_until = time.monotonic() + \
+                    self.fallback_cooldown_s
+                return self._write_fallback(points, entries)
+            self._stats["batches"] += 1
+            self._stats["points"] += n
+            return n
+
+    def _write_fallback(self, points, entries) -> int:
+        if isinstance(points, Point):
+            points = [points]
+        self.fallback.write(points)
+        n = sum(len(times) for _, _, times, _ in entries)
+        self._stats["fallback_batches"] += 1
+        self._stats["fallback_points"] += n
+        return n
+
+    def _write_binary(self, payload: bytes) -> int:
+        sheds = 0
+        reconnects = 0
+        retry_after = DEFAULT_SHED_RETRY_AFTER_S
+        while True:
+            sock = self._ensure_sock()
+            self._req_id = (self._req_id + 1) & 0xFFFFFFFF
+            req_id = self._req_id
+            try:
+                _send_frame(sock, T_WRITE, req_id, payload)
+                ftype, rid, body = self._read_response(sock, req_id)
+            except (OSError, ConnectionError):
+                # socket died mid-request: the server may or may not
+                # have applied the batch — reconnect-and-resend is
+                # at-least-once (documented)
+                self._drop_sock()
+                if reconnects >= self.max_reconnects:
+                    raise
+                reconnects += 1
+                self._stats["reconnects"] += 1
+                continue
+            if ftype == T_OK:
+                (n,) = _OK_BODY.unpack(body)
+                return n
+            if ftype == T_SHED:
+                # not applied server-side: resending is exactly-once
+                (retry_after,) = _SHED_BODY.unpack(body)
+                sheds += 1
+                self._stats["sheds"] += 1
+                if sheds > self.max_shed_retries:
+                    raise IngestError(
+                        f"server shed the batch {sheds} times "
+                        f"(retry_after={retry_after:.3f}s)")
+                time.sleep(min(retry_after * sheds, 1.0))
+                continue
+            if ftype == T_ERR:
+                raise IngestError(body.decode(errors="replace"))
+            raise ConnectionError(f"unexpected frame type {ftype}")
+
+    def _read_response(self, sock: socket.socket, req_id: int):
+        """Read frames until the one matching ``req_id`` (responses to
+        other in-flight requests on a shared socket are skipped — this
+        sink keeps one in flight, so a mismatch means a stale frame
+        from a reconnect-abandoned request)."""
+        while True:
+            ftype, rid, ln = _FRAME.unpack(_recv_exact(sock, _FRAME.size))
+            body = _recv_exact(sock, ln) if ln else b""
+            if rid == req_id or ftype == T_HELLO:
+                if ftype == T_HELLO:
+                    continue
+                return ftype, rid, body
+
+    # -- misc --------------------------------------------------------------
+
+    def ping(self) -> bool:
+        """Round-trip a T_PING; False on any transport failure."""
+        with self._lock:
+            try:
+                sock = self._ensure_sock()
+                self._req_id = (self._req_id + 1) & 0xFFFFFFFF
+                _send_frame(sock, T_PING, self._req_id)
+                ftype, _, _ = self._read_response(sock, self._req_id)
+                return ftype == T_PONG
+            except (OSError, ConnectionError):
+                self._drop_sock()
+                return False
+
+    @property
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(self._stats)
+
+    def close(self):
+        with self._lock:
+            self._drop_sock()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

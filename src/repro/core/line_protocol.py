@@ -125,6 +125,13 @@ class LineProtocolError(ValueError):
     pass
 
 
+def _parse_ts(s: str) -> int:
+    try:
+        return int(s)
+    except ValueError:
+        raise LineProtocolError(f"bad timestamp {s!r}") from None
+
+
 def _split_unescaped(s: str, sep: str, maxsplit: int = -1) -> list:
     """Split on ``sep`` outside escapes and double quotes."""
     out, cur = [], []
@@ -172,7 +179,12 @@ def _parse_field_value(s: str) -> FieldValue:
                 i += 1
         return "".join(out)
     if s.endswith("i"):
-        return int(s[:-1])
+        # a malformed integer ("12xi") must surface as a protocol error,
+        # not a bare ValueError the batch decoder cannot attribute
+        try:
+            return int(s[:-1])
+        except ValueError:
+            raise LineProtocolError(f"bad integer field {s!r}") from None
     try:
         return float(s)          # also accepts nan / inf / -inf
     except ValueError:
@@ -202,12 +214,12 @@ def _decode_line_fast(line: str, head_cache: Optional[dict] = None) -> Point:
     if np_ == 2 and parts[0] and parts[1]:
         ts = None
     elif np_ >= 3 and parts[0] and parts[1] and parts[2]:
-        ts = int(parts[2])
+        ts = _parse_ts(parts[2])
     else:                       # rare: repeated separators
         parts = [h for h in parts if h]
         if len(parts) < 2:
             raise LineProtocolError(f"no fields in {line!r}")
-        ts = int(parts[2]) if len(parts) >= 3 else None
+        ts = _parse_ts(parts[2]) if len(parts) >= 3 else None
     head = parts[0]
     cached = head_cache.get(head) if head_cache is not None else None
     if cached is None:
@@ -248,7 +260,7 @@ def decode_line(line: str) -> Point:
     fields_str = head_fields[1]
     ts = None
     if len(head_fields) >= 3:
-        ts = int(head_fields[2])
+        ts = _parse_ts(head_fields[2])
 
     head_parts = _split_unescaped(head, ",")
     measurement = _unescape(head_parts[0])
@@ -284,3 +296,28 @@ def decode_batch(data: str) -> list:
         else:
             points.append(decode_line(line))
     return points
+
+
+def decode_batch_errors(data: str):
+    """Partial-decode of one batched payload: ``(points, errors)``.
+
+    Every line that parses becomes a :class:`Point`; every line that does
+    not contributes ``{"line": <1-based line number>, "error": msg}``
+    WITHOUT aborting its siblings — one malformed line in a 500-line
+    agent batch must not drop the other 499 points
+    (``MetricsRouter.write_lines`` partial-write semantics).
+    """
+    points, errors = [], []
+    head_cache: dict = {}
+    for lineno, line in enumerate(data.split("\n"), 1):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        try:
+            if "\\" not in line and '"' not in line:
+                points.append(_decode_line_fast(line, head_cache))
+            else:
+                points.append(decode_line(line))
+        except ValueError as e:             # incl. LineProtocolError
+            errors.append({"line": lineno, "error": str(e)})
+    return points, errors

@@ -22,9 +22,9 @@ from dataclasses import dataclass, field
 from typing import Callable, Iterable, Optional, Union
 
 from repro.core.jobs import JobRegistry
-from repro.core.line_protocol import (Point, decode_batch, encode_point,
-                                      now_ns)
-from repro.core.tsdb import TSDBServer
+from repro.core.line_protocol import (Point, decode_batch_errors,
+                                      encode_point, now_ns)
+from repro.core.tsdb import Database, TSDBServer, _tags_key
 
 
 @dataclass
@@ -90,6 +90,10 @@ class MetricsRouter:
         # one is attached (MonitoringStack wires it); the HTTP face uses it
         # for live job reports and engine stats
         self.analysis = None
+        # the binary ingest plane serving this router, when one is
+        # attached (repro.core.ingest.IngestServer wires itself here);
+        # the HTTP face reads its shed/queue counters (/meta?what=ingest)
+        self.ingest = None
         self._subs: list = []
         self._lock = threading.RLock()
 
@@ -141,15 +145,21 @@ class MetricsRouter:
 
     # -- ingest ------------------------------------------------------------------
 
-    def write_lines(self, data: str):
-        """HTTP body (line protocol, possibly batched) -> route."""
-        try:
-            points = decode_batch(data)
-        except Exception:
-            self.stats.add(parse_errors=1)
-            raise
-        self.write(points)
-        return len(points)
+    def write_lines(self, data: str) -> dict:
+        """HTTP body (line protocol, possibly batched) -> route.
+
+        Partial-write semantics: every line that parses is written; every
+        malformed line becomes a per-line error record instead of
+        aborting its siblings.  Returns ``{"written": n, "errors":
+        [{"line": lineno, "error": msg}, ...]}`` — the ``/write``
+        response body.
+        """
+        points, errors = decode_batch_errors(data)
+        if errors:
+            self.stats.add(parse_errors=len(errors))
+        if points:
+            self.write(points)
+        return {"written": len(points), "errors": errors}
 
     def write(self, points: Union[Point, Iterable[Point]]):
         if isinstance(points, Point):
@@ -198,3 +208,122 @@ class MetricsRouter:
             for db, pts in by_db.items():
                 self.backend.write(pts, db)
         self._publish("points", enriched)
+
+    # -- columnar ingest (the binary plane, repro.core.ingest) ----------------
+
+    def write_entries(self, entries: Iterable) -> int:
+        """Columnar twin of :meth:`write`: route ``[(measurement, tags,
+        times, {field: column}), ...]`` series entries (the binary wire
+        form, == the WAL record form) without ever materializing
+        per-point objects.
+
+        Enrichment (job-tag merge, host-tag requirement) happens once per
+        *series*, not per point; the enriched columns go to the backend
+        through ``write_columns`` — and, on a persisted backend, into the
+        WAL re-encoded with the same codec the wire used.  Returns the
+        number of points routed.
+        """
+        host_tags: dict = {}
+        by_cols: dict = {}
+        tags_of: dict = {}
+        n_in = n_out = dropped = 0
+        for m, tags, times, cols in entries:
+            n = len(times)
+            if not n:
+                continue
+            n_in += n
+            host = tags.get(self.HOST_TAG)
+            if host is None and self.require_host_tag:
+                dropped += n
+                continue
+            if host is None:
+                job_tags = {}
+            else:
+                job_tags = host_tags.get(host)
+                if job_tags is None:
+                    job_tags = host_tags[host] = self.jobs.tags_for_host(host)
+            if job_tags:
+                tags = dict(tags)
+                tags.update(job_tags)
+            if any(times[i] > times[i + 1] for i in range(n - 1)):
+                # defensive: write_columns requires ascending times per
+                # series; a misbehaving client pays a sort, not corruption
+                times, cols = Database.transpose_items(
+                    [(t, {k: c[i] for k, c in cols.items()
+                          if c[i] is not None})
+                     for i, t in enumerate(times)])
+            key = (m, _tags_key(tags))
+            if key in by_cols:      # same series split across entries
+                old_t, old_c = by_cols[key]
+                by_cols[key] = Database.transpose_items(
+                    [(t, {k: c[i] for k, c in old_c.items()
+                          if c[i] is not None})
+                     for i, t in enumerate(old_t)] +
+                    [(t, {k: c[i] for k, c in cols.items()
+                          if c[i] is not None})
+                     for i, t in enumerate(times)])
+            else:
+                by_cols[key] = (times, cols)
+                tags_of[key] = tags
+            n_out += n
+        self.stats.add(points_in=n_in, dropped_no_host=dropped,
+                       points_out=n_out)
+        if not by_cols:
+            return 0
+        self.backend.write_columns(by_cols, tags_of, self.global_db)
+        if self.per_user_db or self.per_job_db:
+            # duplication is per *series* here: a series' enriched tags
+            # decide its scoped databases once, columns are shared
+            by_db: dict = {}
+            for key, tc in by_cols.items():
+                tags = tags_of[key]
+                scopes = []
+                if self.per_user_db and "username" in tags:
+                    scopes.append("user_" + _safe_db_name(tags["username"]))
+                if self.per_job_db and "jobid" in tags:
+                    scopes.append("job_" + _safe_db_name(tags["jobid"]))
+                for scope in scopes:
+                    cols_map, tmap = by_db.setdefault(scope, ({}, {}))
+                    cols_map[key] = tc
+                    tmap[key] = tags
+            for db, (cols_map, tmap) in by_db.items():
+                self.backend.write_columns(cols_map, tmap, db)
+        self._publish("points", _LazyPoints(by_cols, tags_of))
+        return n_out
+
+
+class _LazyPoints:
+    """Deferred Point materialization for the columnar publish path.
+
+    Subscribers that only mark state dirty (``AnalysisEngine``) never
+    iterate the payload, so the binary hot path pays nothing; a
+    subscriber that really consumes points (``StreamAnalyzer``)
+    materializes them on first iteration and the rows are cached for the
+    next subscriber.
+    """
+
+    __slots__ = ("_by_cols", "_tags_of", "_pts")
+
+    def __init__(self, by_cols: dict, tags_of: dict):
+        self._by_cols = by_cols
+        self._tags_of = tags_of
+        self._pts = None
+
+    def _materialize(self) -> list:
+        if self._pts is None:
+            pts = []
+            for (m, key), (times, cols) in self._by_cols.items():
+                tags = self._tags_of[key]
+                for i, t in enumerate(times):
+                    pts.append(Point(
+                        m, tags,
+                        {k: c[i] for k, c in cols.items()
+                         if c[i] is not None}, t))
+            self._pts = pts
+        return self._pts
+
+    def __iter__(self):
+        return iter(self._materialize())
+
+    def __len__(self):
+        return sum(len(times) for times, _ in self._by_cols.values())

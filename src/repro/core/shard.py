@@ -388,6 +388,27 @@ class ShardedDatabase:
         for i, groups in shard_series.items():
             self.shards[i].write_grouped(groups, shard_tags[i])
 
+    def write_columns(self, by_cols: dict, tags_of: dict):
+        """Columnar twin of :meth:`write` (same shapes as
+        ``Database.write_columns``): route each series' columns to its
+        shard, then apply per shard under that shard's lock — the binary
+        ingest plane's path onto a sharded backend."""
+        n = len(self.shards)
+        if n == 1:
+            self.shards[0].write_columns(by_cols, tags_of)
+            return
+        shard_cols: dict = {}
+        shard_tags: dict = {}
+        for key, tc in by_cols.items():
+            i = shard_index(key[0], key[1], n)
+            if i not in shard_cols:
+                shard_cols[i] = {}
+                shard_tags[i] = {}
+            shard_cols[i][key] = tc
+            shard_tags[i][key] = tags_of[key]
+        for i, cols_map in shard_cols.items():
+            self.shards[i].write_columns(cols_map, shard_tags[i])
+
     # -- retention (per shard, each under its own lock) ----------------------
 
     def enforce_retention(self, max_age_ns: Optional[int] = None,

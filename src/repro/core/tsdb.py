@@ -808,6 +808,19 @@ class TSDBServer:
         else:
             store.write(points)
 
+    def write_columns(self, by_cols: dict, tags_of: dict,
+                      db: str = "global"):
+        """Columnar twin of :meth:`write` — the binary ingest plane
+        (``repro.core.ingest``) lands here: ``by_cols[(meas, tags_key)] =
+        (times, {field: column})`` with ascending per-series times.  On a
+        persisted database the WAL logs the same columnar form, encoded
+        with the same codec the wire used (near-zero-copy ingest→WAL)."""
+        store = self.store(db)
+        if store is None:
+            self.db(db).write_columns(by_cols, tags_of)
+        else:
+            store.write_columns(by_cols, tags_of)
+
     # -- durability (repro.core.wal) -----------------------------------------
 
     def load_persisted(self) -> dict:

@@ -105,9 +105,17 @@ class UserMetric:
                     >= self.flush_interval_s:
                 flush_now = True
         if flush_now:
-            self.flush()
+            # implicit flush: a failing sink must never crash the
+            # monitored application's metric()/event() call — failures
+            # are counted and the points re-buffered (bounded) instead
+            self._flush(raise_errors=False)
 
     def flush(self):
+        """Explicit flush: sink failures re-buffer AND raise, so batch
+        scripts that call ``flush()``/``close()`` see the error."""
+        self._flush(raise_errors=True)
+
+    def _flush(self, raise_errors: bool):
         with self._lock:
             buf, self._buf = self._buf, []
             self._last_flush = time.monotonic()
@@ -118,7 +126,7 @@ class UserMetric:
         except Exception:
             # re-buffer at the front (bounded) so a transient sink
             # failure loses nothing and a dead sink can't grow memory
-            # forever; the exception stays visible to the caller
+            # forever
             with self._lock:
                 self._failed_flushes += 1
                 self._buf[:0] = buf
@@ -126,17 +134,16 @@ class UserMetric:
                 if excess > 0:
                     del self._buf[:excess]
                     self._dropped_points += excess
-            raise
+            if raise_errors:
+                raise
+            return
         with self._lock:
             self._sent_points += len(buf)
             self._sent_batches += 1
 
     def _flush_loop(self):
         while not self._stop.wait(self.flush_interval_s):
-            try:
-                self.flush()
-            except Exception:
-                pass        # re-buffered above; retry next interval
+            self._flush(raise_errors=False)     # retry next interval
 
     def close(self):
         self._stop.set()

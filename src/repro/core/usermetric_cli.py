@@ -9,6 +9,10 @@ Examples (against a running LMS HTTP endpoint)::
         event run_state "starting miniMD"
     python -m repro.core.usermetric_cli --url $LMS_URL \
         job-start --jobid 42 --user alice --hosts h1,h2
+
+``--binary HOST:PORT`` prefers the binary ingest plane
+(``repro.core.ingest``) for metric/event sends, with the HTTP line path
+as automatic fallback; job signals always go over HTTP.
 """
 
 from __future__ import annotations
@@ -18,6 +22,7 @@ import socket
 import sys
 
 from repro.core.httpd import HttpSink
+from repro.core.ingest import BinarySink
 from repro.core.line_protocol import Point, now_ns
 
 
@@ -32,6 +37,9 @@ def _tags(args) -> dict:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="usermetric")
     ap.add_argument("--url", required=True, help="LMS router HTTP endpoint")
+    ap.add_argument("--binary", metavar="HOST:PORT",
+                    help="prefer the binary ingest plane at HOST:PORT "
+                         "(falls back to --url's HTTP line path)")
     ap.add_argument("--db", default="global")
     ap.add_argument("--hostname", default=socket.gethostname())
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -57,7 +65,13 @@ def main(argv=None) -> int:
     je.add_argument("--jobid", required=True)
 
     args = ap.parse_args(argv)
-    sink = HttpSink(args.url, db=args.db)
+    http = HttpSink(args.url, db=args.db)
+    if args.binary:
+        host, _, port = args.binary.rpartition(":")
+        sink = BinarySink(host or "127.0.0.1", int(port), db=args.db,
+                          fallback=http)
+    else:
+        sink = http
 
     if args.cmd == "metric":
         sink.write(Point(args.name, _tags(args), {"value": args.value},
@@ -68,9 +82,9 @@ def main(argv=None) -> int:
     elif args.cmd == "job-start":
         tags = {k: v for k, v in
                 (t.partition("=")[::2] for t in (args.tag or []))}
-        sink.job_start(args.jobid, args.user, args.hosts.split(","), tags)
+        http.job_start(args.jobid, args.user, args.hosts.split(","), tags)
     elif args.cmd == "job-end":
-        sink.job_end(args.jobid)
+        http.job_end(args.jobid)
     return 0
 
 

@@ -697,6 +697,44 @@ class DurableStore:
             self._appended_batches += 1
             self._appended_points += total
 
+    def write_columns(self, by_cols: dict, tags_of: dict):
+        """Columnar twin of :meth:`write` — the binary ingest plane
+        (``repro.core.ingest``) lands here with the batch already in the
+        record form (``by_cols[(meas, tags_key)] = (times, {field:
+        column})``, ascending per-series times), so durability costs one
+        re-encode with the *same* codec the wire used plus one buffered
+        append — no grouping, no transpose."""
+        if not by_cols:
+            return
+        n = len(self._wals)
+        total = sum(len(times) for times, _ in by_cols.values())
+        if n == 1:
+            self._apply_and_log_columns(0, by_cols, tags_of)
+        else:
+            per_shard: dict = defaultdict(lambda: ({}, {}))
+            for (meas, key), tc in by_cols.items():
+                shard_cols, tmap = per_shard[shard_index(meas, key, n)]
+                shard_cols[(meas, key)] = tc
+                tmap[(meas, key)] = tags_of[(meas, key)]
+            for i, (shard_cols, tmap) in per_shard.items():
+                self._apply_and_log_columns(i, shard_cols, tmap)
+        with self._stats_lock:
+            self._appended_batches += 1
+            self._appended_points += total
+
+    def _apply_and_log_columns(self, i: int, by_cols: dict, tags_of: dict):
+        """Columnar :meth:`_apply_and_log`: the payload encode is pure
+        (input columns only) and runs outside the lock; apply + append
+        run under the WAL writer lock so log order == apply order."""
+        payload = encode_batch_payload(
+            (m, tags_of[(m, key)], times, cols)
+            for (m, key), (times, cols) in by_cols.items())
+        max_ts = max(times[-1] for times, _ in by_cols.values())
+        wal = self._wals[i]
+        with wal.lock:
+            self._shard_dbs[i].write_columns(by_cols, tags_of)
+            wal.append(payload, max_ts)
+
     def _apply_and_log(self, i: int, by_series: dict, tags_of: dict):
         """Apply one per-shard sub-batch and log it, both under the WAL
         writer lock (log order == apply order, and concurrent writers

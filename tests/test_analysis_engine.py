@@ -351,6 +351,24 @@ def test_engine_discovers_backfilled_series_below_lowwater():
     assert any(a.host == "hB" for a in eng.alerts)
 
 
+def test_flush_discovers_backfill_below_stale_lowwater():
+    """Regression: ``flush()`` must always be a full sweep.  A series
+    whose windows sit entirely below the per-rule cursor low-water (a
+    new job at older timestamps than an already-consumed one) used to
+    stay invisible to a synchronous flush unless the tick counter
+    happened to land on a FULL_SWEEP_EVERY boundary — the /alerts
+    read-your-writes promise was a race against the background ticker."""
+    server, eng = _engine()
+    db = server.db("global")
+    for t in range(1000, 1300, 10):         # advances cursors/low-water
+        _put(db, t, 0.9, host="hA")
+    eng.tick()                              # tick #0: full sweep
+    for t in range(0, 200, 10):             # violations entirely below
+        _put(db, t, 0.0, host="hB")
+    eng.flush()                             # tick #1: must still be full
+    assert any(a.host == "hB" for a in eng.alerts)
+
+
 def test_restart_report_includes_resolved_history(tmp_path):
     """Review regression: a job's pre-restart resolved episodes must still
     appear in the report written at its (post-restart) end."""

@@ -1,0 +1,530 @@
+"""Binary ingest plane (repro.core.ingest) + ingest-edge bugfixes.
+
+Covers: codec round-trip vs the line protocol (property + seeded
+fallback), byte-identical DB state binary vs HTTP line path, automatic
+reconnect and HTTP fallback, queue-full shedding (no point lost or
+duplicated after retry), and the four edge bugfix regressions
+(partial-write /write, 204 without body, UserMetric implicit-flush
+swallowing, request-body cap -> 413).
+"""
+
+import json
+import random
+import socket
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.core.httpd import HttpSink, LMSHttpServer
+from repro.core.ingest import (BinarySink, IngestError, IngestServer,
+                               MAGIC, points_to_entries)
+from repro.core.line_protocol import Point, decode_batch_errors
+from repro.core.router import MetricsRouter
+from repro.core.tsdb import TSDBServer
+from repro.core.usermetric import UserMetric
+from repro.core.wal import decode_batch_payload, encode_batch_payload
+
+
+@pytest.fixture
+def router():
+    return MetricsRouter(TSDBServer(), per_job_db=True, per_user_db=True)
+
+
+@pytest.fixture
+def served(router):
+    srv = IngestServer(router).start()
+    yield router, srv
+    srv.stop()
+
+
+def _db_state(db, measurements):
+    """Canonical dump of a database's series (sorted, JSON-encoded) —
+    two ingest paths are equivalent iff these bytes are identical."""
+    out = []
+    for m in measurements:
+        for s in sorted(db.select(m), key=lambda s: sorted(s.tags.items())):
+            out.append([m, sorted(s.tags.items()), s.times,
+                        sorted(s.values.items())])
+    return json.dumps(out, sort_keys=True).encode()
+
+
+def _mixed_points(n=200, hosts=3, seed=7):
+    rng = random.Random(seed)
+    pts = []
+    for i in range(n):
+        host = f"h{rng.randrange(hosts)}"
+        fields = {"value": rng.uniform(-1e6, 1e6),
+                  "step": rng.randrange(1 << 40)}
+        if rng.random() < 0.2:
+            fields["state"] = rng.choice(["ok", "warn", "x\ny"])
+        if rng.random() < 0.1:
+            fields["flag"] = rng.random() < 0.5
+        pts.append(Point(rng.choice(["hpm", "system"]),
+                         {"hostname": host}, fields, 1_000_000 + i))
+    return pts
+
+
+# -- codec round-trip ---------------------------------------------------------
+
+
+def _assert_roundtrip(points):
+    entries = points_to_entries(points)
+    decoded = decode_batch_payload(encode_batch_payload(entries))
+    rebuilt = []
+    for m, tags, times, cols in decoded:
+        for i, t in enumerate(times):
+            rebuilt.append(Point(m, dict(tags),
+                                 {k: c[i] for k, c in cols.items()
+                                  if c[i] is not None}, t))
+    def key(p):
+        # repr-keyed fields: deterministic total order even when points
+        # sharing (meas, tags, ts) carry different field *types*
+        return (p.measurement, sorted(p.tags.items()), p.timestamp,
+                repr(sorted(p.fields.items())))
+    orig = sorted(points, key=key)
+    back = sorted(rebuilt, key=key)
+    assert len(orig) == len(back)
+    for a, b in zip(orig, back):
+        assert a.measurement == b.measurement
+        assert a.tags == b.tags
+        assert a.timestamp == b.timestamp
+        assert a.fields == b.fields   # exact types incl. bool/int/str
+
+
+def test_codec_roundtrip_seeded():
+    """Seeded fallback for the property below: mixed numeric/str/bool
+    fields with None holes survive the wire byte-exactly."""
+    for seed in range(5):
+        _assert_roundtrip(_mixed_points(seed=seed))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(
+    st.tuples(
+        st.sampled_from(["m1", "m2"]),
+        st.sampled_from(["h0", "h1"]),
+        st.integers(min_value=0, max_value=2**48),
+        st.one_of(st.floats(allow_nan=False, allow_infinity=False),
+                  st.integers(min_value=-2**62, max_value=2**62),
+                  st.booleans(),
+                  st.text(max_size=8)),
+    ),
+    min_size=1, max_size=60))
+def test_codec_roundtrip_property(rows):
+    pts = [Point(m, {"hostname": h}, {"value": v}, ts)
+           for m, h, ts, v in rows]
+    _assert_roundtrip(pts)
+
+
+# -- binary vs HTTP equivalence ----------------------------------------------
+
+
+def test_binary_matches_http_line_path():
+    """The same workload through the binary plane and through /write
+    must leave byte-identical query results (acceptance criterion)."""
+    pts = _mixed_points()
+
+    r_bin = MetricsRouter(TSDBServer(), per_job_db=True, per_user_db=True)
+    r_http = MetricsRouter(TSDBServer(), per_job_db=True, per_user_db=True)
+    for r in (r_bin, r_http):
+        r.job_start("j1", "alice", ["h0", "h1"], {"arch": "demo"}, ts=1)
+
+    srv = IngestServer(r_bin).start()
+    try:
+        sink = BinarySink(srv.host, srv.port)
+        assert sink.write(pts) == len(pts)
+        sink.close()
+    finally:
+        srv.stop()
+    with LMSHttpServer(r_http) as hsrv:
+        HttpSink(hsrv.url).write(pts)
+
+    meas = ["hpm", "system"]
+    for dbname in ("global", "job_j1", "user_alice"):
+        a = _db_state(r_bin.backend.db(dbname), meas)
+        b = _db_state(r_http.backend.db(dbname), meas)
+        assert a == b, f"state diverged in {dbname}"
+
+
+def test_binary_ingest_persisted_wal(tmp_path):
+    """Columnar writes go through the WAL: a recovered store answers
+    exactly like the one that ingested over the socket."""
+    backend = TSDBServer(persist_dir=str(tmp_path))
+    router = MetricsRouter(backend)
+    pts = _mixed_points(n=80)
+    srv = IngestServer(router).start()
+    try:
+        sink = BinarySink(srv.host, srv.port)
+        assert sink.write(pts) == len(pts)
+        sink.close()
+    finally:
+        srv.stop()
+    want = _db_state(backend.db("global"), ["hpm", "system"])
+    backend.close()
+
+    backend2 = TSDBServer(persist_dir=str(tmp_path))
+    stats = backend2.load_persisted()
+    assert stats["global"]["points_replayed"] == len(pts)
+    assert _db_state(backend2.db("global"), ["hpm", "system"]) == want
+    backend2.close()
+
+
+def test_write_entries_enriches_per_series(served):
+    router, srv = served
+    router.job_start("j7", "dana", ["h0"])
+    sink = BinarySink(srv.host, srv.port)
+    sink.write([Point("m", {"hostname": "h0"}, {"v": 1.0}, 10),
+                Point("m", {"hostname": "nope"}, {"v": 2.0}, 11),
+                Point("m", {}, {"v": 3.0}, 12)])     # no host -> dropped
+    sink.close()
+    s = router.backend.db("global").select("m", ["v"], {"jobid": "j7"})
+    assert len(s) == 1 and s[0].tags["username"] == "dana"
+    assert router.stats.snapshot()["dropped_no_host"] == 1
+    # per-job/per-user duplication happened for the tagged series only
+    assert router.backend.db("job_j7").point_count() == 1
+    assert router.backend.db("user_dana").point_count() == 1
+
+
+# -- transport: reconnect, fallback, shed ------------------------------------
+
+
+def test_sink_reconnects_after_server_side_drop(served):
+    router, srv = served
+    sink = BinarySink(srv.host, srv.port)
+    assert sink.write([Point("m", {"hostname": "h0"}, {"v": 1.0}, 1)]) == 1
+    # kill every server-side connection under the client
+    with srv._lock:
+        conns = list(srv._conns)
+    for c in conns:
+        c.close()
+    time.sleep(0.05)
+    assert sink.write([Point("m", {"hostname": "h0"}, {"v": 2.0}, 2)]) == 1
+    assert sink.stats["reconnects"] >= 1
+    assert router.backend.db("global").select("m")[0].times == [1, 2]
+    sink.close()
+
+
+def test_sink_falls_back_to_http(router):
+    """Binary endpoint down -> the batch flows through the HTTP line
+    path instead; after the cooldown the sink retries binary."""
+    with LMSHttpServer(router) as hsrv:
+        # a port with no listener: connect() must fail fast
+        dead = socket.socket()
+        dead.bind(("127.0.0.1", 0))
+        port = dead.getsockname()[1]
+        dead.close()
+        sink = BinarySink("127.0.0.1", port, fallback=HttpSink(hsrv.url),
+                          fallback_cooldown_s=60.0)
+        n = sink.write([Point("m", {"hostname": "h0"}, {"v": 1.0}, 1)])
+        assert n == 1
+        st = sink.stats
+        assert st["fallback_batches"] == 1 and st["batches"] == 0
+        # inside the cooldown the sink goes straight to HTTP
+        sink.write([Point("m", {"hostname": "h0"}, {"v": 2.0}, 2)])
+        assert sink.stats["fallback_batches"] == 2
+        sink.close()
+    assert router.backend.db("global").select("m")[0].times == [1, 2]
+
+
+def test_sink_without_fallback_raises(router):
+    dead = socket.socket()
+    dead.bind(("127.0.0.1", 0))
+    port = dead.getsockname()[1]
+    dead.close()
+    sink = BinarySink("127.0.0.1", port)
+    with pytest.raises(OSError):
+        sink.write([Point("m", {"hostname": "h0"}, {"v": 1.0}, 1)])
+
+
+def _raw_conn(srv):
+    """Handshaken raw socket — for pipelining frames (multiplexed
+    req_ids), which the synchronous BinarySink never does."""
+    from repro.core.ingest import _FRAME, _recv_exact
+    s = socket.create_connection((srv.host, srv.port), timeout=10.0)
+    s.sendall(MAGIC + (0).to_bytes(2, "little"))
+    _, _, ln = _FRAME.unpack(_recv_exact(s, _FRAME.size))   # T_HELLO
+    _recv_exact(s, ln)
+    return s
+
+
+def test_queue_full_sheds_then_retry_is_exact(router):
+    """Overload: 20 pipelined writes against a slow worker and a
+    2-deep queue force shed frames; the client resends each shed
+    req_id after the advertised delay and every point lands exactly
+    once — nothing lost, nothing duplicated, nothing stalls."""
+    from repro.core.ingest import _FRAME, _recv_exact, T_OK, T_SHED, T_WRITE
+    orig = router.write_entries
+
+    def slow_write_entries(entries):
+        time.sleep(0.02)
+        return orig(entries)
+    router.write_entries = slow_write_entries
+
+    srv = IngestServer(router, queue_max=2, shed_retry_after_s=0.01)
+    srv.start()
+    try:
+        s = _raw_conn(srv)
+        payloads = {
+            rid: encode_batch_payload(
+                [("m", {"hostname": "h0"}, [rid], {"v": [float(rid)]})])
+            for rid in range(1, 21)}
+        for rid, pl in payloads.items():        # pipeline all 20 at once
+            s.sendall(_FRAME.pack(T_WRITE, rid, len(pl)) + pl)
+        pending = set(payloads)
+        sheds = 0
+        while pending:
+            ftype, rid, ln = _FRAME.unpack(_recv_exact(s, _FRAME.size))
+            body = _recv_exact(s, ln) if ln else b""
+            if ftype == T_OK:
+                pending.discard(rid)
+            elif ftype == T_SHED:
+                # explicit shed: the batch was NOT applied server-side,
+                # so the resend below is exactly-once
+                sheds += 1
+                time.sleep(0.01)
+                pl = payloads[rid]
+                s.sendall(_FRAME.pack(T_WRITE, rid, len(pl)) + pl)
+            else:
+                raise AssertionError(f"unexpected frame type {ftype}")
+        s.close()
+        assert sheds > 0                        # overload really shed
+        assert srv.stats()["shed_frames"] == sheds
+        series = router.backend.db("global").select("m")
+        times = sorted(t for se in series for t in se.times)
+        assert times == list(range(1, 21))      # exactly once each
+    finally:
+        router.write_entries = orig
+        srv.stop()
+
+
+def test_shed_budget_exhaustion_raises(router):
+    """A sink whose server sheds past max_shed_retries surfaces an
+    IngestError (never a silent drop or an unbounded stall)."""
+    from repro.core.ingest import (_FRAME, _HELLO_DB, _SHED_BODY,
+                                   _recv_exact, T_HELLO, T_SHED)
+    lst = socket.socket()
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+    port = lst.getsockname()[1]
+
+    def shed_everything():
+        conn, _ = lst.accept()
+        _recv_exact(conn, len(MAGIC))
+        (n,) = _HELLO_DB.unpack(_recv_exact(conn, _HELLO_DB.size))
+        if n:
+            _recv_exact(conn, n)
+        conn.sendall(_FRAME.pack(T_HELLO, 0, 2) + b"{}")
+        try:
+            while True:
+                _, rid, ln = _FRAME.unpack(_recv_exact(conn, _FRAME.size))
+                if ln:
+                    _recv_exact(conn, ln)
+                conn.sendall(_FRAME.pack(T_SHED, rid, _SHED_BODY.size)
+                             + _SHED_BODY.pack(0.001))
+        except (ConnectionError, OSError):
+            pass
+
+    t = threading.Thread(target=shed_everything, daemon=True)
+    t.start()
+    sink = BinarySink("127.0.0.1", port, max_shed_retries=2)
+    with pytest.raises(IngestError, match="shed"):
+        sink.write([Point("m", {"hostname": "h0"}, {"v": 1.0}, 1)])
+    assert sink.stats["sheds"] == 3             # initial + 2 retries
+    sink.close()
+    lst.close()
+
+
+def test_oversized_frame_rejected(served):
+    router, srv = served
+    srv.max_frame_bytes = 1024
+    sink = BinarySink(srv.host, srv.port)
+    pts = [Point("m", {"hostname": "h0"}, {"v": float(i)}, i)
+           for i in range(1000)]
+    with pytest.raises(IngestError, match="exceeds limit"):
+        sink.write(pts)
+    # the connection survives (stream stayed in sync) and serves more
+    assert sink.write([Point("m", {"hostname": "h0"}, {"v": 1.0}, 1)]) == 1
+    sink.close()
+
+
+def test_handshake_rejects_bad_magic(served):
+    router, srv = served
+    s = socket.create_connection((srv.host, srv.port), timeout=2.0)
+    s.sendall(b"NOTMAGIC" + b"\x00\x00")
+    s.settimeout(2.0)
+    try:
+        assert s.recv(1) == b""      # server closed the connection (FIN)
+    except ConnectionError:
+        pass                         # ... or reset it outright (RST)
+    s.close()
+
+
+def test_meta_ingest_counters(served):
+    router, srv = served
+    sink = BinarySink(srv.host, srv.port)
+    sink.write([Point("m", {"hostname": "h0"}, {"v": 1.0}, 1)])
+    assert sink.ping()
+    sink.close()
+    with LMSHttpServer(router) as hsrv:
+        with urllib.request.urlopen(hsrv.url + "/meta?what=ingest") as r:
+            meta = json.loads(r.read())["ingest"]
+    assert meta["batches_ok"] == 1 and meta["points_ok"] == 1
+    assert meta["pings"] == 1 and meta["shed_frames"] == 0
+    assert meta["queue_max"] == srv.queue_max
+
+
+def test_usermetric_over_binary_sink(served):
+    router, srv = served
+    sink = BinarySink(srv.host, srv.port)
+    um = UserMetric(sink, hostname="h0", batch_size=8,
+                    flush_interval_s=9999)
+    for i in range(20):
+        um.metric("loss", float(i), ts=i + 1)
+    um.close()
+    sink.close()
+    s = router.backend.db("global").select("loss")[0]
+    assert s.times == list(range(1, 21))
+
+
+# -- satellite regressions ----------------------------------------------------
+
+
+def test_partial_write_semantics(router):
+    """One malformed line must not abort its siblings (regression: the
+    whole batch used to 400 and drop)."""
+    body = ("m,hostname=h0 v=1.0 1\n"
+            "m,hostname=h0 v=12xi 2\n"          # bad integer field
+            "m,hostname=h0 v=3.0 zzz\n"         # bad timestamp
+            "m,hostname=h0 v=4.0 4")
+    res = router.write_lines(body)
+    assert res["written"] == 2
+    assert [e["line"] for e in res["errors"]] == [2, 3]
+    assert all("bad" in e["error"] for e in res["errors"])
+    s = router.backend.db("global").select("m")[0]
+    assert s.times == [1, 4]
+    assert router.stats.snapshot()["parse_errors"] == 2
+
+
+def test_parse_field_value_raises_protocol_error():
+    from repro.core.line_protocol import (LineProtocolError,
+                                          _parse_field_value)
+    with pytest.raises(LineProtocolError):
+        _parse_field_value("12xi")
+    pts, errs = decode_batch_errors("m,hostname=h0 v=12xi 1")
+    assert pts == [] and errs[0]["line"] == 1
+
+
+def test_http_write_reports_partial_errors(router):
+    with LMSHttpServer(router) as srv:
+        body = b"m,hostname=h0 v=1.0 1\nm,hostname=h0 v=bogusx 2"
+        req = urllib.request.Request(srv.url + "/write", data=body,
+                                     method="POST")
+        with urllib.request.urlopen(req) as r:
+            assert r.status == 200
+            out = json.loads(r.read())
+        assert out["written"] == 1 and out["errors"][0]["line"] == 2
+        # nothing parsed -> 400
+        req = urllib.request.Request(srv.url + "/write", data=b"garbage",
+                                     method="POST")
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(req)
+        assert ei.value.code == 400
+
+
+def test_204_has_no_body(router):
+    """RFC 9110 §6.4.1 regression: /ping 204 must not carry a body or
+    Content-Length — raw socket read so no client library hides it."""
+    with LMSHttpServer(router) as srv:
+        host, port = srv.httpd.server_address[:2]
+        s = socket.create_connection((host, port), timeout=2.0)
+        s.sendall(b"GET /ping HTTP/1.1\r\nHost: x\r\n"
+                  b"Connection: close\r\n\r\n")
+        raw = b""
+        while True:
+            chunk = s.recv(4096)
+            if not chunk:
+                break
+            raw += chunk
+        s.close()
+    head, _, body = raw.partition(b"\r\n\r\n")
+    assert b"204" in head.split(b"\r\n")[0]
+    assert b"content-length" not in head.lower()
+    assert body == b""
+
+
+def test_usermetric_implicit_flush_never_raises():
+    """Monitoring must not crash the monitored app: a batch-size-
+    triggered flush with a dead sink is swallowed (and counted);
+    explicit flush() still raises."""
+    def sink(points):
+        raise ConnectionError("router down")
+
+    um = UserMetric(sink, batch_size=2, flush_interval_s=9999,
+                    hostname="h0")
+    um.metric("v", 1.0)
+    um.metric("v", 2.0)          # triggers implicit flush -> swallowed
+    um.metric("v", 3.0)
+    st = um.stats
+    assert st["failed_flushes"] >= 1 and st["buffered"] == 3
+    with pytest.raises(ConnectionError):
+        um.flush()               # explicit stays loud
+
+
+def test_host_agent_survives_dead_router():
+    from repro.core.host_agent import HostAgent
+
+    class DeadRouter:
+        def write(self, points):
+            raise ConnectionError("down")
+
+    agent = HostAgent(DeadRouter(), hostname="h0", batch_size=1,
+                      max_pending_points=10)
+    for step in range(20):       # collection ticks must not raise
+        agent.collect_step(step=step, step_time_s=0.1)
+    st = agent.emit_stats
+    assert st["failed_flushes"] == 20
+    assert st["pending"] == 10 and st["dropped_points"] == 10
+    with pytest.raises(ConnectionError):
+        agent.flush()            # explicit stays loud
+
+
+def test_request_body_cap_413(router):
+    with LMSHttpServer(router, max_body_bytes=1024) as srv:
+        url = srv.url
+        body = b"m,hostname=h0 v=1.0 1\n" * 100      # > 1 KiB
+        req = urllib.request.Request(url + "/write", data=body,
+                                     method="POST")
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(req)
+        assert ei.value.code == 413
+        assert json.loads(ei.value.read())["max_body_bytes"] == 1024
+        # small bodies still flow
+        req = urllib.request.Request(url + "/write",
+                                     data=b"m,hostname=h0 v=1.0 1",
+                                     method="POST")
+        with urllib.request.urlopen(req) as r:
+            assert json.loads(r.read())["written"] == 1
+    assert router.backend.db("global").point_count() == 1
+
+
+def test_stack_serves_binary_plane(tmp_path):
+    from repro.core import MonitoringStack
+    stack = MonitoringStack(out_dir=str(tmp_path), serve_http=True,
+                            serve_ingest=True, per_job_db=False)
+    try:
+        sink = stack.binary_sink()
+        assert sink.write([Point("m", {"hostname": "h0"},
+                                 {"v": 1.0}, 1)]) == 1
+        sink.close()
+        assert stack.router.ingest is stack.ingest
+        assert stack.backend.db("global").point_count() == 1
+    finally:
+        stack.close()

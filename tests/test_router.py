@@ -130,8 +130,8 @@ def test_requires_host_tag(router):
 
 
 def test_write_lines(router):
-    n = router.write_lines("m,hostname=h0 v=1.0 1\nm,hostname=h0 v=2.0 2")
-    assert n == 2
+    res = router.write_lines("m,hostname=h0 v=1.0 1\nm,hostname=h0 v=2.0 2")
+    assert res == {"written": 2, "errors": []}
     assert router.backend.db("global").point_count() == 2
 
 
