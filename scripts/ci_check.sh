@@ -25,7 +25,8 @@ timeout "${CI_FAST_TIMEOUT:-600}" python -m pytest -q \
     tests/test_lms_stack.py \
     tests/test_query.py \
     tests/test_analysis.py \
-    tests/test_analysis_engine.py
+    tests/test_analysis_engine.py \
+    tests/test_coldstore.py
 
 echo "[3/4] stress/property tier (bounded; timeout ${CI_STRESS_TIMEOUT:-600}s)"
 # Bounded example counts keep CI deterministic-ish and quick; raise the

@@ -33,6 +33,7 @@ from repro.core.query import (QueryEngine, QueryResult, QuerySpec,
                               derived_rollup_series, make_plan)
 from repro.core.rollup import (DEFAULT_TIERS_NS, ROLLUP_AGGS, RollupConfig,
                                SeriesRollups, WindowAgg)
+from repro.core.coldstore import ColdStore, ColdView
 from repro.core.httpd import HttpQueryClient
 from repro.core.ingest import BinarySink, IngestServer
 from repro.core.router import MetricsRouter
@@ -43,7 +44,7 @@ from repro.core.wal import DurableStore, SegmentedWal, import_legacy_jsonl
 
 __all__ = [
     "ANALYSIS_MEASUREMENT", "Alert", "AnalysisEngine", "BinarySink",
-    "CompiledFormula",
+    "ColdStore", "ColdView", "CompiledFormula",
     "DEFAULT_TIERS_NS", "DEFAULT_TREE", "Database", "DashboardAgent",
     "DurableStore", "FederatedQuery", "Finding", "GROUPS", "HBM_BW",
     "HostAgent", "IngestServer", "SegmentedWal", "import_legacy_jsonl",
@@ -81,9 +82,13 @@ class MonitoringStack:
                  persist_dir: Optional[str] = None, fsync: str = "batch",
                  recover: bool = True,
                  serve_http: bool = False, serve_ingest: bool = False,
-                 shards: int = 1):
+                 shards: int = 1, cold_tier: bool = False):
+        # cold_tier=True (requires persist_dir): retention seals expired
+        # raw history into compressed immutable chunks instead of
+        # dropping it — months of raw data at a fraction of the bytes,
+        # still answering every query (repro.core.coldstore)
         self.backend = TSDBServer(persist_dir=persist_dir, shards=shards,
-                                  fsync=fsync)
+                                  fsync=fsync, cold=cold_tier)
         # crash-safe durability: a restarted stack keeps serving the job
         # histories it had already collected (repro.core.wal)
         self.recovery_stats = self.backend.load_persisted() \

@@ -1,0 +1,834 @@
+"""Compressed columnar cold tier — sealed, immutable, lossless history.
+
+The paper's end goal is "a statistical foundation about application
+specific system usage", which needs months of cheap raw history; MPCDF's
+job-archive design keeps a compressed per-job archive for exactly this
+reason.  Before this module, ``enforce_retention`` *dropped* expired raw
+columns and only the rollup summaries survived.  With a cold store
+configured (``TSDBServer(cold=True)``), the retention sweep instead
+*seals* the expired column prefixes into time-partitioned immutable
+chunks, so raw history and rollups both survive — and the query layer
+answers byte-identically whether the points are resident or sealed.
+
+Chunk file format (``cold/chunk-<seq>.chk``)::
+
+    LMSCOLD1                                    8-byte magic
+    <u32 len, u32 crc32> series-block           one per sealed series
+    <u32 len, u32 crc32> index-block            always last
+    <u64 index_off> LMSCEND1                    12-byte trailer
+
+Block framing reuses the WAL conventions (``repro.core.wal``): records
+are length-prefixed and CRC-checked, so a flipped bit is *detected* and
+the block is skipped with a warning — corruption can hide data (counted
+in :meth:`ColdStore.stats`), never return wrong data.  A torn trailer
+falls back to a full frame scan; an unrecoverable index skips the whole
+chunk.
+
+Series blocks are Gorilla-style compressed columns:
+
+* **timestamps** — delta-of-delta, zigzag + LEB128 varint (regular
+  sampling intervals cost ~1 byte/point; out-of-order and duplicate
+  timestamps are just negative/zero deltas, still exact);
+* **float64 columns** — XOR bit-packing with leading/trailing-zero
+  windows (the Facebook Gorilla scheme).  The XOR acts on the raw IEEE
+  bits, so NaN payloads, ``±inf`` and ``-0.0`` round-trip exactly;
+* **int columns** — delta-of-delta varints (arbitrary-precision, so
+  int64 overflow is impossible by construction);
+* columns with ``None`` holes add a presence bitmap in front of the
+  packed non-``None`` values; mixed/bool/str columns fall back to JSON
+  in the block meta — exact types, same rule as the WAL codec.
+
+The per-chunk index (one JSON block) maps each series to its block
+offset, ``t_min``/``t_max``, count and field names, so queries skip
+whole chunks/blocks by time range without decoding them.
+
+**Seal protocol** (driven by ``repro.core.wal.DurableStore``): under the
+snapshot write barrier, the expired prefixes are captured, the chunk is
+written with the WAL durability discipline (tmp + fsync + rename +
+directory fsync), the hot prefixes are trimmed *atomically* with the
+chunk becoming query-visible (per shard, under that shard's lock), and
+the post-trim snapshot commits the chunk by recording
+``cold_committed = <max chunk seq>``.  The snapshot rename is the commit
+point: a crash before it leaves an orphan chunk that recovery deletes
+(the raw points are still in the old snapshot + WAL); a crash after it
+leaves the chunk live and the raw points gone from the hot tier — never
+both, never neither.
+
+Sharding: one :class:`ColdStore` per database directory; each shard's
+``Database`` gets a :class:`ColdView` filtering sealed series by the
+*current* shard hash (``repro.core.shard.shard_index``), so a chunk
+written under one shard layout reads correctly under another and every
+sealed series is served by exactly one shard.
+"""
+
+from __future__ import annotations
+
+import bisect
+import json
+import logging
+import os
+import struct
+import threading
+import zlib
+from collections import OrderedDict
+from typing import Iterable, Optional
+
+from repro.core.shard import shard_index
+
+log = logging.getLogger("repro.core.coldstore")
+
+CHUNK_MAGIC = b"LMSCOLD1"
+CHUNK_END_MAGIC = b"LMSCEND1"
+_HEADER = struct.Struct("<II")          # payload length, crc32(payload)
+_TRAILER = struct.Struct("<Q8s")        # index block offset, end magic
+_BLOB_LEN = struct.Struct("<I")
+_F64 = struct.Struct("<d")
+_U64 = struct.Struct("<Q")
+
+_SERIES_TAG = 0x53                      # b"S"
+_INDEX_TAG = 0x49                       # b"I"
+
+
+def _chunk_name(seq: int) -> str:
+    return f"chunk-{seq:08d}.chk"
+
+
+def _parse_chunk_seq(fn: str) -> Optional[int]:
+    if not fn.startswith("chunk-") or not fn.endswith(".chk"):
+        return None
+    try:
+        return int(fn[len("chunk-"):-len(".chk")])
+    except ValueError:
+        return None
+
+
+# --------------------------------------------------------------------------
+# Integer codec: delta-of-delta, zigzag + LEB128 varint
+# --------------------------------------------------------------------------
+
+
+def _zigzag(n: int) -> int:
+    return (n << 1) if n >= 0 else ((-n << 1) - 1)
+
+
+def _unzigzag(z: int) -> int:
+    return (z >> 1) if not (z & 1) else -((z + 1) >> 1)
+
+
+def _write_uvarint(out: bytearray, z: int):
+    while True:
+        b = z & 0x7F
+        z >>= 7
+        if z:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return
+
+
+def encode_ints(vals: list) -> bytes:
+    """Delta-of-delta varint encoding of an int column (timestamps or
+    integer values).  Python-int arithmetic: exact for *any* magnitude,
+    and counter resets / out-of-order values are just negative deltas."""
+    out = bytearray()
+    prev = 0
+    prev_d = 0
+    for i, v in enumerate(vals):
+        if i == 0:
+            _write_uvarint(out, _zigzag(v))
+            prev = v
+        else:
+            d = v - prev
+            _write_uvarint(out, _zigzag(d - prev_d))
+            prev_d = d
+            prev = v
+    return bytes(out)
+
+
+def decode_ints(blob: bytes, n: int) -> list:
+    out = []
+    pos = 0
+    prev = 0
+    prev_d = 0
+    for i in range(n):
+        z = 0
+        shift = 0
+        while True:
+            if pos >= len(blob):
+                raise ValueError("truncated int column")
+            b = blob[pos]
+            pos += 1
+            z |= (b & 0x7F) << shift
+            shift += 7
+            if not (b & 0x80):
+                break
+        v = _unzigzag(z)
+        if i == 0:
+            prev = v
+        else:
+            prev_d += v
+            prev += prev_d
+        out.append(prev)
+    if pos != len(blob):
+        raise ValueError("trailing bytes in int column")
+    return out
+
+
+# --------------------------------------------------------------------------
+# Float codec: Gorilla XOR bit-packing
+# --------------------------------------------------------------------------
+
+
+class _BitWriter:
+    __slots__ = ("_acc", "_nbits", "_out")
+
+    def __init__(self):
+        self._acc = 0
+        self._nbits = 0
+        self._out = bytearray()
+
+    def write(self, value: int, bits: int):
+        self._acc = (self._acc << bits) | (value & ((1 << bits) - 1))
+        self._nbits += bits
+        while self._nbits >= 8:
+            self._nbits -= 8
+            self._out.append((self._acc >> self._nbits) & 0xFF)
+        self._acc &= (1 << self._nbits) - 1
+
+    def getvalue(self) -> bytes:
+        if self._nbits:
+            return bytes(self._out) + \
+                bytes(((self._acc << (8 - self._nbits)) & 0xFF,))
+        return bytes(self._out)
+
+
+class _BitReader:
+    __slots__ = ("_data", "_byte", "_bit")
+
+    def __init__(self, data: bytes):
+        self._data = data
+        self._byte = 0
+        self._bit = 0
+
+    def read(self, nbits: int) -> int:
+        out = 0
+        data = self._data
+        byte_i, bit_i = self._byte, self._bit
+        while nbits > 0:
+            if byte_i >= len(data):
+                raise ValueError("truncated float column")
+            avail = 8 - bit_i
+            take = avail if avail < nbits else nbits
+            out = (out << take) | \
+                ((data[byte_i] >> (avail - take)) & ((1 << take) - 1))
+            bit_i += take
+            nbits -= take
+            if bit_i == 8:
+                byte_i += 1
+                bit_i = 0
+        self._byte, self._bit = byte_i, bit_i
+        return out
+
+
+def encode_floats(vals: list) -> bytes:
+    """Gorilla XOR compression of a float64 column.  Operates on the raw
+    IEEE-754 bits (identical value -> 1 bit; small mantissa drift -> the
+    meaningful XOR window), so NaN payloads, ``±inf`` and ``-0.0`` all
+    round-trip bit-exactly."""
+    bw = _BitWriter()
+    prev = _U64.unpack(_F64.pack(vals[0]))[0]
+    bw.write(prev, 64)
+    lead = -1
+    trail = 0
+    for v in vals[1:]:
+        cur = _U64.unpack(_F64.pack(v))[0]
+        x = prev ^ cur
+        if x == 0:
+            bw.write(0, 1)
+        else:
+            bw.write(1, 1)
+            lz = 64 - x.bit_length()
+            if lz > 31:
+                lz = 31
+            tz = (x & -x).bit_length() - 1
+            if lead >= 0 and lz >= lead and tz >= trail:
+                # reuse the previous meaningful-bit window
+                bw.write(0, 1)
+                bw.write(x >> trail, 64 - lead - trail)
+            else:
+                lead, trail = lz, tz
+                mbits = 64 - lead - trail
+                bw.write(1, 1)
+                bw.write(lead, 5)
+                bw.write(mbits - 1, 6)
+                bw.write(x >> trail, mbits)
+        prev = cur
+    return bw.getvalue()
+
+
+def decode_floats(blob: bytes, n: int) -> list:
+    if n == 0:
+        return []
+    br = _BitReader(blob)
+    prev = br.read(64)
+    out = [_F64.unpack(_U64.pack(prev))[0]]
+    lead = 0
+    trail = 64
+    for _ in range(n - 1):
+        if br.read(1):
+            if br.read(1):
+                lead = br.read(5)
+                mbits = br.read(6) + 1
+                trail = 64 - lead - mbits
+                if trail < 0:
+                    raise ValueError("invalid float block window")
+            prev ^= br.read(64 - lead - trail) << trail
+        out.append(_F64.unpack(_U64.pack(prev))[0])
+    return out
+
+
+# --------------------------------------------------------------------------
+# Column codec selection (mirrors the WAL ``_pack_numeric`` type rules:
+# exact type identity, bools/None/mixed fall back to JSON)
+# --------------------------------------------------------------------------
+
+
+_FLOAT_COL = frozenset((float,))
+_INT_COL = frozenset((int,))
+_NONE = type(None)
+
+
+def _pack_bitmap(col: list) -> bytes:
+    out = bytearray((len(col) + 7) // 8)
+    for i, v in enumerate(col):
+        if v is not None:
+            out[i >> 3] |= 0x80 >> (i & 7)
+    return bytes(out)
+
+
+def _encode_column(col: list):
+    """``(code, blobs)``: ``g``/``d`` dense float/int, ``gh``/``dh`` with
+    a presence bitmap for ``None`` holes, or ``("j", None)`` for the JSON
+    fallback (mixed types, bools, strings)."""
+    kinds = set(map(type, col))
+    if kinds == _FLOAT_COL:
+        return "g", [encode_floats(col)]
+    if kinds == _INT_COL:
+        return "d", [encode_ints(col)]
+    if _NONE in kinds and len(kinds) == 2:
+        present = [v for v in col if v is not None]
+        dense = kinds - {_NONE}
+        if present and dense == _FLOAT_COL:
+            return "gh", [_pack_bitmap(col), encode_floats(present)]
+        if present and dense == _INT_COL:
+            return "dh", [_pack_bitmap(col), encode_ints(present)]
+    return "j", None
+
+
+def _decode_column(code: str, blobs: list, n: int) -> list:
+    if code == "g":
+        return decode_floats(blobs[0], n)
+    if code == "d":
+        return decode_ints(blobs[0], n)
+    bitmap, data = blobs
+    if len(bitmap) != (n + 7) // 8:
+        raise ValueError("bad presence bitmap length")
+    present = sum(bin(b).count("1") for b in bitmap)
+    vals = decode_floats(data, present) if code == "gh" \
+        else decode_ints(data, present)
+    out = []
+    it = iter(vals)
+    for i in range(n):
+        if bitmap[i >> 3] & (0x80 >> (i & 7)):
+            out.append(next(it))
+        else:
+            out.append(None)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Series block <-> bytes
+# --------------------------------------------------------------------------
+
+
+def encode_series_block(measurement: str, tags: dict, times: list,
+                        cols: dict) -> bytes:
+    """One sealed series -> block payload: tag byte + JSON meta + length-
+    prefixed codec blobs (timestamps first, then columns in meta order)."""
+    colspec = []
+    blobs = [encode_ints(times)]
+    for k, col in cols.items():
+        code, cblobs = _encode_column(col)
+        if code == "j":
+            colspec.append([k, "j", col])
+        else:
+            colspec.append([k, code])
+            blobs.extend(cblobs)
+    meta = json.dumps([measurement, tags, len(times), colspec],
+                      separators=(",", ":")).encode()
+    parts = [bytes((_SERIES_TAG,)), _BLOB_LEN.pack(len(meta)), meta]
+    for b in blobs:
+        parts.append(_BLOB_LEN.pack(len(b)))
+        parts.append(b)
+    return b"".join(parts)
+
+
+def decode_series_block(payload: bytes):
+    """Block payload -> ``(measurement, tags, times, cols)``.  Raises
+    ``ValueError`` on any structural damage (the caller treats the block
+    as unreadable — skipped and counted, never wrong data)."""
+    if not payload or payload[0] != _SERIES_TAG:
+        raise ValueError("not a series block")
+    (mlen,) = _BLOB_LEN.unpack_from(payload, 1)
+    off = 1 + _BLOB_LEN.size + mlen
+    measurement, tags, n, colspec = json.loads(payload[1 + _BLOB_LEN.size:off])
+
+    def read_blob():
+        nonlocal off
+        (ln,) = _BLOB_LEN.unpack_from(payload, off)
+        off += _BLOB_LEN.size
+        if off + ln > len(payload):
+            raise ValueError("truncated blob")
+        b = payload[off:off + ln]
+        off += ln
+        return b
+
+    times = decode_ints(read_blob(), n)
+    cols = {}
+    for spec in colspec:
+        if spec[1] == "j":
+            col = spec[2]
+            if len(col) != n:
+                raise ValueError("bad JSON column length")
+            cols[spec[0]] = col
+        elif spec[1] in ("g", "d"):
+            cols[spec[0]] = _decode_column(spec[1], [read_blob()], n)
+        elif spec[1] in ("gh", "dh"):
+            bitmap = read_blob()
+            cols[spec[0]] = _decode_column(spec[1], [bitmap, read_blob()], n)
+        else:
+            raise ValueError(f"unknown column code {spec[1]!r}")
+    return measurement, tags, times, cols
+
+
+def _frame(payload: bytes) -> bytes:
+    return _HEADER.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+# --------------------------------------------------------------------------
+# Chunk index
+# --------------------------------------------------------------------------
+
+
+class _ChunkSeries:
+    """Index entry for one series block inside a chunk."""
+
+    __slots__ = ("m", "tags", "tags_key", "off", "t_min", "t_max", "n",
+                 "fields")
+
+    def __init__(self, m, tags, off, t_min, t_max, n, fields):
+        self.m = m
+        self.tags = tags
+        self.tags_key = tuple(sorted(tags.items()))
+        self.off = off
+        self.t_min = t_min
+        self.t_max = t_max
+        self.n = n
+        self.fields = fields
+
+
+class _Chunk:
+    __slots__ = ("seq", "path", "series", "points", "nbytes", "raw_bytes",
+                 "by_meas")
+
+    def __init__(self, seq, path, series, nbytes):
+        self.seq = seq
+        self.path = path
+        self.series = series
+        self.points = sum(e.n for e in series)
+        self.nbytes = nbytes
+        # what the same rows cost as raw in-memory columns: one 8-byte
+        # timestamp plus one 8-byte slot per field column
+        self.raw_bytes = sum(8 * e.n * (1 + len(e.fields)) for e in series)
+        self.by_meas: dict = {}
+        for e in series:
+            self.by_meas.setdefault(e.m, []).append(e)
+
+
+# --------------------------------------------------------------------------
+# The store
+# --------------------------------------------------------------------------
+
+
+def _fsync_dir(path: str):
+    # same durability helper as repro.core.wal (duplicated to keep this
+    # module importable below wal in the layer stack)
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+class ColdStore:
+    """Immutable chunk archive for one database directory.
+
+    Thread-safety: chunk files are immutable once visible; the in-memory
+    index and decoded-block cache are guarded by one lock.  Visibility is
+    *per view* (:meth:`make_view`), so a seal can flip each shard's view
+    atomically with that shard's hot-prefix trim.
+    """
+
+    def __init__(self, directory: str, *, cache_blocks: int = 128):
+        os.makedirs(directory, exist_ok=True)
+        self.directory = directory
+        self._lock = threading.RLock()
+        self._chunks: dict = {}             # seq -> _Chunk
+        self._views: list = []
+        self._cache: OrderedDict = OrderedDict()
+        self._cache_max = int(cache_blocks)
+        self.corrupt_blocks = 0
+        self.skipped_chunks = 0
+        self.sealed_points = 0              # points appended this process
+        for fn in sorted(os.listdir(directory)):
+            seq = _parse_chunk_seq(fn)
+            if seq is None:
+                continue
+            chunk = self._load_chunk_index(seq, os.path.join(directory, fn))
+            if chunk is not None:
+                self._chunks[seq] = chunk
+            else:
+                self.skipped_chunks += 1
+
+    # -- open / index ---------------------------------------------------------
+
+    def _load_chunk_index(self, seq: int, path: str) -> Optional[_Chunk]:
+        try:
+            with open(path, "rb") as f:
+                data = f.read()
+        except OSError as e:
+            log.warning("cold chunk %s unreadable (%s); skipping", path, e)
+            return None
+        payload = self._index_payload(data, path)
+        if payload is None:
+            return None
+        try:
+            doc = json.loads(payload[1:])
+            series = [_ChunkSeries(d["m"], d["tags"], d["off"], d["t_min"],
+                                   d["t_max"], d["n"], d["fields"])
+                      for d in doc["series"]]
+        except (ValueError, KeyError, TypeError) as e:
+            log.warning("cold chunk %s has a corrupt index (%s); "
+                        "skipping whole chunk", path, e)
+            return None
+        return _Chunk(seq, path, series, len(data))
+
+    def _index_payload(self, data: bytes, path: str) -> Optional[bytes]:
+        """Locate + CRC-verify the index block: trailer pointer first,
+        full frame scan as the torn-file fallback."""
+        if not data.startswith(CHUNK_MAGIC):
+            log.warning("cold chunk %s: bad magic; skipping", path)
+            return None
+        if len(data) >= _TRAILER.size:
+            idx_off, end = _TRAILER.unpack_from(data, len(data)
+                                                - _TRAILER.size)
+            if end == CHUNK_END_MAGIC:
+                payload = self._read_frame(data, idx_off)
+                if payload is not None and payload[0] == _INDEX_TAG:
+                    return payload
+                log.warning("cold chunk %s: trailer points at a corrupt "
+                            "index; falling back to a frame scan", path)
+        # torn/corrupt trailer: walk the frames, keep the last valid index
+        off = len(CHUNK_MAGIC)
+        found = None
+        while off + _HEADER.size <= len(data):
+            payload = self._read_frame(data, off)
+            if payload is None:
+                break
+            if payload and payload[0] == _INDEX_TAG:
+                found = payload
+            off += _HEADER.size + len(payload)
+        if found is None:
+            log.warning("cold chunk %s: no valid index block; "
+                        "skipping whole chunk", path)
+        return found
+
+    @staticmethod
+    def _read_frame(data: bytes, off: int) -> Optional[bytes]:
+        if off + _HEADER.size > len(data):
+            return None
+        ln, crc = _HEADER.unpack_from(data, off)
+        start = off + _HEADER.size
+        end = start + ln
+        if end > len(data):
+            return None
+        payload = data[start:end]
+        if zlib.crc32(payload) != crc:
+            return None
+        return payload
+
+    # -- seal (write one chunk) ----------------------------------------------
+
+    def next_seq(self) -> int:
+        with self._lock:
+            return max(self._chunks, default=0) + 1
+
+    def max_seq(self) -> int:
+        """Highest chunk seq on disk — what a committing snapshot records
+        as ``cold_committed``."""
+        with self._lock:
+            return max(self._chunks, default=0)
+
+    def append_chunk(self, entries: Iterable) -> int:
+        """Write ``[(measurement, tags, times, cols), ...]`` as one
+        immutable chunk with the WAL durability discipline (tmp + fsync +
+        rename + directory fsync).  The chunk is registered in the index
+        but **not** made query-visible: callers flip each view's
+        visibility (``view.commit(seq)``) atomically with the hot-tier
+        trim, and the next snapshot commits it durably."""
+        with self._lock:
+            seq = max(self._chunks, default=0) + 1
+            parts = [CHUNK_MAGIC]
+            off = len(CHUNK_MAGIC)
+            index = []
+            series = []
+            for m, tags, times, cols in entries:
+                if not times:
+                    continue
+                block = _frame(encode_series_block(m, tags, times, cols))
+                t_min, t_max = min(times), max(times)
+                index.append({"m": m, "tags": tags, "off": off,
+                              "t_min": t_min, "t_max": t_max,
+                              "n": len(times), "fields": sorted(cols)})
+                series.append(_ChunkSeries(m, tags, off, t_min, t_max,
+                                           len(times), sorted(cols)))
+                parts.append(block)
+                off += len(block)
+            if not series:
+                raise ValueError("append_chunk needs at least one "
+                                 "non-empty series")
+            idx_payload = bytes((_INDEX_TAG,)) + json.dumps(
+                {"series": index}, separators=(",", ":")).encode()
+            parts.append(_frame(idx_payload))
+            parts.append(_TRAILER.pack(off, CHUNK_END_MAGIC))
+            data = b"".join(parts)
+            path = os.path.join(self.directory, _chunk_name(seq))
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+            _fsync_dir(self.directory)
+            self._chunks[seq] = _Chunk(seq, path, series, len(data))
+            self.sealed_points += self._chunks[seq].points
+            return seq
+
+    def reconcile(self, committed: Optional[int]) -> int:
+        """Drop uncommitted orphan chunks (seq > the snapshot's
+        ``cold_committed``) left by a crash between chunk write and
+        snapshot commit — their points are still in the snapshot/WAL, so
+        keeping them would double-count.  ``None`` keeps everything (an
+        unreadable snapshot may have made the chunks the only copy).
+        Returns the number of orphans deleted."""
+        if committed is None:
+            return 0
+        dropped = 0
+        with self._lock:
+            for seq in sorted(self._chunks):
+                if seq <= committed:
+                    continue
+                chunk = self._chunks.pop(seq)
+                for view in self._views:
+                    view.live.discard(seq)
+                try:
+                    os.remove(chunk.path)
+                except OSError:
+                    pass
+                log.warning("cold chunk %s was never committed by a "
+                            "snapshot (crash mid-seal); dropped", chunk.path)
+                dropped += 1
+            if dropped:
+                _fsync_dir(self.directory)
+        return dropped
+
+    # -- views ----------------------------------------------------------------
+
+    def make_view(self, shard_i: int = 0, n_shards: int = 1) -> "ColdView":
+        with self._lock:
+            view = ColdView(self, shard_i, n_shards, set(self._chunks))
+            self._views.append(view)
+            return view
+
+    # -- read path (always through a view) ------------------------------------
+
+    def _block(self, chunk: _Chunk, ent: _ChunkSeries):
+        """Decode (with caching) one series block; ``None`` if the block
+        is corrupt — skipped and counted, never wrong data."""
+        key = (chunk.seq, ent.off)
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None:
+                self._cache.move_to_end(key)
+                return hit
+        try:
+            with open(chunk.path, "rb") as f:
+                f.seek(ent.off)
+                head = f.read(_HEADER.size)
+                ln, crc = _HEADER.unpack(head)
+                payload = f.read(ln)
+            if len(payload) != ln or zlib.crc32(payload) != crc:
+                raise ValueError("CRC mismatch")
+            m, tags, times, cols = decode_series_block(payload)
+            if len(times) != ent.n:
+                raise ValueError("row count disagrees with index")
+        except (OSError, ValueError, KeyError, TypeError, struct.error) as e:
+            with self._lock:
+                self.corrupt_blocks += 1
+            log.warning("cold chunk %s: corrupt series block at %d (%s); "
+                        "skipping", chunk.path, ent.off, e)
+            return None
+        block = (times, cols)
+        with self._lock:
+            self._cache[key] = block
+            self._cache.move_to_end(key)
+            while len(self._cache) > self._cache_max:
+                self._cache.popitem(last=False)
+        return block
+
+    def _entries(self, live: set, measurement: Optional[str] = None):
+        with self._lock:
+            chunks = [self._chunks[s] for s in sorted(live)
+                      if s in self._chunks]
+        for chunk in chunks:
+            ents = chunk.by_meas.get(measurement, ()) \
+                if measurement is not None \
+                else [e for es in chunk.by_meas.values() for e in es]
+            for ent in ents:
+                yield chunk, ent
+
+    # -- introspection --------------------------------------------------------
+
+    def chunk_count(self) -> int:
+        with self._lock:
+            return len(self._chunks)
+
+    def stats(self) -> dict:
+        with self._lock:
+            chunks = list(self._chunks.values())
+            points = sum(c.points for c in chunks)
+            nbytes = sum(c.nbytes for c in chunks)
+            raw = sum(c.raw_bytes for c in chunks)
+            return {"chunks": len(chunks), "points": points,
+                    "bytes": nbytes,
+                    "bytes_per_point": nbytes / points if points else 0.0,
+                    "raw_bytes": raw,
+                    "compression_ratio": raw / nbytes if nbytes else 0.0,
+                    "sealed_points": self.sealed_points,
+                    "corrupt_blocks": self.corrupt_blocks,
+                    "skipped_chunks": self.skipped_chunks}
+
+
+class ColdView:
+    """One shard's read view of a :class:`ColdStore`.
+
+    ``live`` gates chunk visibility (flipped by ``commit`` atomically
+    with the shard's hot-prefix trim); series are filtered to this
+    shard by the stable crc32 hash, so re-hashing on restart keeps every
+    sealed series on exactly one shard.  The query methods mirror the
+    ``Database`` slice semantics bit-for-bit (inclusive bounds, falsy
+    ``t_min``/``t_max`` meaning unbounded) — tier parity depends on it.
+    """
+
+    def __init__(self, store: ColdStore, shard_i: int, n_shards: int,
+                 live: set):
+        self.store = store
+        self.shard_i = int(shard_i)
+        self.n_shards = int(n_shards)
+        self.live = live
+
+    def commit(self, seq: int):
+        self.live.add(seq)
+
+    def _mine(self, ent: _ChunkSeries) -> bool:
+        if self.n_shards <= 1:
+            return True
+        return shard_index(ent.m, ent.tags_key, self.n_shards) == \
+            self.shard_i
+
+    @staticmethod
+    def _tags_match(ent: _ChunkSeries, tags: Optional[dict]) -> bool:
+        return not tags or all(ent.tags.get(k) == str(v)
+                               for k, v in tags.items())
+
+    def fragments(self, measurement: str, fields: Optional[list] = None,
+                  tags: Optional[dict] = None, t_min: Optional[int] = None,
+                  t_max: Optional[int] = None) -> list:
+        """Sealed column fragments overlapping the range, in chunk order:
+        ``[(tags_key, tags, times, {field: column}), ...]`` — what
+        ``Database.select`` merges under the hot fragments."""
+        out = []
+        for chunk, ent in self.store._entries(self.live, measurement):
+            if not self._mine(ent) or not self._tags_match(ent, tags):
+                continue
+            if (t_min and ent.t_max < t_min) or \
+                    (t_max and ent.t_min > t_max):
+                continue
+            block = self.store._block(chunk, ent)
+            if block is None:
+                continue
+            times, cols = block
+            lo = bisect.bisect_left(times, t_min) if t_min else 0
+            hi = bisect.bisect_right(times, t_max) if t_max else len(times)
+            if lo >= hi:
+                continue
+            names = fields if fields else list(cols)
+            vals = {k: cols[k][lo:hi] for k in names if k in cols}
+            if not vals:
+                continue
+            out.append((ent.tags_key, ent.tags, times[lo:hi], vals))
+        return out
+
+    def measurements(self) -> set:
+        return {ent.m for _, ent in self.store._entries(self.live)
+                if self._mine(ent)}
+
+    def field_keys(self, measurement: str) -> set:
+        keys: set = set()
+        for _, ent in self.store._entries(self.live, measurement):
+            if self._mine(ent):
+                keys.update(ent.fields)
+        return keys
+
+    def tag_values(self, measurement: str, tag: str) -> set:
+        vals = {ent.tags.get(tag)
+                for _, ent in self.store._entries(self.live, measurement)
+                if self._mine(ent)}
+        vals.discard(None)
+        return vals
+
+    def stored_points(self) -> int:
+        return sum(ent.n for _, ent in self.store._entries(self.live)
+                   if self._mine(ent))
+
+    def time_range(self, measurement: Optional[str] = None):
+        """``(t_min, t_max)`` over this shard's sealed data (``None``
+        when empty) — what the query planner consults to report whether a
+        raw plan spans the cold tier."""
+        lo = hi = None
+        for _, ent in self.store._entries(self.live, measurement):
+            if not self._mine(ent):
+                continue
+            if lo is None or ent.t_min < lo:
+                lo = ent.t_min
+            if hi is None or ent.t_max > hi:
+                hi = ent.t_max
+        return None if lo is None else (lo, hi)
+
+    def stats(self) -> dict:
+        return self.store.stats()

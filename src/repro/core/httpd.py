@@ -271,6 +271,21 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
                 ingest = self.router.ingest
                 self._send(200, {"ingest": ingest.stats()
                                  if ingest is not None else None})
+            elif what == "cold":
+                # compressed cold tier (repro.core.coldstore): chunk /
+                # compression / corruption counters plus the sealed time
+                # span; null when no cold tier is configured
+                view = getattr(db, "cold_view", None)
+                view = view() if view is not None else None
+                if view is None and getattr(db, "shards", None):
+                    for sdb in db.shards:
+                        view = sdb.cold_view()
+                        if view is not None:
+                            break
+                rng = db.cold_time_range(q.get("m") or None) \
+                    if hasattr(db, "cold_time_range") else None
+                self._send(200, {"cold": None if view is None else dict(
+                    view.stats(), time_range=list(rng) if rng else None)})
             else:
                 self._send(400, {"error": f"unknown meta {what!r}"})
         elif url.path == "/alerts":

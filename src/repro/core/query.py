@@ -248,6 +248,14 @@ def make_plan(spec: QuerySpec, rollup_config=None) -> QueryPlan:
     rollup design notes) — that plan survives raw retention.  A window
     that aligns with no tier falls back to a raw rescan.  Scalar specs
     (``window_ns=None``) always scan raw, like ``Database.aggregate``.
+
+    Raw plans span the hot columns *and* the compressed cold tier
+    (``repro.core.coldstore``) when one is attached: sealed fragments
+    are merged under the hot columns inside ``Database.select``, so the
+    collection path below is tier-transparent by construction and a raw
+    plan answers byte-identically whether its range is resident, sealed,
+    or straddles the seal point.  :func:`plan_tiers` reports which tiers
+    a plan's range actually touches (``QueryResult.meta["tiers"]``).
     """
     outputs = []
     inputs: list = []
@@ -296,6 +304,32 @@ def _raw_bounds(spec: QuerySpec):
     t_max = (spec.t_max - spec.t_max % w) + w - 1 \
         if spec.t_max is not None else None
     return t_min, t_max
+
+
+def plan_tiers(plan: QueryPlan, backend) -> list:
+    """Which storage tiers this plan's collection reads — planner
+    metadata only (the read path itself is tier-transparent).  A
+    rollup-served plan reads the rollup tier alone; a raw plan reads the
+    hot columns plus, when the backend has sealed chunks overlapping the
+    plan's whole-window raw bounds, the cold tier."""
+    if plan.use_rollups:
+        return ["rollup"]
+    tiers = ["hot"]
+    fn = getattr(backend, "cold_time_range", None)
+    if fn is None:
+        return tiers
+    t_min, t_max = _raw_bounds(plan.spec)
+    for m in plan.measurements:
+        try:
+            rng = fn(m)
+        except (TypeError, ValueError):
+            rng = None
+        if rng is not None and \
+                (t_min is None or rng[1] >= t_min) and \
+                (t_max is None or rng[0] <= t_max):
+            tiers.append("cold")
+            break
+    return tiers
 
 
 def collect_backend_partials(backend, spec: QuerySpec) -> dict:
@@ -603,6 +637,9 @@ class QueryEngine:
         self.stats["cache_misses"] += 1
         collected = self.collect(spec)
         res = evaluate_plan(plan, collected)
+        # advisory: which storage tiers the collection actually spanned
+        # (never part of to_json(), so parity comparisons are unaffected)
+        res.meta["tiers"] = plan_tiers(plan, self.backend)
         if wm is not None:
             res.meta["watermark"] = list(wm)
             self._cache.put((plan.fingerprint, wm), res)

@@ -327,6 +327,22 @@ class FederatedQuery:
     def stored_points(self) -> int:
         return sum(b.stored_points() for b in self.backends)
 
+    def cold_time_range(self, measurement=None):
+        """Combined sealed-chunk time span over backends that have a
+        cold tier (``None`` when none do) — planner metadata only, so
+        remotes without the surface are simply skipped."""
+        lo = hi = None
+        for b in self.backends:
+            fn = getattr(b, "cold_time_range", None)
+            rng = fn(measurement) if fn is not None else None
+            if rng is None:
+                continue
+            if lo is None or rng[0] < lo:
+                lo = rng[0]
+            if hi is None or rng[1] > hi:
+                hi = rng[1]
+        return None if lo is None else (lo, hi)
+
 
 # --------------------------------------------------------------------------
 # Sharded database
@@ -413,10 +429,14 @@ class ShardedDatabase:
 
     def enforce_retention(self, max_age_ns: Optional[int] = None,
                           max_points_per_series: Optional[int] = None,
-                          rollup_max_age_ns: Optional[int] = None):
+                          rollup_max_age_ns: Optional[int] = None) -> dict:
+        out = {"raw_points_dropped": 0, "rollup_windows_dropped": 0}
         for shard in self.shards:
-            shard.enforce_retention(max_age_ns, max_points_per_series,
-                                    rollup_max_age_ns)
+            r = shard.enforce_retention(max_age_ns, max_points_per_series,
+                                        rollup_max_age_ns)
+            for k in out:
+                out[k] += r.get(k, 0)
+        return out
 
     # -- queries: scatter-gather over the shards -----------------------------
 
@@ -466,3 +486,6 @@ class ShardedDatabase:
 
     def stored_points(self) -> int:
         return self._fed.stored_points()
+
+    def cold_time_range(self, measurement=None):
+        return self._fed.cold_time_range(measurement)

@@ -90,6 +90,10 @@ class Database:
         # otherwise reproduce identical epochs across incarnations
         self._version_epoch = random.SystemRandom().getrandbits(62)
         self.rollup_config = rollup_config
+        # optional cold-tier read view (repro.core.coldstore.ColdView):
+        # sealed immutable fragments merged under the hot columns in
+        # select() — every raw consumer above inherits it from there
+        self._cold = None
 
     # -- write --------------------------------------------------------------
 
@@ -221,7 +225,10 @@ class Database:
 
     def measurements(self) -> list:
         with self._lock:
-            return sorted(self._meas)
+            names = set(self._meas)
+            if self._cold is not None:
+                names.update(self._cold.measurements())
+            return sorted(names)
 
     def field_keys(self, measurement: str) -> list:
         with self._lock:
@@ -230,12 +237,16 @@ class Database:
                 keys.update(store.values)
                 if store.rollups is not None:
                     keys.update(store.rollups.fields())
+            if self._cold is not None:
+                keys.update(self._cold.field_keys(measurement))
             return sorted(keys)
 
     def tag_values(self, measurement: str, tag: str) -> list:
         with self._lock:
             vals = {store.tags.get(tag)
                     for store in self._meas.get(measurement, {}).values()}
+            if self._cold is not None:
+                vals.update(self._cold.tag_values(measurement, tag))
             return sorted(v for v in vals if v is not None)
 
     def point_count(self) -> int:
@@ -244,11 +255,16 @@ class Database:
             return self._count
 
     def stored_points(self) -> int:
-        """Raw points currently resident (reduced by retention)."""
+        """Raw points currently queryable: hot resident plus sealed cold
+        (retention *moves* points to the cold tier when one is attached,
+        and only then reduces this count)."""
         with self._lock:
-            return sum(len(store.times)
-                       for stores in self._meas.values()
-                       for store in stores.values())
+            n = sum(len(store.times)
+                    for stores in self._meas.values()
+                    for store in stores.values())
+            if self._cold is not None:
+                n += self._cold.stored_points()
+            return n
 
     def data_version(self, measurement: Optional[str] = None) -> int:
         """Ingest watermark: changes whenever the measurement's data
@@ -275,14 +291,60 @@ class Database:
     def select(self, measurement: str, fields: Optional[list] = None,
                tags: Optional[dict] = None, t_min: Optional[int] = None,
                t_max: Optional[int] = None) -> list:
-        """Return matching Series (copies, safe to use lock-free)."""
+        """Return matching Series (copies, safe to use lock-free).
+
+        With a cold tier attached, sealed fragments are merged *under*
+        the hot columns right here — so every raw consumer above
+        (``aggregate``, ``aggregate_partials``, sharding, federation,
+        the query planner) inherits cold transparency from this single
+        merge point and answers byte-identically to an uncompacted
+        database.  The merge runs under the database lock, the same lock
+        ``commit_seal`` trims under, so no query can observe a point in
+        both tiers (double-count) or neither (loss) mid-seal.
+        """
         with self._lock:
+            cold_frags: dict = {}
+            if self._cold is not None:
+                for tk, _ctags, ctimes, cvals in self._cold.fragments(
+                        measurement, fields, tags, t_min, t_max):
+                    cold_frags.setdefault(tk, []).append((ctimes, cvals))
             out = []
-            for store in self._stores(measurement, tags):
+            for key, store in self._meas.get(measurement, {}).items():
+                if tags and any(store.tags.get(k) != str(v)
+                                for k, v in tags.items()):
+                    continue
+                pieces = cold_frags.pop(key, None)
                 s = store.slice(t_min, t_max, fields)
+                if pieces is None:
+                    if s is not None:
+                        out.append(Series(measurement, dict(store.tags),
+                                          s[0], s[1]))
+                    continue
+                # sealed fragments (chunk-seq order == seal order) under
+                # the hot suffix: reproduces the uncompacted store's row
+                # order exactly (seals move strict time-prefixes; equal
+                # timestamps keep arrival order)
                 if s is not None:
+                    pieces.append(s)
+                names = fields if fields else list(store.values)
+                times, vals = _merge_pieces(
+                    pieces, [k for k in names if k in store.values])
+                if times and vals:
                     out.append(Series(measurement, dict(store.tags),
-                                      s[0], s[1]))
+                                      times, vals))
+            # sealed series whose hot store no longer exists (degraded
+            # path: snapshot lost, chunks survived) — deterministic
+            # trailing order so repeated queries agree
+            for tk in sorted(cold_frags):
+                pieces = cold_frags[tk]
+                names: list = []
+                for _, cvals in pieces:
+                    for k in cvals:
+                        if k not in names:
+                            names.append(k)
+                times, vals = _merge_pieces(pieces, names)
+                if times and vals:
+                    out.append(Series(measurement, dict(tk), times, vals))
             return out
 
     def aggregate(self, measurement: str, field: str, *, agg: str = "mean",
@@ -521,34 +583,167 @@ class Database:
                        for store in self._stores(measurement, tags)
                        if store.rollups is not None)
 
+    # -- cold tier (repro.core.coldstore) ------------------------------------
+
+    def attach_cold(self, view):
+        """Attach a cold-tier read view
+        (``repro.core.coldstore.ColdView``).  Sealed fragments merge into
+        every raw read from here on; the watermark epoch is re-rolled
+        because the visible data just changed incarnation."""
+        with self._lock:
+            self._cold = view
+            self._version_epoch = random.SystemRandom().getrandbits(62)
+
+    def cold_view(self):
+        return self._cold
+
+    def has_expired_raw(self, cutoff: int) -> bool:
+        """True iff any raw point older than ``cutoff`` is resident —
+        what decides whether a retention sweep needs a seal at all."""
+        with self._lock:
+            return any(store.times and store.times[0] < cutoff
+                       for stores in self._meas.values()
+                       for store in stores.values())
+
+    def capture_expired(self, cutoff: int) -> list:
+        """Copy every raw column prefix older than ``cutoff`` in sealable
+        form: ``[(measurement, tags, times, cols), ...]`` (private
+        copies, all columns, ``None`` holes preserved).  Does NOT trim —
+        :meth:`commit_seal` removes the prefixes atomically with the
+        sealed chunk becoming query-visible.  The caller (the WAL layer)
+        holds the write barrier between the two, so the captured prefix
+        cannot drift."""
+        out = []
+        with self._lock:
+            for meas, stores in self._meas.items():
+                for store in stores.values():
+                    lo = bisect.bisect_left(store.times, cutoff)
+                    if lo <= 0:
+                        continue
+                    out.append((meas, dict(store.tags), store.times[:lo],
+                                {k: col[:lo]
+                                 for k, col in store.values.items()}))
+        return out
+
+    def commit_seal(self, cutoff: int, seq: Optional[int]) -> int:
+        """Reader-side commit point of the seal protocol: under the one
+        database lock, trim the raw prefixes older than ``cutoff`` AND
+        flip sealed chunk ``seq`` visible — no interleaved query can see
+        the moved points twice or not at all.  Rollup windows are kept
+        (the seal moves raw history, it is not retention).  Returns the
+        number of raw points moved."""
+        moved = 0
+        with self._lock:
+            for meas, stores in self._meas.items():
+                changed = False
+                for store in stores.values():
+                    n = store.trim(cutoff, None)
+                    if n:
+                        moved += n
+                        changed = True
+                if changed:
+                    self._versions[meas] += 1
+            if seq is not None and self._cold is not None:
+                self._cold.commit(seq)
+        return moved
+
+    def cold_time_range(self, measurement: Optional[str] = None):
+        """``(t_min, t_max)`` spanned by sealed chunks (``None`` when no
+        cold tier / nothing sealed) — what the query planner consults to
+        report which tiers a raw plan spans."""
+        if self._cold is None:
+            return None
+        return self._cold.time_range(measurement)
+
     # -- retention ------------------------------------------------------------
 
     def enforce_retention(self, max_age_ns: Optional[int] = None,
                           max_points_per_series: Optional[int] = None,
-                          rollup_max_age_ns: Optional[int] = None):
+                          rollup_max_age_ns: Optional[int] = None) -> dict:
         """Drop old raw data (paper §II: keep data volume under control).
 
         Rollup windows are *kept* — that is the point of the rollup layer —
         unless ``rollup_max_age_ns`` (or the config's ``max_age_ns``) sets
         an independent, typically much longer, horizon for them.
+
+        Returns ``{"raw_points_dropped": n, "rollup_windows_dropped": m}``
+        so callers can tell the sweep ran and what it discarded — on a
+        persisted server these counts also accumulate into
+        ``persistence_stats()`` (no more silent drops).  When a cold tier
+        is configured, the WAL layer seals expired prefixes *before*
+        calling this, so age-based drops only happen where they are meant
+        to: no cold store, or the independent rollup horizon.
         """
         now = now_ns()
         cutoff = now - max_age_ns if max_age_ns else None
+        raw_dropped = 0
+        rollup_dropped = 0
         with self._lock:
             for meas, stores in self._meas.items():
                 changed = False
                 for store in stores.values():
-                    if store.trim(cutoff, max_points_per_series):
+                    n = store.trim(cutoff, max_points_per_series)
+                    if n:
+                        raw_dropped += n
                         changed = True
-                    if store.rollups is not None and \
-                            store.rollups.trim(now, rollup_max_age_ns):
-                        changed = True
+                    if store.rollups is not None:
+                        w = store.rollups.trim(now, rollup_max_age_ns)
+                        if w:
+                            rollup_dropped += w
+                            changed = True
                 # invalidate cached query results over this measurement —
                 # but only when the sweep actually dropped something, so
                 # a periodic retention timer that finds nothing expired
                 # does not defeat the O(1)-re-render cache
                 if changed:
                     self._versions[meas] += 1
+        return {"raw_points_dropped": raw_dropped,
+                "rollup_windows_dropped": rollup_dropped}
+
+
+def _merge_pieces(pieces: list, names: list):
+    """Merge per-series column pieces — sealed cold fragments in seal
+    order, then the hot suffix — into one ``(times, values)`` pair that
+    is row-for-row identical to what the uncompacted store would have
+    sliced.  Each piece is ``(times, {field: column})`` with ascending
+    times; fields missing from a piece hole-fill with ``None`` (exactly
+    the back-fill the live store applies when a field first appears).
+
+    Fast path: seal-produced pieces are disjoint ascending (a seal moves
+    a strict time-prefix), so concatenation preserves order.  The
+    general fallback is a stable sort on ``(timestamp, piece, row)`` —
+    equal timestamps keep seal-then-arrival order, matching the live
+    store's stable insert."""
+    present = [k for k in names
+               if any(k in vals for _, vals in pieces)]
+    if not present or not pieces:
+        return [], {}
+    if len(pieces) == 1:
+        t, vals = pieces[0]
+        return list(t), {k: list(vals[k]) if k in vals
+                         else [None] * len(t) for k in present}
+    if all(pieces[i][0][-1] <= pieces[i + 1][0][0]
+           for i in range(len(pieces) - 1)):
+        times: list = []
+        for t, _ in pieces:
+            times.extend(t)
+        out = {}
+        for k in present:
+            col: list = []
+            for t, vals in pieces:
+                c = vals.get(k)
+                col.extend(c if c is not None else [None] * len(t))
+            out[k] = col
+        return times, out
+    rows = [(ts, pi, ri)
+            for pi, (t, _) in enumerate(pieces)
+            for ri, ts in enumerate(t)]
+    rows.sort()
+    cols = {k: [vals.get(k) for _, vals in pieces] for k in present}
+    return ([r[0] for r in rows],
+            {k: [c[pi][ri] if c[pi] is not None else None
+                 for _, pi, ri in rows]
+             for k, c in cols.items()})
 
 
 def _agg(vals: list, agg: str):
@@ -691,10 +886,10 @@ class _SeriesStore:
             return None
         return self.times[lo:hi], vals
 
-    def trim(self, cutoff, max_points) -> bool:
+    def trim(self, cutoff, max_points) -> int:
         """Drop raw points before ``cutoff`` / beyond ``max_points``;
-        True iff anything was removed (retention bumps the measurement's
-        data version only then)."""
+        returns the number removed (0 = nothing; retention bumps the
+        measurement's data version and counts its drops only then)."""
         lo = 0
         if cutoff is not None:
             lo = bisect.bisect_left(self.times, cutoff)
@@ -706,8 +901,8 @@ class _SeriesStore:
             # materializing columns for fields first seen after a trim
             self.values = defaultdict(
                 list, {k: v[lo:] for k, v in self.values.items()})
-            return True
-        return False
+            return lo
+        return 0
 
 
 class TSDBServer:
@@ -732,12 +927,16 @@ class TSDBServer:
     def __init__(self, persist_dir: Optional[str] = None,
                  rollup_config: Optional[RollupConfig] = RollupConfig(),
                  shards: int = 1, fsync: str = "batch",
-                 wal_segment_bytes: int = 4 * 1024 * 1024):
+                 wal_segment_bytes: int = 4 * 1024 * 1024,
+                 cold: bool = False):
         if shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
         if fsync not in ("none", "batch", "always"):
             raise ValueError(f"fsync must be none|batch|always, "
                              f"got {fsync!r}")
+        if cold and not persist_dir:
+            raise ValueError("cold tier requires persist_dir (chunks are "
+                             "sealed from the snapshot/compaction path)")
         self._dbs: dict = {}
         self._stores: dict = {}          # name -> wal.DurableStore
         self._engines: dict = {}         # name -> query.QueryEngine
@@ -747,6 +946,7 @@ class TSDBServer:
         self._shards = int(shards)
         self._fsync = fsync
         self._wal_segment_bytes = int(wal_segment_bytes)
+        self._cold = bool(cold)
         if persist_dir:
             os.makedirs(persist_dir, exist_ok=True)
 
@@ -782,7 +982,8 @@ class TSDBServer:
                     self.db(name),
                     os.path.join(self._persist_dir, name),
                     fsync=self._fsync,
-                    segment_max_bytes=self._wal_segment_bytes)
+                    segment_max_bytes=self._wal_segment_bytes,
+                    cold=self._cold)
             return self._stores[name]
 
     def query_engine(self, name: str = "global"):
@@ -871,20 +1072,25 @@ class TSDBServer:
     def enforce_retention(self, max_age_ns: Optional[int] = None,
                           max_points_per_series: Optional[int] = None,
                           rollup_max_age_ns: Optional[int] = None,
-                          db: Optional[str] = None):
+                          db: Optional[str] = None) -> dict:
         """Apply retention to one database (or all).  With persistence
         enabled this also drops whole expired WAL segments (compacting
         through a snapshot first, so rollup windows survive recovery
-        exactly like they survive in-memory retention)."""
+        exactly like they survive in-memory retention); with the cold
+        tier (``cold=True``) expired raw prefixes are *sealed* into
+        compressed chunks instead of dropped.  Returns per-database
+        retention reports (dropped/sealed counts) — never silent."""
         names = [db] if db is not None else self.databases()
+        out = {}
         for name in names:
             store = self.store(name)
             if store is None:
-                self.db(name).enforce_retention(
+                out[name] = self.db(name).enforce_retention(
                     max_age_ns, max_points_per_series, rollup_max_age_ns)
             else:
-                store.enforce_retention(
+                out[name] = store.enforce_retention(
                     max_age_ns, max_points_per_series, rollup_max_age_ns)
+        return out
 
     def close(self):
         """Seal and flush every WAL (no final snapshot: recovery replays)."""

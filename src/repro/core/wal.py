@@ -620,10 +620,22 @@ class DurableStore:
     parallel.  All durable writes must go through :meth:`write` (i.e.
     ``TSDBServer.write``); direct in-memory ``db.write`` calls bypass
     the log, exactly like the pre-WAL persistence path.
+
+    ``cold=True`` adds the compressed cold tier
+    (``repro.core.coldstore``): :meth:`enforce_retention` *seals*
+    expired raw prefixes into immutable chunks under ``<dir>/cold/``
+    instead of dropping them.  The seal rides the snapshot write
+    barrier, and the snapshot's ``cold_committed`` field is the crash
+    commit point — recovery keeps either the retained raw data or the
+    sealed chunk, never both and never neither.  NOTE: once chunks
+    exist, keep ``cold`` enabled for this directory; a snapshot written
+    without it does not carry ``cold_committed``, so a later
+    cold-enabled recovery treats the chunks as uncommitted orphans.
     """
 
     def __init__(self, db, directory: str, *, fsync: str = "batch",
-                 segment_max_bytes: int = DEFAULT_SEGMENT_BYTES):
+                 segment_max_bytes: int = DEFAULT_SEGMENT_BYTES,
+                 cold: bool = False):
         if fsync not in FSYNC_MODES:
             raise ValueError(f"fsync must be one of {FSYNC_MODES}, "
                              f"got {fsync!r}")
@@ -649,6 +661,19 @@ class DurableStore:
         self._appended_points = 0
         self._snapshots = 0
         self._recovered: Optional[dict] = None
+        self._cold = None
+        if cold:
+            from repro.core.coldstore import ColdStore
+            self._cold = ColdStore(os.path.join(directory, "cold"))
+            n = len(self._shard_dbs)
+            for i, sdb in enumerate(self._shard_dbs):
+                sdb.attach_cold(self._cold.make_view(i, n))
+        # cumulative retention accounting (satellite of the cold tier:
+        # retention must never discard silently — persistence_stats()
+        # reports what every sweep dropped or sealed)
+        self._retention = {"sweeps": 0, "seals": 0, "points_sealed": 0,
+                           "raw_points_dropped": 0,
+                           "rollup_windows_dropped": 0}
         if fsync == "batch":
             _FLUSHER.register(self)
 
@@ -768,6 +793,21 @@ class DurableStore:
                      "rehashed": False}
             heads: dict = {}
             snap = self._read_snapshot(stats)
+            if self._cold is not None:
+                # chunks above the snapshot's commit horizon are orphans
+                # from a crash mid-seal: their points are still in the
+                # snapshot/WAL, so keeping them would double-count.  An
+                # *unreadable* snapshot is the one case where the chunks
+                # may be the only surviving copy — keep everything.
+                if snap is not None:
+                    committed = int(snap.get("cold_committed", 0))
+                elif "snapshot_error" in stats:
+                    committed = None
+                else:
+                    committed = 0
+                stats["cold_orphans_dropped"] = \
+                    self._cold.reconcile(committed)
+                stats["cold_chunks"] = self._cold.chunk_count()
             if snap is not None:
                 heads = {int(k): v
                          for k, v in snap.get("wal_heads", {}).items()}
@@ -902,7 +942,8 @@ class DurableStore:
         with self._snap_lock:
             return self._snapshot_locked()
 
-    def _snapshot_locked(self) -> dict:
+    def _snapshot_locked(self, seal_cutoff: Optional[int] = None) -> dict:
+        sealed_points = 0
         with ExitStack() as barrier:
             # write barrier: all shard WAL locks at once — nothing can
             # append (and therefore nothing can apply) while the rotate
@@ -911,6 +952,23 @@ class DurableStore:
                 barrier.enter_context(wal.lock)
             heads = {i: wal.rotate()
                      for i, wal in enumerate(self._wals)}
+            if seal_cutoff is not None and self._cold is not None:
+                # seal: copy expired raw prefixes into one immutable
+                # chunk (durable but not yet live), then per shard —
+                # atomically under that shard's database lock — trim the
+                # prefix and flip the chunk query-visible.  The barrier
+                # guarantees the captured prefixes cannot drift before
+                # the trim; the snapshot rename below is the crash
+                # commit point (``cold_committed``).
+                entries = []
+                for sdb in self._shard_dbs:
+                    entries.extend(sdb.capture_expired(seal_cutoff))
+                seq = self._cold.append_chunk(entries) if entries else None
+                for sdb in self._shard_dbs:
+                    sealed_points += sdb.commit_seal(seal_cutoff, seq)
+                if seq is not None:
+                    with self._stats_lock:
+                        self._retention["seals"] += 1
             states = [db.snapshot_state() for db in self._shard_dbs]
         doc = {
             "format": 1,
@@ -921,6 +979,10 @@ class DurableStore:
             "shard_counts": [s["count"] for s in states],
             "series": [e for s in states for e in s["series"]],
         }
+        if self._cold is not None:
+            # every cold-enabled snapshot records the commit horizon —
+            # chunks above it at recovery are uncommitted orphans
+            doc["cold_committed"] = self._cold.max_seq()
         path = os.path.join(self.directory, SNAPSHOT_FILE)
         tmp = path + ".tmp"
         data = json.dumps(doc, separators=(",", ":")).encode()
@@ -943,22 +1005,51 @@ class DurableStore:
         return {"series": len(doc["series"]),
                 "points": sum(len(e["times"]) for e in doc["series"]),
                 "count": doc["count"], "bytes": len(data),
-                "segments_dropped": dropped}
+                "segments_dropped": dropped,
+                "points_sealed": sealed_points}
 
     # -- retention ------------------------------------------------------------
 
     def enforce_retention(self, max_age_ns: Optional[int] = None,
                           max_points_per_series: Optional[int] = None,
-                          rollup_max_age_ns: Optional[int] = None):
-        """In-memory retention, then drop whole expired WAL segments.
-        Expired segments are compacted away through a snapshot, so the
-        rollup windows their points fed keep answering after recovery."""
-        self.db.enforce_retention(max_age_ns, max_points_per_series,
-                                  rollup_max_age_ns)
-        if max_age_ns is not None:
+                          rollup_max_age_ns: Optional[int] = None) -> dict:
+        """Retention sweep; never silent — returns (and accumulates into
+        :meth:`stats`) what it dropped or sealed.
+
+        Without a cold tier: in-memory retention, then drop whole
+        expired WAL segments (compacted away through a snapshot, so the
+        rollup windows their points fed keep answering after recovery).
+
+        With a cold tier (``cold=True``): expired raw prefixes are
+        *sealed* into compressed chunks via the snapshot write barrier
+        (see :meth:`_snapshot_locked`) instead of age-dropped; only
+        ``max_points_per_series`` caps and the independent rollup
+        horizon still discard, and those discards are counted."""
+        report = {"raw_points_dropped": 0, "rollup_windows_dropped": 0,
+                  "points_sealed": 0}
+        if self._cold is not None and max_age_ns is not None:
             cutoff = now_ns() - max_age_ns
-            if any(w.expired_segments(cutoff) for w in self._wals):
-                self.snapshot()
+            if any(sdb.has_expired_raw(cutoff)
+                   for sdb in self._shard_dbs) or \
+                    any(w.expired_segments(cutoff) for w in self._wals):
+                with self._snap_lock:
+                    snap = self._snapshot_locked(seal_cutoff=cutoff)
+                report["points_sealed"] = snap.get("points_sealed", 0)
+            report.update(self.db.enforce_retention(
+                None, max_points_per_series, rollup_max_age_ns))
+        else:
+            report.update(self.db.enforce_retention(
+                max_age_ns, max_points_per_series, rollup_max_age_ns))
+            if max_age_ns is not None:
+                cutoff = now_ns() - max_age_ns
+                if any(w.expired_segments(cutoff) for w in self._wals):
+                    self.snapshot()
+        with self._stats_lock:
+            self._retention["sweeps"] += 1
+            for k in ("raw_points_dropped", "rollup_windows_dropped",
+                      "points_sealed"):
+                self._retention[k] += report[k]
+        return report
 
     # -- introspection / lifecycle --------------------------------------------
 
@@ -976,6 +1067,10 @@ class DurableStore:
         snap = os.path.join(self.directory, SNAPSHOT_FILE)
         out["snapshot_bytes"] = os.path.getsize(snap) \
             if os.path.exists(snap) else 0
+        with self._stats_lock:
+            out["retention"] = dict(self._retention)
+        if self._cold is not None:
+            out["cold"] = self._cold.stats()
         if self._recovered is not None:
             out["recovered"] = dict(self._recovered)
         return out

@@ -1,0 +1,554 @@
+"""Compressed columnar cold tier: codec exactness + tier parity + crash.
+
+The contract of ``repro.core.coldstore``: sealing expired raw history
+into compressed chunks must be *invisible* to every query — the same
+``QuerySpec`` (and every select/aggregate) answers byte-identically
+against a sealed hot+rollup+cold database and an uncompacted reference,
+locally, sharded (counts 1-8) and HTTP-federated, including ranges that
+straddle the seal point.  The chunk codec round-trips bit-exactly
+(NaN payloads, ±inf, -0.0, big ints, counter resets, duplicate
+timestamps), and corrupted chunks are detected and skipped — never
+wrong data.
+
+Tiers: fast unit tests (including the seeded codec properties);
+hypothesis variants run wherever hypothesis is installed; ``-m crash``
+SIGKILLs a writer mid-seal and checks recovery observes either the
+retained raw segment or the sealed chunk — never both (double-count),
+never neither (loss) — bounded by ``LMS_CRASH_ITERS``.
+"""
+
+import json
+import os
+import random
+import signal
+import struct
+import subprocess
+import sys
+import time
+import urllib.request
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import coldstore
+from repro.core.coldstore import (ColdStore, decode_floats, decode_ints,
+                                  decode_series_block, encode_floats,
+                                  encode_ints, encode_series_block)
+from repro.core.httpd import HttpQueryClient, LMSHttpServer
+from repro.core.line_protocol import Point, now_ns
+from repro.core.query import QueryEngine, QuerySpec, make_plan, plan_tiers
+from repro.core.router import MetricsRouter
+from repro.core.rollup import ROLLUP_AGGS
+from repro.core.shard import FederatedQuery
+from repro.core.tsdb import Database, TSDBServer, _tags_key
+
+S = 1_000_000_000
+
+
+def _bits(x: float) -> bytes:
+    return struct.pack("<d", x)
+
+
+def _col_bits(col):
+    return [_bits(v) if isinstance(v, float) else v for v in col]
+
+
+# --------------------------------------------------------------------------
+# codec: property round-trips (hypothesis where available + seeded always)
+# --------------------------------------------------------------------------
+
+
+_SPECIAL_FLOATS = [
+    float("nan"), float("inf"), float("-inf"), -0.0, 0.0, 1e308, -1e-308,
+    5e-324,                                      # smallest subnormal
+    struct.unpack("<d", struct.pack("<Q", 0x7FF8DEADBEEF0001))[0],  # NaN
+    struct.unpack("<d", struct.pack("<Q", 0xFFF0000000000001))[0],  # -NaN
+]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(min_value=-(2 ** 70), max_value=2 ** 70),
+                min_size=1, max_size=120))
+def test_property_int_codec_roundtrip(vals):
+    """Delta-of-delta varints are exact for ANY ints: int64 range, far
+    beyond it, negatives (counter resets), duplicates, any order."""
+    assert decode_ints(encode_ints(vals), len(vals)) == vals
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(allow_nan=True, allow_infinity=True),
+                min_size=1, max_size=120))
+def test_property_float_codec_roundtrip(vals):
+    """Gorilla XOR is bit-exact for ANY float64s, NaN included."""
+    got = decode_floats(encode_floats(vals), len(vals))
+    assert [_bits(v) for v in got] == [_bits(v) for v in vals]
+
+
+def test_seeded_codec_roundtrip():
+    """Seeded twin of the codec properties — runs on minimal images
+    where hypothesis is not installed."""
+    rng = random.Random(0xC01D)
+    int_pool = [0, 1, -1, 2 ** 63 - 1, -(2 ** 63), 2 ** 70, 10 ** 18]
+    for _ in range(200):
+        n = rng.randrange(1, 100)
+        ivals = [rng.choice(int_pool) + rng.randrange(-3, 4)
+                 for _ in range(n)]
+        assert decode_ints(encode_ints(ivals), n) == ivals
+        fvals = [rng.choice(_SPECIAL_FLOATS) if rng.random() < 0.3
+                 else rng.choice([rng.uniform(-1e6, 1e6),
+                                  float(rng.randrange(1000)),
+                                  rng.random() * 10 ** rng.randrange(-30, 30)])
+                 for _ in range(n)]
+        got = decode_floats(encode_floats(fvals), n)
+        assert [_bits(v) for v in got] == [_bits(v) for v in fvals]
+
+
+def test_counter_reset_and_duplicate_timestamps():
+    """The shapes real monitoring data throws at the timestamp codec:
+    regular cadence, duplicates, counter resets (big negative deltas),
+    and out-of-order stragglers — all exact."""
+    streams = [
+        [S * i for i in range(500)],                    # regular cadence
+        [5, 5, 5, 7, 7, 100, 100],                      # duplicates
+        [2 ** 62, 10, 2 ** 62, 11],                     # counter reset
+        [100, 50, 200, 1, 300],                         # out of order
+        [0],
+        [-(10 ** 18), 10 ** 18],
+    ]
+    for ts in streams:
+        assert decode_ints(encode_ints(ts), len(ts)) == ts
+
+
+def test_series_block_roundtrip_all_column_kinds():
+    """One block exercising every codec path: dense float ("g"), dense
+    int ("d"), float/int with None holes ("gh"/"dh"), and the JSON
+    fallback ("j") for strings/bools/mixed — values and hole positions
+    exact, float bit patterns preserved."""
+    times = [3, 5, 5, 7, 100]
+    cols = {
+        "f": [1.5, float("nan"), -0.0, float("inf"), 2.0],
+        "i": [1, -(2 ** 70), 0, 2 ** 70, 5],
+        "fh": [0.25, None, None, -0.5, None],
+        "ih": [None, 7, None, -9, 10 ** 18],
+        "s": ["a", None, "c", True, 1.5],
+    }
+    m, tags, t2, c2 = decode_series_block(
+        encode_series_block("m", {"host": "h1"}, times, cols))
+    assert (m, tags, t2) == ("m", {"host": "h1"}, times)
+    assert set(c2) == set(cols)
+    for k in cols:
+        assert _col_bits(c2[k]) == _col_bits(cols[k]), k
+
+
+def test_chunk_corruption_detected_never_wrong_data(tmp_path):
+    """Fuzz a sealed chunk with single-byte flips and truncations at
+    every region (magic, block data, index, trailer): every fragment
+    that IS returned is bit-exact, anything unreadable is skipped and
+    counted — wrong data is never returned."""
+    rng = random.Random(7)
+    d = str(tmp_path / "cold")
+    store = ColdStore(d)
+    entries = []
+    for h in range(3):
+        times = [i * S for i in range(50)]
+        entries.append(("m", {"host": f"h{h}"}, times,
+                        {"v": [float(h) + 0.25 * i for i in range(50)],
+                         "n": list(range(h, 50 + h))}))
+    store.append_chunk(entries)
+    path = store._chunks[1].path
+    good = bytearray(open(path, "rb").read())
+    view = store.make_view()
+    ref = {frag[0]: (frag[2], frag[3])
+           for frag in view.fragments("m", None, None, None, None)}
+    assert len(ref) == 3
+
+    def check(data):
+        with open(path, "wb") as f:
+            f.write(bytes(data))
+        s2 = ColdStore(d)
+        v2 = s2.make_view()
+        got = {frag[0]: (frag[2], frag[3])
+               for frag in v2.fragments("m", None, None, None, None)}
+        for key, (times, vals) in got.items():
+            assert times == ref[key][0]
+            for k in vals:
+                assert _col_bits(vals[k]) == _col_bits(ref[key][1][k])
+        if len(got) < len(ref):
+            assert s2.corrupt_blocks or s2.skipped_chunks
+
+    for _ in range(40):                      # random single-byte flips
+        i = rng.randrange(len(good))
+        data = bytearray(good)
+        data[i] ^= 1 << rng.randrange(8)
+        check(data)
+    for _ in range(15):                      # torn writes
+        check(good[:rng.randrange(len(good))])
+    with open(path, "wb") as f:              # restore for sanity
+        f.write(bytes(good))
+    assert len(ColdStore(d).make_view().fragments(
+        "m", None, None, None, None)) == 3
+
+
+# --------------------------------------------------------------------------
+# tier parity: sealed hot+rollup+cold == uncompacted reference
+# --------------------------------------------------------------------------
+
+
+def _dataset(now):
+    """~1h of 4-host metrics ending now.  Binary-fraction values keep
+    every partial sum exactly representable, so shard/federation merge
+    order cannot perturb float results and byte-identical comparisons
+    hold.  Fields cover float ("v"/"w" with holes), int ("n") and string
+    ("note") columns; a few duplicate timestamps exercise stable order."""
+    pts = []
+    t0 = now - 3600 * S
+    for i in range(240):
+        t = t0 + i * 15 * S
+        for h in range(4):
+            fields = {"v": float((h + 1) * 2 ** 20) + 0.25 * (i % 8),
+                      "n": i * (h + 1)}
+            if i % 3 == 0:
+                fields["w"] = float(i % 16) / 4.0
+            if i % 7 == 0:
+                fields["note"] = f"evt{i}"
+            pts.append(Point("hpm", {"hostname": f"h{h}",
+                                     "jobid": f"j{h % 2}"}, fields, t))
+        if i % 11 == 0:     # duplicate timestamp, later arrival
+            pts.append(Point("hpm", {"hostname": "h0", "jobid": "j0"},
+                             {"v": 0.5}, t))
+    return pts
+
+
+def _series_map(series_list):
+    out = {}
+    for s in series_list:
+        key = _tags_key(s.tags)
+        assert key not in out
+        out[key] = (s.times, s.values)
+    return out
+
+
+def _assert_db_parity(got, ref, seal_t, meas="hpm"):
+    """Every query surface answers identically, including ranges that
+    straddle the seal point ``seal_t``."""
+    assert got.measurements() == ref.measurements()
+    assert got.field_keys(meas) == ref.field_keys(meas)
+    assert got.tag_values(meas, "hostname") == ref.tag_values(meas,
+                                                              "hostname")
+    assert got.stored_points() == ref.stored_points()
+    ranges = [(None, None),
+              (seal_t - 600 * S, seal_t + 600 * S),     # straddles seal
+              (seal_t, seal_t),                          # exact boundary
+              (None, seal_t - 1),                        # all-cold
+              (seal_t + 1, None)]                        # all-hot
+    for t_min, t_max in ranges:
+        assert _series_map(got.select(meas, None, None, t_min, t_max)) \
+            == _series_map(ref.select(meas, None, None, t_min, t_max))
+    assert _series_map(got.select(meas, ["v"], {"jobid": "j1"})) \
+        == _series_map(ref.select(meas, ["v"], {"jobid": "j1"}))
+    for agg in ROLLUP_AGGS:
+        assert got.aggregate(meas, "v", agg=agg,
+                             group_by_tag="hostname") == \
+            ref.aggregate(meas, "v", agg=agg, group_by_tag="hostname")
+        for use in (False, "auto"):
+            assert got.aggregate(meas, "v", agg=agg, window_ns=60 * S,
+                                 use_rollups=use) == \
+                ref.aggregate(meas, "v", agg=agg, window_ns=60 * S,
+                              use_rollups=use), (agg, use)
+        assert got.aggregate(meas, "n", agg=agg, window_ns=90 * S,
+                             t_min=seal_t - 450 * S, t_max=seal_t + 450 * S,
+                             use_rollups=False) == \
+            ref.aggregate(meas, "n", agg=agg, window_ns=90 * S,
+                          t_min=seal_t - 450 * S, t_max=seal_t + 450 * S,
+                          use_rollups=False)
+
+
+def _specs(now):
+    seal_t = now - 1800 * S
+    return [
+        QuerySpec("hpm", ("v", "w"), window_ns=10 * S,
+                  group_by="hostname"),                        # rollup plan
+        QuerySpec("hpm", ("v",), window_ns=int(1.5 * S),
+                  group_by="jobid"),                           # raw plan
+        QuerySpec("hpm", ("r=v / 4",), window_ns=int(7.5 * S),
+                  group_by="hostname", t_min=seal_t - 900 * S,
+                  t_max=seal_t + 900 * S),                     # straddling
+        QuerySpec("hpm", ("v",), group_by="jobid"),            # scalar
+        QuerySpec("hpm", ("v",), window_ns=int(1.5 * S),
+                  t_max=seal_t - 60 * S),                      # all-cold
+    ]
+
+
+def test_sealed_equals_uncompacted_local(tmp_path):
+    """The tentpole contract, locally: seal half the data into the cold
+    tier; every select/aggregate/QuerySpec answers byte-identically to
+    an uncompacted reference, before and after recovery."""
+    now = now_ns()
+    pts = _dataset(now)
+    seal_t = now - 1800 * S
+    ref = Database("ref")
+    ref.write(pts)
+    srv = TSDBServer(persist_dir=str(tmp_path / "db"), cold=True)
+    srv.write(pts)
+    report = srv.enforce_retention(max_age_ns=1800 * S)
+    assert report["global"]["points_sealed"] > 0
+    assert report["global"]["raw_points_dropped"] == 0      # moved, not lost
+    st_ = srv.store().stats()
+    assert st_["cold"]["chunks"] == 1
+    assert st_["cold"]["corrupt_blocks"] == 0
+    _assert_db_parity(srv.db(), ref, seal_t)
+    for spec in _specs(now):
+        a = QueryEngine(ref).query(spec)
+        b = QueryEngine(srv.db()).query(spec)
+        assert a.to_json() == b.to_json(), spec.metrics
+    # a second sweep with nothing newly expired seals nothing more
+    again = srv.enforce_retention(max_age_ns=1800 * S)
+    assert again["global"]["points_sealed"] == 0
+    _assert_db_parity(srv.db(), ref, seal_t)
+    # recovery: chunks + snapshot + WAL reproduce the same answers
+    srv.close()
+    rec = TSDBServer(persist_dir=str(tmp_path / "db"), cold=True)
+    stats = rec.load_persisted()
+    assert stats["global"]["cold_chunks"] == 1
+    assert stats["global"].get("cold_orphans_dropped", 0) == 0
+    _assert_db_parity(rec.db(), ref, seal_t)
+    for spec in _specs(now):
+        assert QueryEngine(ref).query(spec).to_json() == \
+            QueryEngine(rec.db()).query(spec).to_json()
+    rec.close()
+
+
+@pytest.mark.parametrize("shards", [1, 2, 3, 5, 8])
+def test_sealed_equals_uncompacted_sharded(tmp_path, shards):
+    """Sharded: per-shard cold views (stable crc32 series hash) answer
+    like one uncompacted database for every shard count."""
+    now = now_ns()
+    pts = _dataset(now)
+    seal_t = now - 1800 * S
+    ref = Database("ref")
+    ref.write(pts)
+    srv = TSDBServer(persist_dir=str(tmp_path / "db"), cold=True,
+                     shards=shards)
+    srv.write(pts)
+    srv.enforce_retention(max_age_ns=1800 * S)
+    _assert_db_parity(srv.db(), ref, seal_t)
+    for spec in _specs(now):
+        assert QueryEngine(ref).query(spec).to_json() == \
+            QueryEngine(srv.db()).query(spec).to_json(), spec.metrics
+    srv.close()
+    # recover into a DIFFERENT shard count: views re-filter by the
+    # current hash, every sealed series served by exactly one shard
+    other = 3 if shards != 3 else 4
+    rec = TSDBServer(persist_dir=str(tmp_path / "db"), cold=True,
+                     shards=other)
+    rec.load_persisted()
+    _assert_db_parity(rec.db(), ref, seal_t)
+    rec.close()
+
+
+def test_sealed_equals_uncompacted_http_federated(tmp_path):
+    """Two sealed LMS instances behind /query/v2 pushdown answer like
+    one uncompacted local database holding the union."""
+    now = now_ns()
+    pts = _dataset(now)
+    ref = Database("ref")
+    ref.write(pts)
+    routers = []
+    for i in range(2):
+        srv = TSDBServer(persist_dir=str(tmp_path / f"i{i}"), cold=True,
+                         shards=2)
+        routers.append(MetricsRouter(srv))
+    for p in pts:       # each host's series lives on exactly one instance
+        routers[int(p.tags["hostname"][1:]) % 2].backend.write([p])
+    for r in routers:
+        r.backend.enforce_retention(max_age_ns=1800 * S)
+        assert r.backend.store().stats()["cold"]["chunks"] >= 1
+    with LMSHttpServer(routers[0]) as sa, LMSHttpServer(routers[1]) as sb:
+        fed = FederatedQuery([HttpQueryClient(sa.url),
+                              HttpQueryClient(sb.url)])
+        eng = QueryEngine(fed)
+        for spec in _specs(now):
+            assert QueryEngine(ref).query(spec).to_json() == \
+                eng.query(spec).to_json(), spec.metrics
+        # /meta?what=cold surfaces the sealed tier remotely
+        meta = json.loads(urllib.request.urlopen(
+            f"{sa.url}/meta?what=cold").read())["cold"]
+        assert meta["chunks"] >= 1 and meta["points"] > 0
+        assert meta["compression_ratio"] > 1.0
+        assert meta["time_range"][0] <= meta["time_range"][1]
+    for r in routers:
+        r.backend.close()
+
+
+def test_seal_bumps_watermark_and_planner_reports_cold(tmp_path):
+    """Sealing must invalidate the watermark-keyed result cache (the
+    data moved tiers) and the planner must report the tiers a raw plan
+    spans — ["hot", "cold"] once the range straddles the seal."""
+    now = now_ns()
+    srv = TSDBServer(persist_dir=str(tmp_path / "db"), cold=True)
+    srv.write(_dataset(now))
+    db = srv.db()
+    spec = _specs(now)[1]                      # raw plan, full range
+    eng = QueryEngine(db)
+    before = eng.query(spec)
+    assert eng.query(spec) is before           # cached
+    assert before.meta["tiers"] == ["hot"]
+    v0 = db.data_version("hpm")
+    srv.enforce_retention(max_age_ns=1800 * S)
+    assert db.data_version("hpm") != v0        # seal moved data
+    after = eng.query(spec)
+    assert after is not before                 # cache invalidated...
+    assert after.to_json() == before.to_json()  # ...same bytes
+    assert after.meta["tiers"] == ["hot", "cold"]
+    # rollup-served plans never touch the cold tier
+    roll = eng.query(_specs(now)[0])
+    assert roll.meta["tiers"] == ["rollup"]
+    # plan_tiers is pure planner metadata — consistent with the range
+    cold_only = make_plan(_specs(now)[4], db.rollup_config)
+    assert plan_tiers(cold_only, db) == ["hot", "cold"]
+    assert db.cold_time_range("hpm") is not None
+    srv.close()
+
+
+def test_orphan_chunk_dropped_on_recovery(tmp_path):
+    """A chunk present on disk but never committed by a snapshot (crash
+    between chunk write and snapshot rename) is dropped at recovery —
+    its points are still in the snapshot/WAL, so keeping it would
+    double-count."""
+    now = now_ns()
+    pts = _dataset(now)
+    ref = Database("ref")
+    ref.write(pts)
+    d = str(tmp_path / "db")
+    srv = TSDBServer(persist_dir=d, cold=True)
+    srv.write(pts)
+    srv.enforce_retention(max_age_ns=1800 * S)
+    srv.close()
+    # simulate the crash window: an extra chunk no snapshot committed
+    orphan = ColdStore(os.path.join(d, "global", "cold"))
+    orphan.append_chunk([("hpm", {"hostname": "h0", "jobid": "j0"},
+                          [now - 10 * S], {"v": [123.0]})])
+    rec = TSDBServer(persist_dir=d, cold=True)
+    stats = rec.load_persisted()
+    assert stats["global"]["cold_orphans_dropped"] == 1
+    _assert_db_parity(rec.db(), ref, now - 1800 * S)
+    rec.close()
+
+
+# --------------------------------------------------------------------------
+# retention reporting (the silent-data-loss fix) — with and without cold
+# --------------------------------------------------------------------------
+
+
+def test_retention_reports_drops_without_cold(tmp_path):
+    """``enforce_retention(max_age_ns)`` with NO cold tier still drops —
+    but now reports what it dropped, both in its return value and
+    cumulatively in ``persistence_stats()`` (callers could previously
+    not tell retention ran at all)."""
+    now = now_ns()
+    srv = TSDBServer(persist_dir=str(tmp_path / "db"))     # cold OFF
+    srv.write(_dataset(now))
+    before = srv.db().stored_points()
+    report = srv.enforce_retention(max_age_ns=1800 * S)
+    dropped = report["global"]["raw_points_dropped"]
+    assert dropped > 0
+    assert report["global"]["points_sealed"] == 0
+    assert srv.db().stored_points() == before - dropped
+    ps = srv.persistence_stats()["databases"]["global"]["retention"]
+    assert ps["raw_points_dropped"] == dropped
+    assert ps["sweeps"] == 1 and ps["seals"] == 0
+    assert "cold" not in srv.persistence_stats()["databases"]["global"]
+    srv.close()
+    # the in-memory Database reports the same shape
+    db = Database("mem")
+    db.write(_dataset(now))
+    r = db.enforce_retention(max_age_ns=1800 * S)
+    assert r["raw_points_dropped"] == dropped
+    # and a sweep that finds nothing is explicit about it
+    assert db.enforce_retention(max_age_ns=3 * 3600 * S) == \
+        {"raw_points_dropped": 0, "rollup_windows_dropped": 0}
+
+
+def test_cold_requires_persist_dir():
+    with pytest.raises(ValueError):
+        TSDBServer(cold=True)
+
+
+# --------------------------------------------------------------------------
+# crash tier: SIGKILL mid-seal (ci_check.sh step 4)
+# --------------------------------------------------------------------------
+
+_SEAL_CRASH_WRITER = r"""
+import sys, time
+sys.path.insert(0, {src!r})
+from repro.core.line_protocol import Point
+from repro.core.tsdb import TSDBServer
+
+srv = TSDBServer(persist_dir={d!r}, shards={shards}, fsync="batch",
+                 cold=True)
+srv.load_persisted()
+b = 0
+print("READY", flush=True)
+while True:
+    # whole batches of 50 -> recovered counts are multiples of 50; the
+    # ancient timestamps make every resident point sealable, so the
+    # frequent retention sweeps keep a seal in flight for the SIGKILL
+    srv.write([Point("m", {{"hostname": f"h{{b % 4}}"}},
+                     {{"v": float(b * 50 + i)}},
+                     (b * 50 + i) * 10**6) for i in range(50)])
+    b += 1
+    if b % 5 == 0:
+        srv.enforce_retention(max_age_ns=10**9)
+"""
+
+
+@pytest.mark.crash
+@pytest.mark.parametrize("shards", [1, 4])
+def test_sigkill_mid_seal_recovers(tmp_path, shards):
+    """Kill -9 a writer whose retention sweeps continuously seal, then
+    recover: every point is observed exactly once — in the retained raw
+    tier or the sealed chunk, never both (stored == written, no
+    double-count) and never neither (no loss); recovery never raises
+    and is deterministic.  Bounded by LMS_CRASH_ITERS."""
+    iters = int(os.environ.get("LMS_CRASH_ITERS", "3"))
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    d = str(tmp_path / "wal")
+    rng = random.Random(100 + shards)
+    for it in range(iters):
+        proc = subprocess.Popen(
+            [sys.executable, "-c",
+             _SEAL_CRASH_WRITER.format(src=os.path.abspath(src), d=d,
+                                       shards=shards)],
+            stdout=subprocess.PIPE)
+        assert proc.stdout.readline().strip() == b"READY"
+        time.sleep(rng.uniform(0.05, 0.4))
+        proc.send_signal(signal.SIGKILL)
+        proc.wait()
+        rec = TSDBServer(persist_dir=d, shards=shards, cold=True)
+        rec.load_persisted()
+        db = rec.db("global")
+        n = db.point_count()
+        assert n % 50 == 0                   # whole records only
+        # THE seal-crash invariant: raw-or-sealed, exactly once
+        assert db.stored_points() == n
+        if n:
+            out = db.aggregate("m", "v", agg="count",
+                               group_by_tag="hostname")
+            assert sum(out.values()) == float(n)
+            assert all(c % 50 == 0 for c in out.values())
+        sums = db.aggregate("m", "v", agg="sum", group_by_tag="hostname")
+        rec.close()
+        # deterministic: a second recovery agrees
+        rec2 = TSDBServer(persist_dir=d, shards=shards, cold=True)
+        rec2.load_persisted()
+        assert rec2.db("global").point_count() == n
+        assert rec2.db("global").stored_points() == n
+        assert rec2.db("global").aggregate(
+            "m", "v", agg="sum", group_by_tag="hostname") == sums
+        if it % 2 == 0:      # exercise snapshot+replay recovery too
+            rec2.snapshot()
+        rec2.close()
