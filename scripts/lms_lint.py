@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""CLI front-end for the LMS invariant analyzer (``repro.analyzer``).
+
+Runs every static pass (lock-discipline, lock-order, durability,
+thread-lifecycle, http-surface) over the given files/directories and
+reports the findings.
+
+Usage::
+
+    python scripts/lms_lint.py src/repro/core            # human output
+    python scripts/lms_lint.py --json src/repro/core     # machine output
+    python scripts/lms_lint.py --show-suppressed src/repro/core
+    python scripts/lms_lint.py --lock-graph src/repro/core
+
+Exit status: 0 when every finding is suppressed (with a reason), 1 when
+any unsuppressed finding remains, 2 on usage/parse errors.  The JSON
+output is stable (``version`` field, findings sorted by path/line/rule)
+so CI can diff it; see ``Report.to_dict``.
+
+Suppression syntax, checked by the analyzer itself::
+
+    self._attr = x  # lms: unlocked(single-threaded until start())
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.analyzer import analyze_paths, expand_paths  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="lms_lint",
+        description="repo-specific invariant analyzer "
+                    "(locks, durability, threads, HTTP surface)")
+    ap.add_argument("paths", nargs="+",
+                    help="python files or directories to analyze")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full report as JSON (stable schema)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print suppressed findings (human mode)")
+    ap.add_argument("--lock-graph", action="store_true",
+                    help="print the inferred lock-order graph and exit")
+    args = ap.parse_args(argv)
+
+    try:
+        files = expand_paths(args.paths)
+    except OSError as e:
+        print(f"lms_lint: {e}", file=sys.stderr)
+        return 2
+    if not files:
+        print("lms_lint: no .py files under the given paths",
+              file=sys.stderr)
+        return 2
+    try:
+        report = analyze_paths(args.paths)
+    except SyntaxError as e:
+        print(f"lms_lint: parse error: {e}", file=sys.stderr)
+        return 2
+
+    unsuppressed = report.unsuppressed()
+
+    if args.json:
+        print(json.dumps(report.to_dict(), indent=2, sort_keys=True))
+        return 1 if unsuppressed else 0
+
+    if args.lock_graph:
+        print(f"lock nodes ({len(report.lock_nodes)}):")
+        for node, kind in sorted(report.lock_nodes.items()):
+            print(f"  {node}  [{kind}]")
+        print(f"lock edges ({len(report.lock_edges)}):")
+        for (src, dst), sites in sorted(report.lock_edges.items()):
+            p, ln, note = sites[0]
+            print(f"  {src} -> {dst}  "
+                  f"({os.path.basename(p)}:{ln}, {note})")
+        return 1 if unsuppressed else 0
+
+    shown = report.findings if args.show_suppressed else unsuppressed
+    for f in sorted(shown, key=lambda f: (f.path, f.line, f.rule)):
+        print(f)
+    n_sup = len(report.findings) - len(unsuppressed)
+    print(f"lms_lint: {len(files)} files, "
+          f"{len(unsuppressed)} unsuppressed finding(s), "
+          f"{n_sup} suppressed", file=sys.stderr)
+    return 1 if unsuppressed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,67 @@
+"""Repo-specific invariant analyzer for the LMS codebase.
+
+Five AST-based passes over ``src/repro/core`` (or any path set):
+
+================  ==========================================  ==============
+pass              invariant                                   suppression
+================  ==========================================  ==============
+lock-discipline   guarded fields mutate only under their      ``unlocked``
+                  lock
+lock-order        the cross-module lock graph is acyclic      ``lock-order``
+durability        fsync-before-rename + dir-fsync-after in    ``durability``
+                  wal/coldstore/tsdb; WAL writes use group
+                  commit
+thread-lifecycle  threads are daemon or joined in teardown    ``thread``
+http-surface      bounded body reads; unknown dbs 404         ``http``
+================  ==========================================  ==============
+
+Suppression comments — ``# lms: <rule>(<reason>)`` on the finding's line
+or the line above — must carry a non-empty reason; a reasonless
+suppression is itself an (unsuppressible) finding.
+
+Entry point: :func:`analyze_paths`.  CLI: ``scripts/lms_lint.py``.
+The dynamic cross-check lives in ``repro.core.locktrace`` and the
+``-m race`` pytest tier.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Iterable
+
+from . import (durability, http_surface, lock_discipline, lock_order,
+               thread_lifecycle)
+from .base import (Finding, Report, apply_suppressions, harvest)
+
+PASSES = (lock_discipline, lock_order, durability, thread_lifecycle,
+          http_surface)
+
+__all__ = ["Finding", "Report", "analyze_paths", "expand_paths"]
+
+
+def expand_paths(paths: Iterable[str]) -> list:
+    """Files + directories -> sorted list of ``.py`` files."""
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, files in os.walk(p):
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        out.append(os.path.join(root, f))
+        elif p.endswith(".py"):
+            out.append(p)
+    return sorted(set(out))
+
+
+def analyze_paths(paths: Iterable[str]) -> Report:
+    """Run every pass over the given files/directories."""
+    files = expand_paths(paths)
+    modules = harvest(files)
+    report = Report()
+    for p in PASSES:
+        p.run(modules, report)
+    report.findings = apply_suppressions(
+        report.findings, {mi.path: mi.suppressions
+                          for mi in modules.values()})
+    report.findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return report

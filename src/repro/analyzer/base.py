@@ -1,0 +1,870 @@
+"""Shared AST harvest + finding model for the LMS invariant analyzer.
+
+The passes in this package are *repo-specific*: they encode the
+invariants this codebase's review history kept re-checking by hand
+(unguarded shared state, lock-acquisition order, fsync-before-rename
+durability, thread lifecycles, HTTP surface hygiene).  This module holds
+everything the passes share:
+
+* :class:`Finding` / :class:`Report` — the result model the CLI and the
+  tests consume;
+* suppression parsing — ``# lms: <rule>(<reason>)`` trailing (or
+  immediately preceding) comments; a suppression with an empty reason is
+  itself a finding, so every silenced site documents *why*;
+* the harvest — one AST walk per file producing :class:`ModuleInfo` /
+  :class:`ClassInfo` / :class:`FuncInfo` records: lock attributes and
+  the regions they guard, attribute reads/mutations with the locks
+  syntactically held, call sites with best-effort receiver typing,
+  thread starts/joins, rename/fsync/open/write sites.
+
+The harvest is deliberately lightweight type inference, not a type
+checker: receiver types come from constructor assignments
+(``self.x = ClassName(...)``), typed collections (``self._wals =
+[SegmentedWal(...) ...]``), parameter annotations, module-level
+singletons, and — as a last resort — unique-method-name matching across
+the analyzed set.  Every pass treats "unresolved" as "skip", so
+imprecision costs coverage, never false certainty; the suppression
+syntax is the escape hatch for the residue.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+# attribute-call names that mutate their receiver in place
+MUTATOR_METHODS = frozenset({
+    "append", "extend", "insert", "add", "discard", "remove", "pop",
+    "popitem", "clear", "update", "setdefault", "appendleft", "popleft",
+    "move_to_end", "sort", "reverse",
+})
+
+# method names too generic for name-based receiver resolution: resolving
+# ``f.write(...)`` to every class defining ``write`` would wire file
+# objects into the lock graph and invent cycles
+GENERIC_METHOD_NAMES = frozenset({
+    "write", "read", "close", "flush", "open", "get", "put", "send",
+    "recv", "start", "stop", "join", "acquire", "release", "wait",
+    "notify", "notify_all", "set", "clear", "run", "submit", "items",
+    "keys", "values", "copy", "encode", "decode", "stats", "snapshot",
+})
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*lms:\s*(?P<rule>[a-z][a-z-]*)\s*\(\s*(?P<reason>[^)]*)\)")
+
+
+@dataclass
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str                    # unlocked | lock-order | durability | ...
+    path: str                    # file the finding is anchored in
+    line: int
+    message: str
+    suppressed: bool = False
+    reason: Optional[str] = None     # the suppression's reason, if any
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message, "suppressed": self.suppressed,
+                "reason": self.reason}
+
+    def __str__(self) -> str:
+        tag = f" [suppressed: {self.reason}]" if self.suppressed else ""
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}{tag}"
+
+
+@dataclass
+class Suppression:
+    rule: str
+    reason: str
+    line: int           # the line the comment sits on
+    path: str
+
+
+class Report:
+    """Everything one analyzer run produced: findings (suppressed and
+    not), the cross-module lock graph, and the lock creation-site map
+    the dynamic tracer (``repro.core.locktrace``) joins against."""
+
+    def __init__(self):
+        self.findings: list = []
+        # lock-order artifacts, filled by the lock_order pass:
+        # edges: {(src_node, dst_node): [(path, line, note), ...]}
+        self.lock_edges: dict = {}
+        # node -> kind ("lock" | "rlock" | "condition")
+        self.lock_nodes: dict = {}
+        # (realpath, line) -> "Class.attr" — creation sites
+        self.lock_sites: dict = {}
+
+    def add(self, finding: Finding):
+        self.findings.append(finding)
+
+    def unsuppressed(self) -> list:
+        return [f for f in self.findings if not f.suppressed]
+
+    def by_rule(self, rule: str) -> list:
+        return [f for f in self.findings if f.rule == rule]
+
+    def to_dict(self) -> dict:
+        return {
+            "version": 1,
+            "findings": [f.to_dict() for f in
+                         sorted(self.findings,
+                                key=lambda f: (f.path, f.line, f.rule))],
+            "counts": {
+                "total": len(self.findings),
+                "unsuppressed": len(self.unsuppressed()),
+                "suppressed": len(self.findings)
+                - len(self.unsuppressed()),
+            },
+            "lock_graph": {
+                "nodes": dict(sorted(self.lock_nodes.items())),
+                "edges": [
+                    {"src": src, "dst": dst,
+                     "sites": [{"path": p, "line": ln, "note": note}
+                               for p, ln, note in sites]}
+                    for (src, dst), sites in sorted(self.lock_edges.items())
+                ],
+            },
+        }
+
+
+def scan_suppressions(path: str, source: str) -> dict:
+    """``{line: Suppression}`` for every ``# lms: rule(reason)`` comment.
+
+    A suppression silences findings of its rule on the *same* line or on
+    the line directly below (comment-above style).
+    """
+    out = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(text)
+        if m:
+            out[i] = Suppression(m.group("rule"),
+                                 m.group("reason").strip(), i, path)
+    return out
+
+
+def apply_suppressions(findings: Iterable[Finding],
+                       suppressions_by_path: dict) -> list:
+    """Mark findings covered by a same-line / line-above suppression of
+    the matching rule; emit a ``suppression`` finding for every
+    reason-less suppression (they are never themselves suppressible)."""
+    out = list(findings)
+    for f in out:
+        sups = suppressions_by_path.get(f.path, {})
+        for line in (f.line, f.line - 1):
+            s = sups.get(line)
+            if s is not None and s.rule == f.rule:
+                if s.reason:
+                    f.suppressed = True
+                    f.reason = s.reason
+                break
+    for path, sups in suppressions_by_path.items():
+        for s in sups.values():
+            if not s.reason:
+                out.append(Finding(
+                    "suppression", path, s.line,
+                    f"suppression 'lms: {s.rule}(...)' has no reason — "
+                    "every silenced finding must say why"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Harvested source model
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class TypeRef:
+    """Best-effort static type of an expression: a class name from the
+    analyzed set, optionally a homogeneous collection of it."""
+
+    cls: str
+    is_collection: bool = False
+
+
+@dataclass
+class LockAttr:
+    """A lock-like object assigned to ``self.<attr>``."""
+
+    attr: str
+    kind: str            # "lock" | "rlock" | "condition"
+    line: int            # assignment line (the creation site)
+
+
+@dataclass
+class Access:
+    """One read or mutation of ``self.<attr>``."""
+
+    attr: str
+    line: int
+    kind: str            # "read" | "mutate"
+    op: str              # assign|augassign|del|setitem|call:<name>|load
+    held: frozenset      # lock tokens syntactically held at the access
+
+
+@dataclass
+class CallSite:
+    """One call expression, with enough receiver context to resolve.
+
+    ``recv_cls`` is the best-effort static class of the receiver (from
+    the harvest's local/attr/global type environments); ``("attrload",)``
+    records a plain attribute *load* on a typed receiver so the
+    lock-order pass can treat lock-acquiring ``@property`` accesses
+    (e.g. ``wal.next_seq``) as calls.
+    """
+
+    name: str                    # method / function / attribute name
+    recv: tuple                  # ("self",) | ("selfattr", attr)
+                                 # | ("local", var) | ("bare",)
+                                 # | ("dotted", "os") | ("attrload",)
+                                 # | ("other",)
+    line: int
+    held: frozenset              # lock tokens held at the call
+    recv_cls: Optional[str] = None
+
+
+@dataclass
+class WithAcquire:
+    """A lock acquisition (with-statement or ExitStack.enter_context)."""
+
+    token: tuple                 # ("self", attr) | ("cls", Class, attr)
+    line: int
+    held: frozenset              # locks held when this one is taken
+    via: str                     # "with" | "enter_context"
+
+
+@dataclass
+class ThreadStart:
+    """One ``threading.Thread(...)`` construction."""
+
+    line: int
+    daemon: Optional[bool]       # True/False constant, None if absent
+    target_attr: Optional[str]   # stored to self.<attr>
+    target_var: Optional[str]    # stored to a local
+
+
+@dataclass
+class FuncInfo:
+    name: str
+    cls: Optional[str]           # owning class, None for module funcs
+    lineno: int
+    node: object
+    accesses: list = field(default_factory=list)
+    calls: list = field(default_factory=list)
+    acquires: list = field(default_factory=list)
+    thread_starts: list = field(default_factory=list)
+    joins: list = field(default_factory=list)   # (recv, line) of .join()
+    renames: list = field(default_factory=list)  # os.replace/rename lines
+    fsyncs: list = field(default_factory=list)   # (line, call name)
+    writes_file: bool = False    # opens a file for writing / calls .write
+    is_property: bool = False
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    module: str
+    path: str
+    lineno: int
+    bases: list
+    lock_attrs: dict = field(default_factory=dict)   # attr -> LockAttr
+    attr_types: dict = field(default_factory=dict)   # attr -> TypeRef
+    methods: dict = field(default_factory=dict)      # name -> FuncInfo
+
+
+@dataclass
+class ModuleInfo:
+    path: str
+    name: str                    # module basename without .py
+    source: str
+    tree: object
+    classes: dict = field(default_factory=dict)
+    functions: dict = field(default_factory=dict)
+    globals_types: dict = field(default_factory=dict)  # var -> TypeRef
+    suppressions: dict = field(default_factory=dict)   # line -> Suppression
+
+
+# --------------------------------------------------------------------------
+# AST helpers
+# --------------------------------------------------------------------------
+
+
+def _attr_chain(node) -> Optional[list]:
+    """``a.b.c`` -> ["a", "b", "c"]; None when the base is not a Name."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return None
+
+
+def _self_attr(node) -> Optional[str]:
+    """``self.<attr>`` -> attr (one level only)."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _base_self_attr(node) -> Optional[str]:
+    """Peel subscripts/slices: ``self.x[i][j]`` -> "x"."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    return _self_attr(node)
+
+
+def _lock_kind(call: ast.Call) -> Optional[str]:
+    """Classify ``threading.Lock()`` / ``RLock()`` / ``Condition(...)``."""
+    chain = _attr_chain(call.func)
+    if not chain:
+        return None
+    name = chain[-1]
+    if name == "Lock":
+        return "lock"
+    if name == "RLock":
+        return "rlock"
+    if name == "Condition":
+        return "condition"
+    return None
+
+
+def _call_type(call: ast.Call, known_classes: set) -> Optional[TypeRef]:
+    chain = _attr_chain(call.func)
+    if chain and chain[-1] in known_classes:
+        return TypeRef(chain[-1])
+    return None
+
+
+# return-annotation tables, rebuilt by each harvest() run (the harvest
+# is single-shot and single-threaded): ("Class", "method") -> TypeRef
+# for every `-> X` annotation naming an analyzed class, plus
+# method-name -> TypeRef where the name maps to ONE class analysis-wide
+# (so `self.backend.db(...)` types as Database even when `backend`
+# itself is untyped)
+_RETURN_TYPES: dict = {}
+_RETURN_BY_NAME: dict = {}
+
+
+def _expr_type(node, known_classes: set, attr_types: dict,
+               local_types: dict) -> Optional[TypeRef]:
+    """Best-effort type of an expression (see module docstring)."""
+    if isinstance(node, ast.Call):
+        t = _call_type(node, known_classes)
+        if t is not None:
+            return t
+        if isinstance(node.func, ast.Attribute):
+            rt = _expr_type(node.func.value, known_classes, attr_types,
+                            local_types)
+            if rt is not None and not rt.is_collection:
+                t = _RETURN_TYPES.get((rt.cls, node.func.attr))
+                if t is not None:
+                    return t
+            return _RETURN_BY_NAME.get(node.func.attr)
+        if isinstance(node.func, ast.Name):
+            return _RETURN_TYPES.get(("", node.func.id))
+        return None
+    if isinstance(node, ast.Name):
+        return local_types.get(node.id)
+    attr = _self_attr(node)
+    if attr is not None:
+        return attr_types.get(attr)
+    if isinstance(node, ast.Subscript):
+        base = _expr_type(node.value, known_classes, attr_types,
+                          local_types)
+        if base is not None and base.is_collection:
+            return TypeRef(base.cls)
+        return None
+    if isinstance(node, (ast.ListComp, ast.SetComp)):
+        if isinstance(node.elt, ast.Call):
+            t = _call_type(node.elt, known_classes)
+            if t is not None:
+                return TypeRef(t.cls, is_collection=True)
+        return None
+    if isinstance(node, (ast.List, ast.Tuple, ast.Set)) and node.elts:
+        t = _expr_type(node.elts[0], known_classes, attr_types,
+                       local_types)
+        if t is not None and not t.is_collection:
+            return TypeRef(t.cls, is_collection=True)
+        return None
+    return None
+
+
+def _annotation_type(ann, known_classes: set) -> Optional[TypeRef]:
+    """Parameter annotation -> TypeRef (handles Optional["X"] strings)."""
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        try:
+            inner = ast.parse(ann.value.strip(), mode="eval").body
+        except SyntaxError:
+            return None
+        if isinstance(inner, ast.Constant):
+            return None          # avoid recursing on nested strings
+        return _annotation_type(inner, known_classes)
+    if isinstance(ann, ast.Name) and ann.id in known_classes:
+        return TypeRef(ann.id)
+    if isinstance(ann, ast.Subscript):       # Optional[X], list[X]
+        chain = _attr_chain(ann.value) or []
+        inner = _annotation_type(ann.slice, known_classes)
+        if inner is not None and chain and chain[-1] in ("List", "list",
+                                                         "Sequence"):
+            return TypeRef(inner.cls, is_collection=True)
+        return inner
+    return None
+
+
+# --------------------------------------------------------------------------
+# Harvest
+# --------------------------------------------------------------------------
+
+
+def harvest(paths: Iterable[str]) -> dict:
+    """Parse + harvest every path; ``{path: ModuleInfo}``.
+
+    Two-phase: first collect class names, lock attributes and attribute
+    types everywhere (receiver typing is cross-module), then walk every
+    function body with that context.
+    """
+    modules: dict = {}
+    for path in paths:
+        with open(path, "r", encoding="utf-8") as f:
+            source = f.read()
+        tree = ast.parse(source, filename=path)
+        name = os.path.splitext(os.path.basename(path))[0]
+        modules[path] = ModuleInfo(path=path, name=name, source=source,
+                                   tree=tree,
+                                   suppressions=scan_suppressions(path,
+                                                                  source))
+
+    # phase 1: classes, lock attrs, attr types, module globals
+    known_classes: set = set()
+    for mi in modules.values():
+        for node in mi.tree.body:
+            if isinstance(node, ast.ClassDef):
+                known_classes.add(node.name)
+    _RETURN_TYPES.clear()
+    _RETURN_BY_NAME.clear()
+    by_name: dict = {}
+    for mi in modules.values():
+        for node in mi.tree.body:
+            items = node.body if isinstance(node, ast.ClassDef) else \
+                [node]
+            owner = node.name if isinstance(node, ast.ClassDef) else ""
+            for item in items:
+                if not isinstance(item, ast.FunctionDef):
+                    continue
+                t = _annotation_type(item.returns, known_classes)
+                if t is not None:
+                    _RETURN_TYPES[(owner, item.name)] = t
+                    # generic verbs (`get`, `copy`, `pop` ...) never feed
+                    # the by-name table: one annotated `get` would type
+                    # every dict.get() in the repo
+                    if item.name not in GENERIC_METHOD_NAMES and \
+                            item.name not in MUTATOR_METHODS:
+                        by_name.setdefault(item.name, set()).add(
+                            (t.cls, t.is_collection))
+    for fname, variants in by_name.items():
+        if len(variants) == 1:
+            cls, coll = next(iter(variants))
+            _RETURN_BY_NAME[fname] = TypeRef(cls, coll)
+    for mi in modules.values():
+        for node in mi.tree.body:
+            if isinstance(node, ast.ClassDef):
+                ci = ClassInfo(node.name, mi.name, mi.path, node.lineno,
+                               [b for b in
+                                (_attr_chain(x) for x in node.bases)
+                                if b])
+                _collect_class_attrs(node, ci, known_classes)
+                mi.classes[node.name] = ci
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                t = _expr_type(node.value, known_classes, {}, {})
+                if t is not None:
+                    mi.globals_types[node.targets[0].id] = t
+
+    # phase 2: walk every function body
+    for mi in modules.values():
+        for node in mi.tree.body:
+            if isinstance(node, ast.ClassDef):
+                ci = mi.classes[node.name]
+                for item in node.body:
+                    if isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        fi = _walk_function(item, ci, mi, known_classes)
+                        ci.methods[item.name] = fi
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fi = _walk_function(node, None, mi, known_classes)
+                mi.functions[node.name] = fi
+    return modules
+
+
+def _collect_class_attrs(cls_node: ast.ClassDef, ci: ClassInfo,
+                         known_classes: set):
+    """First phase per class: every ``self.x = ...`` assignment feeds
+    the lock-attr table or the attr-type table."""
+    for item in ast.walk(cls_node):
+        if not isinstance(item, ast.Assign):
+            continue
+        for tgt in item.targets:
+            attr = _self_attr(tgt)
+            if attr is None:
+                continue
+            if isinstance(item.value, ast.Call):
+                kind = _lock_kind(item.value)
+                if kind is not None:
+                    ci.lock_attrs.setdefault(
+                        attr, LockAttr(attr, kind, item.lineno))
+                    continue
+            t = _expr_type(item.value, known_classes, ci.attr_types, {})
+            if t is not None:
+                ci.attr_types.setdefault(attr, t)
+    # __init__ parameter annotations type the classic `self.x = x` form
+    for item in cls_node.body:
+        if isinstance(item, ast.FunctionDef) and item.name == "__init__":
+            ann = {}
+            args = item.args
+            for a in (args.posonlyargs + args.args + args.kwonlyargs):
+                t = _annotation_type(a.annotation, known_classes)
+                if t is not None:
+                    ann[a.arg] = t
+            for sub in ast.walk(item):
+                if isinstance(sub, ast.Assign) and \
+                        isinstance(sub.value, ast.Name) and \
+                        sub.value.id in ann:
+                    for tgt in sub.targets:
+                        attr = _self_attr(tgt)
+                        if attr is not None:
+                            ci.attr_types.setdefault(attr,
+                                                     ann[sub.value.id])
+
+
+def _bind_loop_target(target, iter_expr, known_classes: set,
+                      attr_types: dict, local_types: dict):
+    """Type a for/comprehension target from its iterable (plain
+    collections, ``enumerate(coll)``)."""
+    t = _expr_type(iter_expr, known_classes, attr_types, local_types)
+    if t is not None and t.is_collection and \
+            isinstance(target, ast.Name):
+        local_types.setdefault(target.id, TypeRef(t.cls))
+        return
+    if isinstance(iter_expr, ast.Call):
+        chain = _attr_chain(iter_expr.func) or []
+        if chain and chain[-1] == "enumerate" and iter_expr.args:
+            t = _expr_type(iter_expr.args[0], known_classes, attr_types,
+                           local_types)
+            if t is not None and t.is_collection and \
+                    isinstance(target, ast.Tuple) and \
+                    len(target.elts) == 2 and \
+                    isinstance(target.elts[1], ast.Name):
+                local_types.setdefault(target.elts[1].id,
+                                       TypeRef(t.cls))
+
+
+def _walk_function(fn_node, ci: Optional[ClassInfo], mi: ModuleInfo,
+                   known_classes: set) -> FuncInfo:
+    fi = FuncInfo(fn_node.name, ci.name if ci else None, fn_node.lineno,
+                  fn_node)
+    fi.is_property = any(
+        (_attr_chain(d) or [""])[-1] in ("property", "cached_property")
+        for d in fn_node.decorator_list)
+    attr_types = ci.attr_types if ci else {}
+    lock_attrs = ci.lock_attrs if ci else {}
+
+    # pre-pass: local variable types (flow-insensitive, first bind wins)
+    local_types: dict = {}
+    args = fn_node.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs):
+        t = _annotation_type(a.annotation, known_classes)
+        if t is not None:
+            local_types.setdefault(a.arg, t)
+    for sub in ast.walk(fn_node):
+        if isinstance(sub, ast.Assign) and len(sub.targets) == 1 and \
+                isinstance(sub.targets[0], ast.Name):
+            t = _expr_type(sub.value, known_classes, attr_types,
+                           local_types)
+            if t is None and isinstance(sub.value, ast.Name):
+                t = mi.globals_types.get(sub.value.id)
+            if t is not None:
+                local_types.setdefault(sub.targets[0].id, t)
+        elif isinstance(sub, ast.For):
+            _bind_loop_target(sub.target, sub.iter, known_classes,
+                              attr_types, local_types)
+        elif isinstance(sub, ast.comprehension):
+            # `[w.next_seq for w in self._wals]` types w too
+            _bind_loop_target(sub.target, sub.iter, known_classes,
+                              attr_types, local_types)
+
+    def classify_lock_expr(expr) -> Optional[tuple]:
+        """A with-item / enter_context argument -> lock token."""
+        attr = _self_attr(expr)
+        if attr is not None and attr in lock_attrs:
+            return ("self", attr)
+        if isinstance(expr, ast.Attribute):
+            base_t = _expr_type(expr.value, known_classes, attr_types,
+                                local_types)
+            if base_t is not None and not base_t.is_collection:
+                return ("cls", base_t.cls, expr.attr)
+        return None
+
+    def recv_cls_of(expr) -> Optional[str]:
+        t = _expr_type(expr, known_classes, attr_types, local_types)
+        if t is None and isinstance(expr, ast.Name):
+            t = mi.globals_types.get(expr.id)
+        if t is not None and not t.is_collection:
+            return t.cls
+        return None
+
+    def record_call(call: ast.Call, held: frozenset):
+        chain = _attr_chain(call.func)
+        if isinstance(call.func, ast.Name):
+            fi.calls.append(CallSite(call.func.id, ("bare",),
+                                     call.lineno, held))
+        elif isinstance(call.func, ast.Attribute):
+            recv = call.func.value
+            name = call.func.attr
+            attr = _self_attr(recv)
+            rc = recv_cls_of(recv)
+            if isinstance(recv, ast.Name) and recv.id == "self":
+                fi.calls.append(CallSite(name, ("self",), call.lineno,
+                                         held))
+            elif attr is not None:
+                fi.calls.append(CallSite(name, ("selfattr", attr),
+                                         call.lineno, held, rc))
+            elif isinstance(recv, ast.Name):
+                fi.calls.append(CallSite(name, ("local", recv.id),
+                                         call.lineno, held, rc))
+            else:
+                # peel subscripts: self._shard_dbs[i].write_grouped etc.
+                base = recv
+                while isinstance(base, ast.Subscript):
+                    base = base.value
+                battr = _self_attr(base)
+                if battr is not None:
+                    fi.calls.append(CallSite(name, ("selfattr", battr),
+                                             call.lineno, held, rc))
+                elif chain:
+                    fi.calls.append(CallSite(name, ("dotted", chain[0]),
+                                             call.lineno, held, rc))
+                else:
+                    fi.calls.append(CallSite(name, ("other",),
+                                             call.lineno, held, rc))
+        # durability bookkeeping
+        dotted = ".".join(chain) if chain else ""
+        leaf = chain[-1] if chain else ""
+        if dotted in ("os.replace", "os.rename"):
+            fi.renames.append(call.lineno)
+        elif dotted == "os.fsync" or "fsync" in leaf:
+            fi.fsyncs.append((call.lineno, dotted or leaf))
+        if leaf == "open" and len(call.args) >= 2 and \
+                isinstance(call.args[1], ast.Constant) and \
+                isinstance(call.args[1].value, str) and \
+                any(c in call.args[1].value for c in "wa+x"):
+            fi.writes_file = True
+        if leaf == "write" and isinstance(call.func, ast.Attribute) \
+                and recv_cls_of(call.func.value) is None:
+            # .write on an *untyped* receiver = probably a file handle;
+            # a typed receiver (store.write) is one of our own classes
+            fi.writes_file = True
+        if leaf == "join" and isinstance(call.func, ast.Attribute):
+            recv = call.func.value
+            attr = _self_attr(recv)
+            if attr is not None:
+                fi.joins.append((("selfattr", attr), call.lineno))
+            elif isinstance(recv, ast.Name):
+                fi.joins.append((("local", recv.id), call.lineno))
+        # threading.Thread(...) not captured via Assign (fire-and-forget)
+        if leaf == "Thread" and (len(chain or []) == 1 or
+                                 (chain and chain[0] == "threading")):
+            _record_thread(call, None, None)
+
+    def _record_thread(call: ast.Call, target_attr, target_var):
+        daemon = None
+        for kw in call.keywords:
+            if kw.arg == "daemon" and isinstance(kw.value, ast.Constant):
+                daemon = bool(kw.value.value)
+        # dedupe: Assign-handled threads also pass through record_call
+        for ts in fi.thread_starts:
+            if ts.line == call.lineno:
+                if target_attr is not None:
+                    ts.target_attr = target_attr
+                if target_var is not None:
+                    ts.target_var = target_var
+                return
+        fi.thread_starts.append(ThreadStart(call.lineno, daemon,
+                                            target_attr, target_var))
+
+    def record_mutation(attr: str, line: int, op: str, held: frozenset):
+        fi.accesses.append(Access(attr, line, "mutate", op, held))
+
+    def visit(node, held: frozenset):
+        if isinstance(node, ast.With):
+            acquired = []
+            for item in node.items:
+                tok = classify_lock_expr(item.context_expr)
+                if tok is not None:
+                    fi.acquires.append(WithAcquire(
+                        tok, item.context_expr.lineno,
+                        held | frozenset(acquired), "with"))
+                    acquired.append(tok)
+                visit(item.context_expr, held)
+            inner = held | frozenset(acquired)
+            visit_body(node.body, inner)
+            return
+        if isinstance(node, ast.Assign):
+            if isinstance(node.value, ast.Call):
+                chain = _attr_chain(node.value.func) or []
+                if chain and chain[-1] == "Thread":
+                    tgt = node.targets[0]
+                    _record_thread(node.value, _self_attr(tgt),
+                                   tgt.id if isinstance(tgt, ast.Name)
+                                   else None)
+            for tgt in node.targets:
+                targets = tgt.elts if isinstance(
+                    tgt, (ast.Tuple, ast.List)) else [tgt]
+                for t in targets:
+                    attr = _self_attr(t)
+                    if attr is not None:
+                        record_mutation(attr, node.lineno, "assign", held)
+                        continue
+                    base = _base_self_attr(t)
+                    if base is not None and base != attr:
+                        record_mutation(base, node.lineno, "setitem",
+                                        held)
+            visit(node.value, held)
+            for tgt in node.targets:
+                visit_children(tgt, held)
+            return
+        if isinstance(node, ast.AugAssign):
+            attr = _self_attr(node.target) or _base_self_attr(node.target)
+            if attr is not None:
+                record_mutation(attr, node.lineno, "augassign", held)
+            visit(node.value, held)
+            return
+        if isinstance(node, ast.Delete):
+            for t in node.targets:
+                attr = _self_attr(t) or _base_self_attr(t)
+                if attr is not None:
+                    record_mutation(attr, node.lineno, "del", held)
+            return
+        if isinstance(node, ast.Call):
+            # ExitStack.enter_context(lock) — handled in visit_body so
+            # the acquisition persists for the remaining statements
+            if isinstance(node.func, ast.Attribute):
+                attr = _self_attr(node.func.value)
+                if attr is not None and \
+                        node.func.attr in MUTATOR_METHODS:
+                    record_mutation(attr, node.lineno,
+                                    f"call:{node.func.attr}", held)
+                else:
+                    base = node.func.value
+                    while isinstance(base, ast.Subscript):
+                        base = base.value
+                    battr = _self_attr(base)
+                    if battr is not None and battr != attr and \
+                            node.func.attr in MUTATOR_METHODS:
+                        record_mutation(battr, node.lineno,
+                                        f"call:{node.func.attr}", held)
+            record_call(node, held)
+            visit_children(node, held)
+            return
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.ctx, ast.Load):
+            attr = _self_attr(node)
+            if attr is not None:
+                fi.accesses.append(Access(attr, node.lineno, "read",
+                                          "load", held))
+            else:
+                # typed attribute load: lets lock_order treat a
+                # lock-acquiring @property (wal.next_seq) as a call
+                rc = recv_cls_of(node.value)
+                if rc is not None:
+                    fi.calls.append(CallSite(node.attr, ("attrload",),
+                                             node.lineno, held, rc))
+            visit_children(node, held)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            # nested defs run later, under unknown locks: analyze their
+            # bodies with an empty held set
+            if isinstance(node, ast.Lambda):
+                visit(node.body, frozenset())
+            else:
+                visit_body(node.body, frozenset())
+            return
+        visit_children(node, held)
+
+    def visit_children(node, held):
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    def visit_body(body: list, held: frozenset):
+        cur = held
+        for stmt in body:
+            # `barrier.enter_context(wal.lock)` extends the held set for
+            # every statement after it in this block
+            tok = _enter_context_token(stmt)
+            if tok is not None:
+                lock = classify_lock_expr(tok[0])
+                visit(stmt, cur)
+                if lock is not None:
+                    fi.acquires.append(WithAcquire(lock, tok[1], cur,
+                                                   "enter_context"))
+                    cur = cur | {lock}
+                continue
+            visit(stmt, cur)
+
+    def _enter_context_token(stmt):
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+            call = stmt.value
+            if isinstance(call.func, ast.Attribute) and \
+                    call.func.attr == "enter_context" and call.args:
+                return (call.args[0], call.lineno)
+        return None
+
+    visit_body(fn_node.body, frozenset())
+    return fi
+
+
+def compute_held_methods(ci: ClassInfo) -> dict:
+    """``{method_name: frozenset(lock tokens)}`` for private methods that
+    are provably always entered with those locks held.
+
+    Fixpoint: a private method (``_x``, not dunder) with at least one
+    in-class call site, all of whose call sites run under lock ``L``
+    (syntactically, or inside another L-held method), is itself treated
+    as L-held.  This is what lets ``_drop_from_hosts``-style helpers —
+    only ever called under ``self._lock`` — mutate guarded state without
+    a finding.
+    """
+    private = [m for m in ci.methods
+               if m.startswith("_") and not m.startswith("__")]
+    sites: dict = {m: [] for m in private}
+    for caller, fi in ci.methods.items():
+        for c in fi.calls:
+            if c.recv == ("self",) and c.name in sites:
+                sites[c.name].append((caller, c.held))
+    held: dict = {}
+    changed = True
+    while changed:
+        changed = False
+        for m in private:
+            if not sites[m]:
+                continue
+            eff = None
+            for caller, h in sites[m]:
+                locks = frozenset(t for t in h if t and t[0] == "self")
+                locks = locks | held.get(caller, frozenset())
+                eff = locks if eff is None else (eff & locks)
+            eff = eff or frozenset()
+            if eff != held.get(m, frozenset()):
+                held[m] = eff
+                changed = True
+    return {m: s for m, s in held.items() if s}

@@ -1,0 +1,105 @@
+"""Pass 3 — durability (crash-safety) analysis for the persistence
+modules (``wal.py``, ``coldstore.py``, ``tsdb.py``).
+
+Rules, per function:
+
+* every ``os.replace`` / ``os.rename`` must be **followed by a
+  directory fsync** (a ``*fsync*dir*``-named call later in the same
+  function) — the rename itself is not durable until the directory
+  entry is;
+* if the function **writes the renamed file** (opens for write / calls
+  ``.write``), the rename must additionally be **dominated by a source
+  fsync** (``os.fsync`` or a non-dir ``*fsync*`` call earlier in the
+  same function).  A function that only renames a file someone else
+  wrote (e.g. retiring an imported legacy file) only owes the directory
+  fsync;
+* in ``wal.py`` specifically, raw file ``.write`` calls from methods of
+  lock-owning classes must happen under a held lock or in a function
+  that fsyncs (the tmp-file snapshot pattern) — WAL appends must flow
+  through the group-commit flush discipline, not bypass it.
+
+"Dominated by" / "followed by" are line-order approximations within the
+function, which matches how these functions are actually written (no
+persistence helper here renames in a loop before syncing in a branch).
+
+Suppression: ``# lms: durability(<reason>)``.
+"""
+
+from __future__ import annotations
+
+from .base import Finding, Report, compute_held_methods
+
+RULE = "durability"
+TARGET_MODULES = frozenset({"wal", "coldstore", "tsdb"})
+
+
+def _is_dir_fsync(name: str) -> bool:
+    return "fsync" in name and "dir" in name
+
+
+def _is_src_fsync(name: str) -> bool:
+    return "fsync" in name and "dir" not in name
+
+
+def run(modules: dict, report: Report) -> None:
+    for mi in modules.values():
+        if mi.name not in TARGET_MODULES:
+            continue
+        funcs = []
+        for ci in mi.classes.values():
+            funcs.extend((ci, fi) for fi in ci.methods.values())
+        funcs.extend((None, fi) for fi in mi.functions.values())
+
+        for ci, fi in funcs:
+            for rline in fi.renames:
+                if not any(line > rline and _is_dir_fsync(name)
+                           for line, name in fi.fsyncs):
+                    where = f"{ci.name}.{fi.name}" if ci else fi.name
+                    report.add(Finding(
+                        RULE, mi.path, rline,
+                        f"{where}: os.replace/os.rename not followed "
+                        "by a directory fsync in the same function — "
+                        "the rename is not durable until the directory "
+                        "entry is synced"))
+                if fi.writes_file and not any(
+                        line < rline and _is_src_fsync(name)
+                        for line, name in fi.fsyncs):
+                    where = f"{ci.name}.{fi.name}" if ci else fi.name
+                    report.add(Finding(
+                        RULE, mi.path, rline,
+                        f"{where}: renames a file this function wrote "
+                        "without an os.fsync of the source first — a "
+                        "crash can publish an empty/torn file"))
+
+        if mi.name == "wal":
+            _check_wal_write_discipline(mi, report)
+
+
+def _check_wal_write_discipline(mi, report: Report) -> None:
+    """Raw ``.write`` on a file-like receiver inside a lock-owning wal
+    class must happen under a lock (group-commit discipline) or in a
+    tmp-write+fsync function (the snapshot pattern)."""
+    for ci in mi.classes.values():
+        if not ci.lock_attrs:
+            continue
+        held_methods = compute_held_methods(ci)
+        for fi in ci.methods.values():
+            if fi.name == "__init__":
+                continue
+            has_fsync = bool(fi.fsyncs)
+            extra = held_methods.get(fi.name, frozenset())
+            for call in fi.calls:
+                if call.name != "write":
+                    continue
+                if call.recv[0] not in ("selfattr", "local"):
+                    continue
+                if call.recv_cls is not None:
+                    continue        # typed receiver = ours, not a file
+                if call.held or extra or has_fsync:
+                    continue
+                report.add(Finding(
+                    RULE, mi.path, call.line,
+                    f"{ci.name}.{fi.name}: raw file write outside any "
+                    "lock and outside an fsync'ing function — WAL "
+                    "appends must flow through the group-commit flush "
+                    "discipline"))

@@ -1,0 +1,124 @@
+"""Pass 5 — HTTP surface hygiene (codifies the PR 5/6 review findings).
+
+Applies to *handler classes* — classes with ``do_GET``/``do_POST``/...
+methods or a ``*Handler`` base:
+
+* **bounded body reads** — ``self.rfile.read`` may only appear inside
+  the ``_body()`` helper, which enforces the Content-Length bound and
+  413s oversized payloads.  Every other method must go through it;
+* **unknown-database 404s** — resolving a *caller-supplied* database
+  name (``....db(<non-constant>)``) must be dominated by a
+  ``self._known_db(...)`` check in the enclosing block structure.
+  Without it, a typo'd ``?db=`` query param registers a fresh empty
+  database server-side (remote-fillable memory) instead of 404ing.
+
+The guard check is block-scoped, not function-scoped: ``do_GET`` here is
+one long if/elif chain over paths, and a ``_known_db`` call in the
+``/query/v2`` branch must not launder an unguarded ``.db()`` in the
+``/alerts`` branch.  A statement whose test or expression mentions
+``_known_db`` marks the *rest of its block* (and its own body) guarded.
+
+Suppression: ``# lms: http(<reason>)``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .base import Finding, Report, _attr_chain
+
+RULE = "http"
+BODY_HELPER = "_body"
+GUARD_NAME = "_known_db"
+
+
+def _is_handler_class(ci) -> bool:
+    if any(m.startswith("do_") for m in ci.methods):
+        return True
+    for chain in ci.bases:
+        if chain and "Handler" in chain[-1]:
+            return True
+    return False
+
+
+def _mentions_guard(node) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            chain = _attr_chain(sub.func)
+            if chain and chain[-1] == GUARD_NAME:
+                return True
+    return False
+
+
+def run(modules: dict, report: Report) -> None:
+    for mi in modules.values():
+        for ci in mi.classes.values():
+            if not _is_handler_class(ci):
+                continue
+            for fi in ci.methods.values():
+                if fi.name != BODY_HELPER:
+                    for call in fi.calls:
+                        if call.name == "read" and \
+                                call.recv == ("selfattr", "rfile"):
+                            report.add(Finding(
+                                RULE, mi.path, call.line,
+                                f"{ci.name}.{fi.name}: raw "
+                                "self.rfile.read — body reads must go "
+                                f"through the bounded {BODY_HELPER}() "
+                                "helper (Content-Length cap + 413)"))
+                _check_db_guard(fi.node, mi.path, ci.name, fi.name,
+                                report)
+
+
+def _check_db_guard(fn_node, path: str, cls: str, mname: str,
+                    report: Report) -> None:
+    findings: list = []
+
+    def flag_db_calls(stmt):
+        for sub in ast.walk(stmt):
+            if isinstance(sub, ast.Call) and \
+                    isinstance(sub.func, ast.Attribute) and \
+                    sub.func.attr == "db" and sub.args and \
+                    not isinstance(sub.args[0], ast.Constant):
+                findings.append(sub.lineno)
+
+    def leaf_parts(stmt):
+        # the statement's own expressions, not its nested blocks (those
+        # carry their own guard state)
+        for name, value in ast.iter_fields(stmt):
+            if name in ("body", "orelse", "finalbody", "handlers"):
+                continue
+            nodes = value if isinstance(value, list) else [value]
+            for n in nodes:
+                if isinstance(n, ast.AST):
+                    yield n
+
+    def walk_block(body, guarded: bool):
+        g = guarded
+        for stmt in body:
+            shallow = any(_mentions_guard(n) for n in leaf_parts(stmt))
+            if not g and not shallow:
+                for n in leaf_parts(stmt):
+                    flag_db_calls(n)
+            # an If whose *test* mentions the guard dominates both its
+            # arms (`if not _known_db: 404 / elif ...: use db`) and the
+            # rest of this block; a guard buried in a nested body does
+            # NOT leak out — `shallow` only sees this statement's own
+            # expressions, and each nested block recomputes its own
+            inner = g or shallow
+            for attr in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, attr, None)
+                if sub:
+                    walk_block(sub, inner)
+            for h in getattr(stmt, "handlers", None) or []:
+                walk_block(h.body, inner)
+            if shallow:
+                g = True
+
+    walk_block(fn_node.body, False)
+    for line in sorted(set(findings)):
+        report.add(Finding(
+            RULE, path, line,
+            f"{cls}.{mname}: caller-supplied database name passed to "
+            f".db() without a {GUARD_NAME}() 404 guard — unknown names "
+            "must 404, not auto-register an empty database"))

@@ -1,0 +1,79 @@
+"""Pass 1 — lock-discipline.
+
+Per class: infer the *guarded set* of each lock attribute (the
+``self.<attr>`` fields accessed while that lock is syntactically held in
+a non-``__init__`` method), then flag every **mutation** of a guarded
+field that happens with none of its guarding locks held.
+
+What counts as a mutation: plain/aug assignment, ``del``, item
+assignment through the attribute, and in-place mutator calls
+(``.append``/``.update``/``.pop``/...).  Reads feed the guarded-set
+inference (a field *read* under the lock and appended elsewhere is the
+classic ``jobs.on_end`` bug) but bare reads are not findings — the
+read-modify-write half is covered because ``augassign`` is a mutation.
+
+Exemptions:
+
+* ``__init__`` / ``__post_init__`` / ``__setstate__`` — construction is
+  single-threaded by convention here;
+* lock attributes themselves and ``_thread``-like handles assigned once;
+* mutations inside *held methods* (see
+  :func:`repro.analyzer.base.compute_held_methods`) — private helpers
+  every caller invokes under the lock.
+
+Suppression: ``# lms: unlocked(<reason>)``.
+"""
+
+from __future__ import annotations
+
+from .base import Finding, Report, compute_held_methods
+
+RULE = "unlocked"
+
+CONSTRUCTION_METHODS = frozenset({
+    "__init__", "__post_init__", "__setstate__", "__new__",
+})
+
+
+def _self_locks(held: frozenset) -> frozenset:
+    return frozenset(t for t in held if t and t[0] == "self")
+
+
+def run(modules: dict, report: Report) -> None:
+    for mi in modules.values():
+        for ci in mi.classes.values():
+            if not ci.lock_attrs:
+                continue
+            held_methods = compute_held_methods(ci)
+
+            # guarded[attr] = set of lock attrs it was accessed under
+            guarded: dict = {}
+            for mname, fi in ci.methods.items():
+                if mname in CONSTRUCTION_METHODS:
+                    continue
+                extra = held_methods.get(mname, frozenset())
+                for acc in fi.accesses:
+                    if acc.attr in ci.lock_attrs:
+                        continue
+                    locks = _self_locks(acc.held) | extra
+                    for tok in locks:
+                        guarded.setdefault(acc.attr, set()).add(tok[1])
+
+            if not guarded:
+                continue
+            for mname, fi in ci.methods.items():
+                if mname in CONSTRUCTION_METHODS:
+                    continue
+                extra = held_methods.get(mname, frozenset())
+                for acc in fi.accesses:
+                    if acc.kind != "mutate" or acc.attr not in guarded:
+                        continue
+                    locks = {t[1] for t in _self_locks(acc.held) | extra}
+                    if locks & guarded[acc.attr]:
+                        continue
+                    want = "/".join(sorted(guarded[acc.attr]))
+                    report.add(Finding(
+                        RULE, mi.path, acc.line,
+                        f"{ci.name}.{mname} mutates "
+                        f"self.{acc.attr} ({acc.op}) without holding "
+                        f"self.{want}, which guards it elsewhere"))

@@ -1,0 +1,302 @@
+"""Pass 2 — lock-order (deadlock) analysis.
+
+Builds a cross-module lock-acquisition graph and fails on cycles.
+
+* **Nodes** are lock identities ``Class.attr`` — one node per declared
+  lock attribute, deliberately collapsing instances: two threads taking
+  two *instances* of the same class pair in opposite orders is exactly
+  the bug class this is meant to catch, so the collapse errs loud.
+* **Edges** come from (a) nested ``with`` statements / ``enter_context``
+  acquisitions, and (b) *calls made while holding a lock* into methods
+  that may acquire locks, using a transitive may-acquire fixpoint over a
+  best-effort call graph.  Receiver resolution order: harvested static
+  types → constructor calls → unique-name match (bounded, and never for
+  generic names like ``.write``/``.get`` — resolving a file object's
+  ``write`` into the TSDB would invent cycles).  Lock-acquiring
+  ``@property`` accesses on typed receivers (``wal.next_seq``) count as
+  calls.
+* Self-edges on RLock / Condition nodes are dropped (reentrancy);
+  self-edges on plain ``Lock`` nodes are reported — same-instance
+  re-acquire is an instant deadlock, distinct-instance is an ordering
+  hazard.
+
+A cycle produces one finding with the full witness path (each hop's
+file:line).  Suppress with ``# lms: lock-order(<reason>)`` on any edge
+site of the cycle.
+
+The pass also fills ``Report.lock_nodes`` / ``lock_edges`` /
+``lock_sites`` — the artifacts ``repro.core.locktrace`` cross-checks
+dynamic acquisition orders against in the ``-m race`` tier.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from .base import (GENERIC_METHOD_NAMES, MUTATOR_METHODS, Finding,
+                   Report, compute_held_methods)
+
+RULE = "lock-order"
+MAX_NAME_MATCH = 3
+
+# names that may never resolve by bare name-match: generic I/O verbs plus
+# every container-mutator (``colspec.append`` is a list, not the WAL)
+NO_NAME_MATCH = GENERIC_METHOD_NAMES | MUTATOR_METHODS
+
+
+def _build_class_index(modules: dict) -> dict:
+    idx = {}
+    for mi in modules.values():
+        for ci in mi.classes.values():
+            idx[ci.name] = (mi, ci)
+    return idx
+
+
+def _node_of(token, ci, class_idx) -> Optional[str]:
+    """Normalize a held/acquired lock token to a graph node, or None."""
+    if not token:
+        return None
+    if token[0] == "self":
+        if ci is not None and token[1] in ci.lock_attrs:
+            return f"{ci.name}.{token[1]}"
+        return None
+    if token[0] == "cls":
+        _, cls, attr = token
+        entry = class_idx.get(cls)
+        if entry is not None and attr in entry[1].lock_attrs:
+            return f"{cls}.{attr}"
+    return None
+
+
+def _resolve_call(call, mi, ci, class_idx, modules) -> list:
+    """CallSite -> [(owner ClassInfo|None, FuncInfo)] candidates."""
+    name = call.name
+    if call.recv == ("attrload",):
+        entry = class_idx.get(call.recv_cls or "")
+        if entry is not None:
+            m = entry[1].methods.get(name)
+            if m is not None and m.is_property:
+                return [(entry[1], m)]
+        return []
+    if call.recv == ("self",) and ci is not None:
+        m = ci.methods.get(name)
+        if m is not None:
+            return [(ci, m)]
+        return []
+    if call.recv_cls:
+        entry = class_idx.get(call.recv_cls)
+        if entry is not None:
+            m = entry[1].methods.get(name)
+            return [(entry[1], m)] if m is not None else []
+    if call.recv == ("bare",):
+        entry = class_idx.get(name)
+        if entry is not None:                      # constructor call
+            init = entry[1].methods.get("__init__")
+            return [(entry[1], init)] if init is not None else []
+        if name in mi.functions:
+            return [(None, mi.functions[name])]
+    # last resort: name match across the analyzed set, never for
+    # generic names, bounded so a common name can't fan out everywhere
+    if name in NO_NAME_MATCH:
+        return []
+    cands = []
+    for _, kci in class_idx.values():
+        if name in kci.methods:
+            cands.append((kci, kci.methods[name]))
+    for omi in modules.values():
+        if name in omi.functions:
+            cands.append((None, omi.functions[name]))
+    if 1 <= len(cands) <= MAX_NAME_MATCH:
+        return cands
+    return []
+
+
+def run(modules: dict, report: Report) -> None:
+    class_idx = _build_class_index(modules)
+
+    # nodes + creation sites
+    for mi in modules.values():
+        for ci in mi.classes.values():
+            for attr, la in ci.lock_attrs.items():
+                node = f"{ci.name}.{attr}"
+                report.lock_nodes[node] = la.kind
+                report.lock_sites[(os.path.realpath(mi.path),
+                                   la.line)] = node
+
+    held_methods = {}        # ClassInfo -> {method: frozenset(tokens)}
+    all_funcs = []           # (mi, ci|None, fi)
+    for mi in modules.values():
+        for ci in mi.classes.values():
+            held_methods[id(ci)] = compute_held_methods(ci)
+            for fi in ci.methods.values():
+                all_funcs.append((mi, ci, fi))
+        for fi in mi.functions.values():
+            all_funcs.append((mi, None, fi))
+
+    # transitive may-acquire fixpoint: fid -> set of nodes the function
+    # may acquire during its execution (directly or via calls)
+    summary: dict = {id(fi): set() for _, _, fi in all_funcs}
+    changed = True
+    while changed:
+        changed = False
+        for mi, ci, fi in all_funcs:
+            acc = set()
+            for acq in fi.acquires:
+                n = _node_of(acq.token, ci, class_idx)
+                if n is not None:
+                    acc.add(n)
+            for call in fi.calls:
+                for _, callee in _resolve_call(call, mi, ci, class_idx,
+                                               modules):
+                    acc |= summary[id(callee)]
+            if not acc <= summary[id(fi)]:
+                summary[id(fi)] |= acc
+                changed = True
+
+    # edges
+    def held_nodes(held, ci, fi):
+        toks = set(held)
+        if ci is not None:
+            toks |= held_methods[id(ci)].get(fi.name, frozenset())
+        return {n for n in (_node_of(t, ci, class_idx) for t in toks)
+                if n is not None}
+
+    def add_edge(src, dst, path, line, note):
+        if src == dst and report.lock_nodes.get(src) in ("rlock",
+                                                         "condition"):
+            return          # reentrant re-acquire, not an ordering edge
+        report.lock_edges.setdefault((src, dst), [])
+        sites = report.lock_edges[(src, dst)]
+        if len(sites) < 8:          # keep witness lists bounded
+            sites.append((path, line, note))
+
+    for mi, ci, fi in all_funcs:
+        for acq in fi.acquires:
+            dst = _node_of(acq.token, ci, class_idx)
+            if dst is None:
+                continue
+            for src in held_nodes(acq.held, ci, fi):
+                add_edge(src, dst, mi.path, acq.line, "nested acquire")
+        for call in fi.calls:
+            srcs = held_nodes(call.held, ci, fi)
+            if not srcs:
+                continue
+            acquired = set()
+            for _, callee in _resolve_call(call, mi, ci, class_idx,
+                                           modules):
+                acquired |= summary[id(callee)]
+            for src in srcs:
+                for dst in acquired:
+                    if src == dst and report.lock_nodes.get(src) in (
+                            "rlock", "condition"):
+                        continue
+                    add_edge(src, dst, mi.path, call.line,
+                             f"call {call.name}()")
+
+    _report_cycles(modules, report)
+
+
+def _report_cycles(modules: dict, report: Report) -> None:
+    graph: dict = {}
+    for (src, dst) in report.lock_edges:
+        graph.setdefault(src, set()).add(dst)
+        graph.setdefault(dst, set())
+
+    sccs = _tarjan(graph)
+    for scc in sccs:
+        scc_set = set(scc)
+        cyclic = len(scc) > 1 or (scc[0] in graph.get(scc[0], ()))
+        if not cyclic:
+            continue
+        path = _witness(graph, scc_set)
+        hops = []
+        sites = []
+        for a, b in zip(path, path[1:]):
+            p, ln, note = report.lock_edges[(a, b)][0]
+            hops.append(f"{a} -> {b} ({os.path.basename(p)}:{ln}, "
+                        f"{note})")
+            sites.append((p, ln))
+        msg = ("lock-order cycle (potential deadlock): "
+               + "; ".join(hops))
+        anchor_path, anchor_line = sites[0]
+        f = Finding(RULE, anchor_path, anchor_line, msg)
+        # a lock-order suppression on ANY edge site silences the cycle
+        for p, ln in sites:
+            mi = modules.get(p)
+            if mi is None:
+                continue
+            for cand in (ln, ln - 1):
+                s = mi.suppressions.get(cand)
+                if s is not None and s.rule == RULE and s.reason:
+                    f.suppressed = True
+                    f.reason = s.reason
+                    break
+            if f.suppressed:
+                break
+        report.add(f)
+
+
+def _witness(graph: dict, scc: set) -> list:
+    """A concrete cycle within one SCC, returned as [n0, ..., n0]."""
+    start = sorted(scc)[0]
+    path = [start]
+    seen = {start: 0}
+    cur = start
+    while True:
+        nxt = sorted(n for n in graph.get(cur, ()) if n in scc)[0]
+        if nxt in seen:
+            return path[seen[nxt]:] + [nxt]
+        seen[nxt] = len(path)
+        path.append(nxt)
+        cur = nxt
+
+
+def _tarjan(graph: dict) -> list:
+    """Iterative Tarjan SCC."""
+    index_counter = [0]
+    stack: list = []
+    lowlink: dict = {}
+    index: dict = {}
+    on_stack: dict = {}
+    result: list = []
+
+    for root in graph:
+        if root in index:
+            continue
+        work = [(root, iter(sorted(graph.get(root, ()))))]
+        index[root] = lowlink[root] = index_counter[0]
+        index_counter[0] += 1
+        stack.append(root)
+        on_stack[root] = True
+        while work:
+            node, it = work[-1]
+            advanced = False
+            for succ in it:
+                if succ not in index:
+                    index[succ] = lowlink[succ] = index_counter[0]
+                    index_counter[0] += 1
+                    stack.append(succ)
+                    on_stack[succ] = True
+                    work.append((succ, iter(sorted(graph.get(succ,
+                                                             ())))))
+                    advanced = True
+                    break
+                elif on_stack.get(succ):
+                    lowlink[node] = min(lowlink[node], index[succ])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                parent = work[-1][0]
+                lowlink[parent] = min(lowlink[parent], lowlink[node])
+            if lowlink[node] == index[node]:
+                scc = []
+                while True:
+                    w = stack.pop()
+                    on_stack[w] = False
+                    scc.append(w)
+                    if w == node:
+                        break
+                result.append(sorted(scc))
+    return result

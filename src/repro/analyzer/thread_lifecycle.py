@@ -1,0 +1,83 @@
+"""Pass 4 — thread lifecycle.
+
+Every ``threading.Thread(...)`` construction must either be
+``daemon=True`` (a literal at the constructor, not set later — the
+analyzer only trusts what it can see) or be provably joined:
+
+* stored to ``self.<attr>``: some teardown entry point of the class
+  (``close`` / ``stop`` / ``shutdown`` / ``drain`` / ``join`` /
+  ``__exit__``) must reach a ``self.<attr>.join(...)`` through in-class
+  calls;
+* stored to a local: the same function must join that local;
+* fire-and-forget non-daemon threads are always findings.
+
+Suppression: ``# lms: thread(<reason>)``.
+"""
+
+from __future__ import annotations
+
+from .base import Finding, Report
+
+RULE = "thread"
+TEARDOWN_METHODS = frozenset({
+    "close", "stop", "shutdown", "drain", "join", "__exit__", "__del__",
+})
+
+
+def _reachable_methods(ci, roots) -> set:
+    """Methods reachable from the teardown entry points via self calls."""
+    seen = set()
+    stack = [r for r in roots if r in ci.methods]
+    while stack:
+        name = stack.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        for call in ci.methods[name].calls:
+            if call.recv == ("self",) and call.name in ci.methods:
+                stack.append(call.name)
+    return seen
+
+
+def run(modules: dict, report: Report) -> None:
+    for mi in modules.values():
+        funcs = []
+        for ci in mi.classes.values():
+            funcs.extend((ci, fi) for fi in ci.methods.values())
+        funcs.extend((None, fi) for fi in mi.functions.values())
+
+        for ci, fi in funcs:
+            for ts in fi.thread_starts:
+                if ts.daemon is True:
+                    continue
+                where = f"{ci.name}.{fi.name}" if ci else fi.name
+                how = ("daemon=False" if ts.daemon is False
+                       else "no daemon= flag")
+                if ts.target_attr is not None and ci is not None:
+                    joined = any(
+                        rec == ("selfattr", ts.target_attr)
+                        for m in _reachable_methods(ci, TEARDOWN_METHODS)
+                        for rec, _line in ci.methods[m].joins)
+                    if joined:
+                        continue
+                    report.add(Finding(
+                        RULE, mi.path, ts.line,
+                        f"{where}: thread self.{ts.target_attr} started "
+                        f"with {how} and no join reachable from a "
+                        "close()/stop() teardown path — it can outlive "
+                        "the owner and block interpreter exit"))
+                elif ts.target_var is not None:
+                    joined = any(rec == ("local", ts.target_var)
+                                 for rec, _line in fi.joins)
+                    if joined:
+                        continue
+                    report.add(Finding(
+                        RULE, mi.path, ts.line,
+                        f"{where}: local thread '{ts.target_var}' "
+                        f"started with {how} and never joined in this "
+                        "function"))
+                else:
+                    report.add(Finding(
+                        RULE, mi.path, ts.line,
+                        f"{where}: fire-and-forget thread with {how} — "
+                        "unjoinable and non-daemon"))

@@ -278,7 +278,7 @@ def evaluate_rule(rule: ThresholdRule, times: list, values: list,
     return findings
 
 
-def evaluate_rules_on_db(db, rules: list, *, jobid: Optional[str] = None,
+def evaluate_rules_on_db(db: "Database", rules: list, *, jobid: Optional[str] = None,
                          group_by_tag: str = "hostname",
                          use_rollups: object = "auto") -> list:
     """Run every rule over every matching host series in a Database.
@@ -513,7 +513,7 @@ class StreamAnalyzer:
 # --------------------------------------------------------------------------
 
 
-def load_alerts(db, *, jobid: Optional[str] = None,
+def load_alerts(db: "Database", *, jobid: Optional[str] = None,
                 host: Optional[str] = None, rule: Optional[str] = None,
                 state: str = "all") -> list:
     """Reconstruct :class:`Alert` episodes from the persisted ``analysis``
@@ -570,7 +570,7 @@ def load_alerts(db, *, jobid: Optional[str] = None,
     return alerts
 
 
-def load_job_report(db, jobid: str) -> Optional[dict]:
+def load_job_report(db: "Database", jobid: str) -> Optional[dict]:
     """Latest persisted footprint report for one job (see
     :meth:`AnalysisEngine.job_report`), or None."""
     best, best_t = None, None
@@ -582,7 +582,7 @@ def load_job_report(db, jobid: str) -> Optional[dict]:
     return json.loads(best) if best else None
 
 
-def _job_ended(db, jobid: str) -> bool:
+def _job_ended(db: "Database", jobid: str) -> bool:
     for s in db.select("job_event", ["event"], {"jobid": jobid}):
         if "end" in (s.values.get("event") or ()):
             return True
@@ -699,10 +699,22 @@ class AnalysisEngine:
         with self._cv:
             self._stop = True
             self._cv.notify_all()
+            thread = self._thread
+        # bounded join outside the condition (the worker needs _cv to
+        # observe _stop); the sleep-based rate limiter caps the wait
+        if thread is not None and thread is not threading.current_thread():
+            thread.join(timeout=2.0 + self._tick_interval_s)
+            if thread.is_alive():
+                with self._lock:
+                    self.stats["tick_join_timeouts"] = \
+                        self.stats.get("tick_join_timeouts", 0) + 1
 
     # -- the continuous evaluation sweep -------------------------------------
 
-    def _db(self):
+    def _db(self) -> "Optional[Database]":
+        # Database-shaped: plain or sharded depending on the backend.
+        # The annotation is load-bearing for repro.analyzer lock-order
+        # resolution — ticks call into the database under self._lock.
         if self.backend is None:
             return None
         return self.backend.db(self.db_name)
@@ -749,7 +761,8 @@ class AnalysisEngine:
         self._emit(out, fired)
         return n
 
-    def _tick_locked(self, db, only_tags: Optional[dict], final: bool,
+    def _tick_locked(self, db: "Database", only_tags: Optional[dict],
+                     final: bool,
                      fired: list, out: list, full: bool = True) -> int:
         rollups = getattr(db, "rollup_config", None) is not None
         evaluated = 0
@@ -798,7 +811,8 @@ class AnalysisEngine:
         return evaluated
 
     @staticmethod
-    def _rule_series(db, rule: ThresholdRule, tags: Optional[dict],
+    def _rule_series(db: "Database", rule: ThresholdRule,
+                     tags: Optional[dict],
                      t_min: Optional[int], rollups: bool) -> list:
         if rule.expr:
             # derived rule input (repro.core.query): the metric is a
@@ -817,7 +831,7 @@ class AnalysisEngine:
                                     agg="mean", tags=tags, t_min=t_min)
         return db.select(rule.measurement, [rule.metric], tags, t_min)
 
-    def _job_live(self, db, jobid: str) -> bool:
+    def _job_live(self, db: "Database", jobid: str) -> bool:
         """False once a job's analysis is closed (its end hook ran, or it
         was found ended in the DB — e.g. before a restart)."""
         if jobid in self._ended:

@@ -33,6 +33,7 @@ from __future__ import annotations
 import html
 import json
 import os
+import threading
 import weakref
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -124,6 +125,10 @@ class DashboardAgent:
         # work here (the engine strongly references its backend — the
         # key — so entries would never be collected)
         self._engines: "OrderedDict" = OrderedDict()
+        # concurrent dashboard renders (one per ThreadingHTTPServer
+        # request) share this LRU; unguarded get/move_to_end/popitem
+        # interleavings corrupt the OrderedDict
+        self._engines_lock = threading.Lock()
 
     def _engine(self, db, db_name: Optional[str] = None) -> QueryEngine:
         # prefer the backend's shared per-database registry
@@ -135,16 +140,17 @@ class DashboardAgent:
                 db is self.backend.db(db_name):
             return registry(db_name)
         key = id(db)
-        ent = self._engines.get(key)
-        if ent is not None and ent[0]() is db:
+        with self._engines_lock:
+            ent = self._engines.get(key)
+            if ent is not None and ent[0]() is db:
+                self._engines.move_to_end(key)
+                return ent[1]
+            eng = QueryEngine(db)
+            self._engines[key] = (weakref.ref(db), eng)
             self._engines.move_to_end(key)
-            return ent[1]
-        eng = QueryEngine(db)
-        self._engines[key] = (weakref.ref(db), eng)
-        self._engines.move_to_end(key)
-        while len(self._engines) > self.MAX_FALLBACK_ENGINES:
-            self._engines.popitem(last=False)
-        return eng
+            while len(self._engines) > self.MAX_FALLBACK_ENGINES:
+                self._engines.popitem(last=False)
+            return eng
 
     # -- template assembly (the paper's core mechanism) -----------------------
 

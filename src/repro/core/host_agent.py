@@ -18,6 +18,7 @@ from __future__ import annotations
 import os
 import resource
 import socket
+import threading
 import time
 from typing import Optional
 
@@ -87,6 +88,10 @@ class HostAgent:
         # failed send (bounded: a dead router drops the oldest points
         # past max_pending_points instead of growing memory forever)
         self.max_pending_points = int(max_pending_points)
+        # guards the emit buffer + failure counters: collection ticks,
+        # explicit flush() callers and __exit__ may run on different
+        # threads (the straggler tests drive several agents at once)
+        self._lock = threading.Lock()
         self._pending: list = []
         self._failed_flushes = 0
         self._dropped_points = 0
@@ -185,8 +190,10 @@ class HostAgent:
     # -- batched emission --------------------------------------------------------
 
     def _emit(self, point: Point):
-        self._pending.append(point)
-        if len(self._pending) >= self.batch_size:
+        with self._lock:
+            self._pending.append(point)
+            full = len(self._pending) >= self.batch_size
+        if full:
             # implicit flush: a down router/sink must never crash the
             # collection tick — the failure is counted, the points are
             # re-buffered (bounded) and retried on the next emit
@@ -198,26 +205,31 @@ class HostAgent:
         self._flush(raise_errors=True)
 
     def _flush(self, raise_errors: bool):
-        if not self._pending:
-            return
-        pending, self._pending = self._pending, []
+        with self._lock:
+            if not self._pending:
+                return
+            pending, self._pending = self._pending, []
         try:
+            # sink call outside the lock: a slow router must not stall
+            # concurrent collection ticks
             self.router.write(pending)
         except Exception:
-            self._failed_flushes += 1
-            self._pending[:0] = pending
-            excess = len(self._pending) - self.max_pending_points
-            if excess > 0:
-                del self._pending[:excess]
-                self._dropped_points += excess
+            with self._lock:
+                self._failed_flushes += 1
+                self._pending[:0] = pending
+                excess = len(self._pending) - self.max_pending_points
+                if excess > 0:
+                    del self._pending[:excess]
+                    self._dropped_points += excess
             if raise_errors:
                 raise
 
     @property
     def emit_stats(self) -> dict:
-        return {"pending": len(self._pending),
-                "failed_flushes": self._failed_flushes,
-                "dropped_points": self._dropped_points}
+        with self._lock:
+            return {"pending": len(self._pending),
+                    "failed_flushes": self._failed_flushes,
+                    "dropped_points": self._dropped_points}
 
     def __enter__(self):
         return self

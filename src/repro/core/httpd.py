@@ -156,7 +156,13 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
         elif url.path == "/dbs":
             self._send(200, {"databases": self.router.backend.databases()})
         elif url.path == "/query":
-            db = self.router.backend.db(q.get("db", "global"))
+            dbname = q.get("db", "global")
+            if not self._known_db(dbname):
+                # resolve-before-check would *register* the typo'd name
+                # server-side (remote-fillable memory); see /query/v2
+                self._send(404, {"error": f"unknown database {dbname!r}"})
+                return
+            db = self.router.backend.db(dbname)
             meas = q.get("m", "")
             fieldname = q.get("field", "value")
             tags = {k[4:]: v for k, v in q.items() if k.startswith("tag_")}
@@ -233,7 +239,11 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
                                      .db(name).data_version(
                                          q.get("m") or None)})
                 return
-            db = self.router.backend.db(q.get("db", "global"))
+            name = q.get("db", "global")
+            if not self._known_db(name):
+                self._send(404, {"error": f"unknown database {name!r}"})
+                return
+            db = self.router.backend.db(name)
             if what == "measurements":
                 self._send(200, {"values": db.measurements()})
             elif what == "fields":
@@ -289,11 +299,15 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
             else:
                 self._send(400, {"error": f"unknown meta {what!r}"})
         elif url.path == "/alerts":
+            dbname = q.get("db", "global")
+            if not self._known_db(dbname):
+                self._send(404, {"error": f"unknown database {dbname!r}"})
+                return
             engine = self.router.analysis
             if engine is not None:
                 engine.flush()      # read-your-writes for fresh ingest
             alerts = load_alerts(
-                self.router.backend.db(q.get("db", "global")),
+                self.router.backend.db(dbname),
                 jobid=q.get("jobid"), host=q.get("host"),
                 rule=q.get("rule"), state=q.get("state", "all"))
             self._send(200, {"alerts": [a.to_dict() for a in alerts]})
@@ -304,8 +318,13 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
             if engine is not None:
                 report = engine.flush().job_report(jid)
             else:
+                dbname = q.get("db", "global")
+                if not self._known_db(dbname):
+                    self._send(404, {"error": f"unknown database "
+                                              f"{dbname!r}"})
+                    return
                 report = load_job_report(
-                    self.router.backend.db(q.get("db", "global")), jid)
+                    self.router.backend.db(dbname), jid)
             if report is None:
                 self._send(404, {"error": f"no report for job {jid!r}"})
             else:
@@ -434,6 +453,9 @@ class LMSHttpServer:
     def stop(self):
         self.httpd.shutdown()
         self.httpd.server_close()
+        # bounded: serve_forever returns promptly after shutdown(), but
+        # a wedged handler must not hang teardown forever
+        self._thread.join(timeout=2.0)
 
     def __enter__(self):
         return self.start()

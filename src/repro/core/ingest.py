@@ -284,7 +284,8 @@ class IngestServer:
         self._stats = {"connections_total": 0, "frames_in": 0,
                        "batches_ok": 0, "points_ok": 0, "shed_frames": 0,
                        "frame_errors": 0, "oversized_frames": 0,
-                       "batch_errors": 0, "pings": 0}
+                       "batch_errors": 0, "pings": 0,
+                       "join_timeouts": 0}
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         router.ingest = self
@@ -311,6 +312,10 @@ class IngestServer:
             c.close()
         if self._thread is not None:
             self._thread.join(timeout=2.0)
+            if self._thread.is_alive():
+                # surfaced, not silent: a leaked accept thread shows up
+                # in /meta?what=ingest instead of just outliving us
+                self._count(join_timeouts=1)
 
     def __enter__(self):
         return self.start()

@@ -59,7 +59,8 @@ class JobRegistry:
         its per-series evaluation state.  Hooks run *outside* the registry
         lock (they may query/write the TSDB) and are exception-guarded: a
         broken hook must not break job deallocation."""
-        self._end_hooks.append(fn)
+        with self._lock:
+            self._end_hooks.append(fn)
         return fn
 
     def start(self, job_id: str, user: str, hosts: list,

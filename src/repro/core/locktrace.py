@@ -1,0 +1,245 @@
+"""Opt-in dynamic lock-order tracer — the runtime half of the
+``repro.analyzer`` lock-order pass.
+
+:func:`install` monkeypatches the ``threading.Lock`` / ``threading.RLock``
+factories so that locks *created from allowed source files* (by default
+``src/repro/core``) come back wrapped in :class:`TracingLock`.  Each
+wrapper remembers its **creation site** ``(realpath, lineno)`` — the same
+key the static analyzer emits in ``Report.lock_sites`` — and, per
+thread, the stack of traced locks currently held.  Every first-level
+acquire while another traced lock is held records a directed edge
+``(held site) -> (acquired site)``.
+
+The ``-m race`` pytest tier exercises the real stack under the tracer,
+maps both endpoints of every recorded edge to ``Class.attr`` lock nodes
+via the analyzer's site map, and asserts the dynamic graph is a subgraph
+of the static one (so the static acyclicity proof covers every order the
+tests actually executed).
+
+Scope and honesty:
+
+* only locks created *after* :func:`install` are traced — module-level
+  singletons (``wal._SEALER`` / ``wal._FLUSHER``) predate it and stay
+  untraced;
+* ``threading.Condition(threading.Lock())`` is traced through its inner
+  lock (the factory call evaluates in the caller's frame);
+* re-acquires of an RLock already held by the thread record no edge;
+* overhead is one frame inspection per lock *creation* and a dict
+  update per contested acquire — never install this outside tests.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import threading
+from typing import Iterable, Optional
+
+__all__ = ["TracingLock", "install", "uninstall", "installed", "reset",
+           "edges", "sites", "find_cycle"]
+
+_ORIG_LOCK = threading.Lock
+_ORIG_RLOCK = threading.RLock
+
+# registry state guarded by a REAL lock (created at import, pre-patch)
+_REG_LOCK = threading.Lock()
+_EDGES: dict = {}          # (src_site, dst_site) -> count
+_SITES: set = set()        # every traced creation site
+_TLS = threading.local()   # .stack = [TracingLock, ...] held, in order
+
+_installed = False
+_allowed_prefixes: tuple = ()
+
+_CORE_PREFIX = os.path.realpath(os.path.dirname(__file__))
+
+
+def _held_stack() -> list:
+    stack = getattr(_TLS, "stack", None)
+    if stack is None:
+        stack = _TLS.stack = []
+    return stack
+
+
+class TracingLock:
+    """Lock/RLock wrapper recording held-site -> acquired-site edges."""
+
+    __slots__ = ("_inner", "site", "kind")
+
+    def __init__(self, inner, site: tuple, kind: str):
+        self._inner = inner
+        self.site = site
+        self.kind = kind
+
+    # -- acquisition bookkeeping ------------------------------------------
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._note_acquired()
+        return got
+
+    def _note_acquired(self):
+        stack = _held_stack()
+        first_level = all(lk is not self for lk in stack)
+        if first_level and stack:
+            edge = (stack[-1].site, self.site)
+            with _REG_LOCK:
+                _EDGES[edge] = _EDGES.get(edge, 0) + 1
+        stack.append(self)
+
+    def release(self):
+        self._inner.release()
+        stack = _held_stack()
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] is self:
+                del stack[i]
+                break
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def locked(self):
+        return self._inner.locked()
+
+    # -- threading.Condition protocol -------------------------------------
+    # Condition.wait() releases through these; routing them through our
+    # acquire/release keeps the held stack honest across waits.
+
+    def _release_save(self):
+        inner = self._inner
+        if hasattr(inner, "_release_save"):
+            state = inner._release_save()
+            stack = _held_stack()
+            for i in range(len(stack) - 1, -1, -1):
+                if stack[i] is self:
+                    del stack[i]
+            return state
+        self.release()
+        return None
+
+    def _acquire_restore(self, state):
+        inner = self._inner
+        if hasattr(inner, "_acquire_restore"):
+            inner._acquire_restore(state)
+            _held_stack().append(self)
+            return
+        self.acquire()
+
+    def _is_owned(self):
+        inner = self._inner
+        if hasattr(inner, "_is_owned"):
+            return inner._is_owned()
+        if inner.acquire(False):
+            inner.release()
+            return False
+        return True
+
+    def __repr__(self):
+        return (f"<TracingLock {self.kind} "
+                f"{os.path.basename(self.site[0])}:{self.site[1]} "
+                f"wrapping {self._inner!r}>")
+
+
+def _make_factory(orig, kind: str):
+    def factory():
+        frame = sys._getframe(1)
+        path = os.path.realpath(frame.f_code.co_filename)
+        if not path.startswith(_allowed_prefixes):
+            return orig()
+        site = (path, frame.f_lineno)
+        with _REG_LOCK:
+            _SITES.add(site)
+        return TracingLock(orig(), site, kind)
+    return factory
+
+
+def install(extra_paths: Iterable[str] = ()) -> None:
+    """Patch the lock factories.  ``extra_paths``: additional directory
+    prefixes (e.g. a test file's directory) whose lock creations are
+    traced on top of ``repro/core``."""
+    global _installed, _allowed_prefixes
+    if _installed:
+        raise RuntimeError("locktrace already installed")
+    _allowed_prefixes = tuple(
+        [_CORE_PREFIX] + [os.path.realpath(p) for p in extra_paths])
+    threading.Lock = _make_factory(_ORIG_LOCK, "lock")
+    threading.RLock = _make_factory(_ORIG_RLOCK, "rlock")
+    _installed = True
+
+
+def uninstall() -> None:
+    """Restore the real factories.  Already-created TracingLocks keep
+    working (they wrap real locks) but record no further edges once the
+    caller also :func:`reset`\\ s."""
+    global _installed
+    threading.Lock = _ORIG_LOCK
+    threading.RLock = _ORIG_RLOCK
+    _installed = False
+
+
+def installed() -> bool:
+    return _installed
+
+
+def reset() -> None:
+    with _REG_LOCK:
+        _EDGES.clear()
+        _SITES.clear()
+
+
+def edges() -> dict:
+    """``{(src_site, dst_site): count}`` observed so far."""
+    with _REG_LOCK:
+        return dict(_EDGES)
+
+
+def sites() -> set:
+    with _REG_LOCK:
+        return set(_SITES)
+
+
+def find_cycle(edge_iter) -> Optional[list]:
+    """A cycle ``[n0, n1, ..., n0]`` in the given edge set, or None.
+
+    Works on any hashable node type — raw sites or mapped
+    ``Class.attr`` names."""
+    graph: dict = {}
+    for src, dst in edge_iter:
+        graph.setdefault(src, set()).add(dst)
+        graph.setdefault(dst, set())
+    WHITE, GRAY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in graph}
+    parent: dict = {}
+    for root in sorted(graph, key=repr):
+        if color[root] != WHITE:
+            continue
+        stack = [(root, iter(sorted(graph[root], key=repr)))]
+        color[root] = GRAY
+        while stack:
+            node, it = stack[-1]
+            for succ in it:
+                if color[succ] == WHITE:
+                    color[succ] = GRAY
+                    parent[succ] = node
+                    stack.append((succ,
+                                  iter(sorted(graph[succ], key=repr))))
+                    break
+                if color[succ] == GRAY:
+                    cycle = [succ]
+                    cur = node
+                    while cur != succ:
+                        cycle.append(cur)
+                        cur = parent[cur]
+                    cycle.append(succ)
+                    cycle.reverse()
+                    return cycle
+            else:
+                color[node] = BLACK
+                stack.pop()
+        continue
+    return None

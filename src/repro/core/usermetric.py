@@ -50,6 +50,7 @@ class UserMetric:
         self._sent_batches = 0
         self._dropped_points = 0
         self._failed_flushes = 0
+        self._join_timeouts = 0
         self._stop = threading.Event()
         self._thread = None
         if auto_flush_thread:
@@ -149,6 +150,11 @@ class UserMetric:
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=2 * self.flush_interval_s)
+            if self._thread.is_alive():
+                # a flusher stuck in a hung sink outlives us; count it
+                # so callers reading .stats can tell
+                with self._lock:
+                    self._join_timeouts += 1
         self.flush()
 
     def __enter__(self):
@@ -165,4 +171,5 @@ class UserMetric:
                     "sent_batches": self._sent_batches,
                     "dropped_points": self._dropped_points,
                     "failed_flushes": self._failed_flushes,
+                    "join_timeouts": self._join_timeouts,
                     "buffered": len(self._buf)}

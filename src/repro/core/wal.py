@@ -1132,4 +1132,7 @@ def import_legacy_jsonl(path: str, store: DurableStore) -> dict:
     if pts:
         store.write(pts)
     os.replace(path, path + ".imported")
+    # without this, a crash right here forgets the rename and the next
+    # boot double-imports every legacy point
+    _fsync_dir(os.path.dirname(os.path.abspath(path)))
     return {"points": len(pts), "lines_skipped": skipped}

@@ -1,0 +1,626 @@
+"""Tests for the ``repro.analyzer`` static passes (fixture-based
+known-good / known-bad snippets per pass), the ``lms_lint`` CLI, and
+concurrency regressions for the real lock-discipline violations the
+analyzer found and this PR fixed (jobs.on_end, DashboardAgent._engine,
+HostAgent._emit).
+
+The fixtures are written to tmp_path and analyzed in-process; the
+``durability`` fixtures are named ``wal.py`` because that pass only
+applies to the persistence modules (wal/coldstore/tsdb).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+from repro.analyzer import analyze_paths
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LINT = os.path.join(REPO_ROOT, "scripts", "lms_lint.py")
+
+
+def _analyze(tmp_path, source, name="fixture.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    return analyze_paths([str(p)])
+
+
+def _rules(report, rule):
+    return [f for f in report.findings if f.rule == rule]
+
+
+# --------------------------------------------------------------------------
+# lock-discipline
+# --------------------------------------------------------------------------
+
+
+LOCK_BAD = """
+    import threading
+
+    class Counter:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._items = []
+            self._total = 0
+
+        def add(self, x):
+            with self._lock:
+                self._items.append(x)
+                self._total += 1
+
+        def sneak(self, x):
+            self._items.append(x)
+"""
+
+
+def test_lock_discipline_flags_unlocked_mutation(tmp_path):
+    report = _analyze(tmp_path, LOCK_BAD)
+    findings = _rules(report, "unlocked")
+    assert len(findings) == 1
+    assert "sneak" in findings[0].message
+    assert "_items" in findings[0].message
+    assert not findings[0].suppressed
+
+
+def test_lock_discipline_clean_and_held_method(tmp_path):
+    report = _analyze(tmp_path, """
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._items = []
+
+            def add(self, x):
+                with self._lock:
+                    self._push(x)
+
+            def _push(self, x):
+                # private helper only ever called under the lock: the
+                # held-method fixpoint must exempt it
+                self._items.append(x)
+    """)
+    assert not _rules(report, "unlocked")
+
+
+def test_construction_methods_exempt(tmp_path):
+    report = _analyze(tmp_path, """
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._vals = []
+
+            def read(self):
+                with self._lock:
+                    return list(self._vals)
+    """)
+    assert not _rules(report, "unlocked")
+
+
+# --------------------------------------------------------------------------
+# suppressions
+# --------------------------------------------------------------------------
+
+
+def test_suppression_with_reason_silences(tmp_path):
+    # patch the *second* occurrence (in sneak) — that one carries the
+    # finding
+    src = LOCK_BAD[:LOCK_BAD.rindex("self._items.append(x)")] + (
+        "self._items.append(x)"
+        "  # lms: unlocked(fixture: intentionally racy)\n")
+    report = _analyze(tmp_path, src)
+    findings = _rules(report, "unlocked")
+    assert len(findings) == 1
+    assert findings[0].suppressed
+    assert findings[0].reason == "fixture: intentionally racy"
+    assert not report.unsuppressed()
+
+
+def test_reasonless_suppression_is_a_finding(tmp_path):
+    src = LOCK_BAD[:LOCK_BAD.rindex("self._items.append(x)")] + (
+        "self._items.append(x)  # lms: unlocked()\n")
+    report = _analyze(tmp_path, src)
+    sup = _rules(report, "suppression")
+    assert len(sup) == 1
+    assert not sup[0].suppressed          # never itself suppressible
+    # and the original finding stays unsuppressed too
+    assert any(not f.suppressed for f in _rules(report, "unlocked"))
+
+
+# --------------------------------------------------------------------------
+# lock-order
+# --------------------------------------------------------------------------
+
+
+ORDER_CYCLE = """
+    import threading
+
+    class Left:
+        def __init__(self):
+            self.lock = threading.Lock()
+
+    class Right:
+        def __init__(self):
+            self.lock = threading.Lock()
+
+    class App:
+        def __init__(self):
+            self.left = Left()
+            self.right = Right()
+
+        def forward(self):
+            with self.left.lock:
+                with self.right.lock:
+                    pass
+
+        def backward(self):
+            with self.right.lock:
+                with self.left.lock:
+                    pass
+"""
+
+
+def test_lock_order_detects_seeded_cycle(tmp_path):
+    report = _analyze(tmp_path, ORDER_CYCLE)
+    findings = _rules(report, "lock-order")
+    assert len(findings) == 1
+    msg = findings[0].message
+    assert "cycle" in msg
+    assert "Left.lock" in msg and "Right.lock" in msg
+    # both orders present as edges
+    assert ("Left.lock", "Right.lock") in report.lock_edges
+    assert ("Right.lock", "Left.lock") in report.lock_edges
+
+
+def test_lock_order_consistent_order_is_clean(tmp_path):
+    report = _analyze(tmp_path, ORDER_CYCLE.replace(
+        "with self.right.lock:\n                with self.left.lock:",
+        "with self.left.lock:\n                with self.right.lock:"))
+    assert not _rules(report, "lock-order")
+    assert ("Left.lock", "Right.lock") in report.lock_edges
+    assert ("Right.lock", "Left.lock") not in report.lock_edges
+
+
+def test_lock_order_cycle_via_cross_class_call(tmp_path):
+    # the indirect shape: A holds its lock and calls into B, which
+    # acquires its own lock and calls back into A
+    report = _analyze(tmp_path, """
+        import threading
+
+        class Peer:
+            def __init__(self, other):
+                self._lock = threading.Lock()
+                self.other = other
+
+        class Alpha:
+            def __init__(self, beta: "Beta"):
+                self._lock = threading.Lock()
+                self.beta = beta
+
+            def poke(self):
+                with self._lock:
+                    self.beta.nudge()
+
+            def touch(self):
+                with self._lock:
+                    pass
+
+        class Beta:
+            def __init__(self, alpha: "Alpha"):
+                self._lock = threading.Lock()
+                self.alpha = alpha
+
+            def nudge(self):
+                with self._lock:
+                    pass
+
+            def kick(self):
+                with self._lock:
+                    self.alpha.touch()
+    """)
+    findings = _rules(report, "lock-order")
+    assert len(findings) == 1
+    assert "Alpha._lock" in findings[0].message
+    assert "Beta._lock" in findings[0].message
+
+
+def test_lock_order_suppression_on_edge_site(tmp_path):
+    src = ORDER_CYCLE.replace(
+        "with self.right.lock:\n                with self.left.lock:",
+        "with self.right.lock:\n                "
+        "# lms: lock-order(fixture: benign by construction)\n"
+        "                with self.left.lock:")
+    report = _analyze(tmp_path, src)
+    findings = _rules(report, "lock-order")
+    assert len(findings) == 1
+    assert findings[0].suppressed
+    assert not report.unsuppressed()
+
+
+# --------------------------------------------------------------------------
+# durability (fixtures must be named wal.py — the pass is module-scoped)
+# --------------------------------------------------------------------------
+
+
+def test_durability_flags_unsynced_rename(tmp_path):
+    report = _analyze(tmp_path, """
+        import os
+
+        def publish(path):
+            with open(path + ".tmp", "w") as f:
+                f.write("x")
+            os.replace(path + ".tmp", path)
+    """, name="wal.py")
+    findings = _rules(report, "durability")
+    msgs = " | ".join(f.message for f in findings)
+    assert "directory fsync" in msgs
+    assert "os.fsync of the source" in msgs
+    assert len(findings) == 2
+
+
+def test_durability_clean_publish(tmp_path):
+    report = _analyze(tmp_path, """
+        import os
+
+        def _fsync_dir(d):
+            fd = os.open(d, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
+
+        def publish(path):
+            with open(path + ".tmp", "w") as f:
+                f.write("x")
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(path + ".tmp", path)
+            _fsync_dir(os.path.dirname(path))
+    """, name="wal.py")
+    assert not [f for f in _rules(report, "durability")
+                if "publish" in f.message]
+
+
+def test_durability_ignores_other_modules(tmp_path):
+    report = _analyze(tmp_path, """
+        import os
+
+        def publish(path):
+            os.replace(path + ".tmp", path)
+    """, name="helpers.py")
+    assert not _rules(report, "durability")
+
+
+def test_wal_write_discipline(tmp_path):
+    report = _analyze(tmp_path, """
+        import threading
+
+        class MiniWal:
+            def __init__(self):
+                self.lock = threading.Lock()
+                self._fh = open("/dev/null", "ab")
+
+            def append_bad(self, rec):
+                self._fh.write(rec)
+
+            def append_good(self, rec):
+                with self.lock:
+                    self._fh.write(rec)
+    """, name="wal.py")
+    findings = _rules(report, "durability")
+    assert len(findings) == 1
+    assert "append_bad" in findings[0].message
+    assert "group-commit" in findings[0].message
+
+
+# --------------------------------------------------------------------------
+# thread-lifecycle
+# --------------------------------------------------------------------------
+
+
+def test_thread_lifecycle_flags_unjoined(tmp_path):
+    report = _analyze(tmp_path, """
+        import threading
+
+        class Leaky:
+            def start(self):
+                t = threading.Thread(target=self._run)
+                t.start()
+
+            def _run(self):
+                pass
+    """)
+    findings = _rules(report, "thread")
+    assert len(findings) == 1
+    assert "'t'" in findings[0].message
+
+
+def test_thread_lifecycle_daemon_and_joined_clean(tmp_path):
+    report = _analyze(tmp_path, """
+        import threading
+
+        class Owner:
+            def __init__(self):
+                self._thread = threading.Thread(target=self._run,
+                                                daemon=False)
+                self._thread.start()
+
+            def _run(self):
+                pass
+
+            def close(self):
+                self._stop()
+
+            def _stop(self):
+                # join reached through close() -> _stop(): the teardown
+                # reachability must follow in-class calls
+                self._thread.join(timeout=2.0)
+
+        class Daemonic:
+            def kick(self):
+                t = threading.Thread(target=print, daemon=True)
+                t.start()
+    """)
+    assert not _rules(report, "thread")
+
+
+def test_thread_lifecycle_fire_and_forget(tmp_path):
+    report = _analyze(tmp_path, """
+        import threading
+
+        def kick():
+            threading.Thread(target=print).start()
+    """)
+    findings = _rules(report, "thread")
+    assert len(findings) == 1
+    assert "fire-and-forget" in findings[0].message
+
+
+# --------------------------------------------------------------------------
+# http-surface
+# --------------------------------------------------------------------------
+
+
+def test_http_surface_flags_unbounded_read_and_unguarded_db(tmp_path):
+    report = _analyze(tmp_path, """
+        class Handler:
+            def do_GET(self):
+                name = self.query.get("db", "global")
+                db = self.server.backend.db(name)
+                self._send(200, db.stats())
+
+            def do_POST(self):
+                body = self.rfile.read(
+                    int(self.headers.get("Content-Length", 0)))
+                self._send(200, {})
+    """)
+    findings = _rules(report, "http")
+    msgs = " | ".join(f.message for f in findings)
+    assert "rfile.read" in msgs
+    assert "_known_db" in msgs
+    assert len(findings) == 2
+
+
+def test_http_surface_guarded_and_bounded_clean(tmp_path):
+    report = _analyze(tmp_path, """
+        class Handler:
+            def do_GET(self):
+                name = self.query.get("db", "global")
+                if not self._known_db(name):
+                    self._send(404, {"error": "unknown db"})
+                    return
+                db = self.server.backend.db(name)
+                self._send(200, db.stats())
+
+            def do_POST(self):
+                body = self._body()
+                self._send(200, {})
+
+            def _body(self):
+                return self.rfile.read(100)
+    """)
+    assert not _rules(report, "http")
+
+
+def test_http_surface_guard_does_not_leak_across_branches(tmp_path):
+    # a _known_db in one elif branch must not launder an unguarded
+    # .db() in a *preceding* branch of the same chain
+    report = _analyze(tmp_path, """
+        class Handler:
+            def do_GET(self):
+                if self.path == "/a":
+                    db = self.server.backend.db(self.q["db"])
+                elif self.path == "/b":
+                    if not self._known_db(self.q["db"]):
+                        self._send(404, {})
+                        return
+                    db = self.server.backend.db(self.q["db"])
+    """)
+    findings = _rules(report, "http")
+    assert len(findings) == 1
+
+
+def test_non_handler_classes_ignored(tmp_path):
+    report = _analyze(tmp_path, """
+        class Plain:
+            def fetch(self, name):
+                return self.backend.db(name)
+    """)
+    assert not _rules(report, "http")
+
+
+# --------------------------------------------------------------------------
+# the real tree + the CLI
+# --------------------------------------------------------------------------
+
+
+def test_core_tree_is_clean():
+    report = analyze_paths([os.path.join(REPO_ROOT, "src", "repro",
+                                         "core")])
+    assert report.unsuppressed() == []
+    # the static lock graph exists and is what the race tier joins on
+    assert report.lock_nodes
+    assert report.lock_edges
+    assert report.lock_sites
+
+
+def test_cli_json_output_and_exit_codes(tmp_path):
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "fixture.py").write_text(textwrap.dedent(LOCK_BAD))
+    proc = subprocess.run(
+        [sys.executable, LINT, "--json", str(bad)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    doc = json.loads(proc.stdout)
+    assert doc["version"] == 1
+    assert doc["counts"]["unsuppressed"] == 1
+    assert doc["findings"][0]["rule"] == "unlocked"
+
+    good = tmp_path / "good"
+    good.mkdir()
+    (good / "fixture.py").write_text("x = 1\n")
+    proc = subprocess.run(
+        [sys.executable, LINT, "--json", str(good)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0
+    assert json.loads(proc.stdout)["counts"]["total"] == 0
+
+
+# --------------------------------------------------------------------------
+# concurrency regressions for the violations the analyzer caught
+# --------------------------------------------------------------------------
+
+
+def test_jobs_on_end_registration_races_with_end():
+    # pre-fix: JobRegistry.on_end appended to _end_hooks without the
+    # lock while end() iterated a copy — racing registrations could be
+    # lost or corrupt the list
+    from repro.core.jobs import JobRegistry
+
+    reg = JobRegistry()
+    errors = []
+    N = 200
+
+    def register():
+        try:
+            for i in range(N):
+                reg.on_end(lambda job: None)
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    def churn():
+        try:
+            for i in range(N):
+                reg.start(f"j{i}", "u", ["h0"])
+                reg.end(f"j{i}")
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=register) for _ in range(2)]
+    threads += [threading.Thread(target=churn) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert not errors
+    assert len(reg._end_hooks) == 2 * N
+    # hooks registered before this end must all fire
+    fired = []
+    reg.on_end(lambda job: fired.append(job.job_id))
+    reg.start("last", "u", ["h0"])
+    reg.end("last")
+    assert fired == ["last"]
+
+
+def test_dashboard_engine_lru_concurrent(tmp_path):
+    # pre-fix: the fallback-engine OrderedDict was mutated from
+    # concurrent dashboard renders without a lock (get/move_to_end/
+    # popitem interleavings corrupt the dict)
+    from repro.core.dashboard import DashboardAgent
+
+    class _Db:
+        pass
+
+    agent = DashboardAgent(backend=object(), out_dir=str(tmp_path))
+    errors = []
+
+    def render(seed):
+        try:
+            dbs = [_Db() for _ in range(12)]
+            for r in range(50):
+                db = dbs[(seed + r) % len(dbs)]
+                eng = agent._engine(db)
+                assert eng.backend is db
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=render, args=(i,))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert not errors
+    assert len(agent._engines) <= agent.MAX_FALLBACK_ENGINES
+
+
+def test_host_agent_concurrent_emit_accounting():
+    # pre-fix: _pending / _failed_flushes / _dropped_points were
+    # unguarded across collection ticks and explicit flush() callers
+    from repro.core.host_agent import HostAgent
+
+    class FlakyRouter:
+        def __init__(self):
+            self.lock = threading.Lock()
+            self.received = 0
+            self.calls = 0
+
+        def write(self, points):
+            with self.lock:
+                self.calls += 1
+                if self.calls % 5 == 0:
+                    raise RuntimeError("transient sink failure")
+                self.received += len(points)
+
+    router = FlakyRouter()
+    agent = HostAgent(router, hostname="h0", batch_size=4)
+    errors = []
+    PER_THREAD = 60
+
+    def tick(base):
+        try:
+            for step in range(PER_THREAD):
+                agent.collect_step(step=step, step_time_s=0.001,
+                                   ts=base * PER_THREAD + step)
+                if step % 7 == 0:
+                    try:
+                        agent.flush()
+                    except RuntimeError:
+                        pass            # transient failure: re-buffered
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=tick, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert not errors
+    # drain the re-buffered tail
+    for _ in range(100):
+        try:
+            agent.flush()
+            break
+        except RuntimeError:
+            pass
+    stats = agent.emit_stats
+    emitted = 4 * PER_THREAD
+    assert stats["dropped_points"] == 0
+    assert router.received + stats["pending"] == emitted
+    assert stats["pending"] == 0

@@ -1,0 +1,236 @@
+"""Dynamic lock-order tier (``-m race``).
+
+Two layers:
+
+* unit tests for ``repro.core.locktrace`` itself — edge recording,
+  RLock reentrancy, the threading.Condition protocol, and cycle
+  detection on a seeded A->B / B->A inversion;
+* the static/dynamic cross-check — run a real monitoring stack (WAL +
+  cold tier + sharding + HTTP + binary ingest + continuous analysis)
+  under the tracer, map every observed ``held -> acquired`` site pair to
+  the ``Class.attr`` lock nodes of the ``repro.analyzer`` static graph,
+  and assert the dynamic graph is a **subgraph of the static one**.
+  Combined with the static pass proving that graph acyclic, every lock
+  order the tests actually executed is deadlock-free — and any future
+  code path that acquires locks in an order the analyzer cannot see
+  fails here instead of hanging in production.
+
+See tests/README.md ("Race tier") and docs/ARCHITECTURE.md
+("Invariants & static analysis").
+"""
+
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import MonitoringStack, locktrace
+
+pytestmark = pytest.mark.race
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+CORE_DIR = os.path.join(os.path.dirname(TESTS_DIR), "src", "repro",
+                        "core")
+
+
+@pytest.fixture
+def tracer():
+    """Install the tracer with this test file's directory allowed, so
+    locks created in test bodies are traced too."""
+    locktrace.reset()
+    locktrace.install(extra_paths=[TESTS_DIR])
+    try:
+        yield locktrace
+    finally:
+        locktrace.uninstall()
+        locktrace.reset()
+
+
+# --------------------------------------------------------------------------
+# locktrace unit tests
+# --------------------------------------------------------------------------
+
+
+def test_nested_acquire_records_edge(tracer):
+    a = threading.Lock()
+    b = threading.Lock()
+    assert isinstance(a, locktrace.TracingLock)
+    with a:
+        with b:
+            pass
+    assert tracer.edges().get((a.site, b.site)) == 1
+    # sequential (non-nested) acquisition records nothing
+    with a:
+        pass
+    with b:
+        pass
+    assert (b.site, a.site) not in tracer.edges()
+
+
+def test_rlock_reacquire_records_no_self_edge(tracer):
+    r = threading.RLock()
+    with r:
+        with r:                       # reentrant: no edge
+            pass
+    assert all(r.site not in e for e in tracer.edges())
+
+
+def test_release_out_of_order_keeps_stack_honest(tracer):
+    # one per line: a creation *site* is (file, line), shared sites
+    # would collapse the three locks into one node
+    a = threading.Lock()
+    b = threading.Lock()
+    c = threading.Lock()
+    a.acquire()
+    b.acquire()
+    a.release()                        # hand-over-hand: a out, b stays
+    c.acquire()
+    b.release()
+    c.release()
+    e = tracer.edges()
+    assert (a.site, b.site) in e
+    assert (b.site, c.site) in e
+    assert (a.site, c.site) not in e   # a was already released
+
+
+def test_condition_wait_releases_on_stack(tracer):
+    cv = threading.Condition(threading.Lock())
+    other = threading.Lock()
+    assert isinstance(cv._lock, locktrace.TracingLock)
+    done = []
+
+    def waiter():
+        with cv:
+            cv.wait(timeout=5)
+            with other:                # still holding cv after wake-up
+                done.append(1)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.1)
+    with cv:
+        cv.notify_all()
+    t.join(5)
+    assert done == [1]
+    e = tracer.edges()
+    assert (cv._lock.site, other.site) in e
+    # wait() released the cv through the wrapper: had the stack gone
+    # stale, the *main* thread's cv acquire (under nothing) or the
+    # waiter's other-acquire would have minted a reversed edge
+    assert (other.site, cv._lock.site) not in e
+
+
+def test_find_cycle_detects_seeded_inversion(tracer):
+    a = threading.Lock()
+    b = threading.Lock()
+    with a:
+        with b:
+            pass
+    with b:
+        with a:                        # the classic AB/BA inversion
+            pass
+    cyc = locktrace.find_cycle(tracer.edges())
+    assert cyc is not None
+    assert cyc[0] == cyc[-1]
+    assert {a.site, b.site} <= set(cyc)
+
+
+def test_uninstall_restores_real_factories():
+    assert not locktrace.installed()
+    lk = threading.Lock()
+    assert not isinstance(lk, locktrace.TracingLock)
+
+
+# --------------------------------------------------------------------------
+# static/dynamic cross-check on the real stack
+# --------------------------------------------------------------------------
+
+
+def _drive_stack(tmp_path):
+    """A bounded workload touching every locking subsystem: WAL-backed
+    sharded writes, cold tier, jobs, host agents, usermetric, HTTP
+    queries, binary ingest, analysis ticks, snapshot, recovery."""
+    stack = MonitoringStack(
+        out_dir=str(tmp_path / "dash"),
+        persist_dir=str(tmp_path / "wal"), fsync="batch",
+        serve_http=True, serve_ingest=True, shards=2, cold_tier=True)
+    try:
+        hosts = ["h0", "h1"]
+        with stack.job("race-job", user="u", hosts=hosts) as job:
+            agents = [stack.host_agent(h) for h in hosts]
+            um = stack.usermetric(host=hosts[0])
+
+            def worker(agent, base):
+                for step in range(12):
+                    agent.collect_step(step=step,
+                                       step_time_s=0.01 * (base + 1))
+                agent.flush()
+
+            threads = [threading.Thread(target=worker, args=(a, i))
+                       for i, a in enumerate(agents)]
+            for t in threads:
+                t.start()
+            for i in range(20):
+                um.metric("queue_depth", float(i))
+            um.flush()
+            for t in threads:
+                t.join(10)
+            with stack.binary_sink() as sink:
+                from repro.core import Point, now_ns
+                sink.write([Point("binary_m", {"hostname": "h0"},
+                                  {"value": float(i)}, now_ns())
+                            for i in range(8)])
+            stack.findings()                       # synchronous sweep
+            import urllib.request
+            for path in ("/query?m=hpm&field=step_time_s",
+                         "/meta?what=measurements", "/alerts",
+                         "/dbs", "/meta?what=persistence"):
+                with urllib.request.urlopen(stack.http.url + path,
+                                            timeout=10) as resp:
+                    assert resp.status == 200
+            stack.dashboards.build_dashboard(job)
+        stack.backend.snapshot()
+        stack.backend.persistence_stats()
+        um.close()
+    finally:
+        stack.close()
+
+
+def test_stack_dynamic_order_is_subgraph_of_static(tmp_path):
+    from repro.analyzer import analyze_paths
+
+    report = analyze_paths([CORE_DIR])
+    assert not [f for f in report.by_rule("lock-order")
+                if not f.suppressed], \
+        "static lock graph must be acyclic before the dynamic check"
+    static_edges = set(report.lock_edges)
+    site_map = report.lock_sites
+
+    locktrace.reset()
+    locktrace.install()
+    try:
+        _drive_stack(tmp_path)
+    finally:
+        locktrace.uninstall()
+    dyn = locktrace.edges()
+
+    mapped = set()
+    for (src, dst), _count in dyn.items():
+        a = site_map.get(src)
+        b = site_map.get(dst)
+        if a is None or b is None or a == b:
+            # unmapped: a lock the analyzer does not model (local/
+            # non-self); same-node: distinct instances of one class,
+            # instance-level ordering the static collapse already
+            # treats as a single node
+            continue
+        mapped.add((a, b))
+
+    assert mapped, "workload failed to exercise any nested core locking"
+    extras = mapped - static_edges
+    assert not extras, (
+        "dynamic lock orders missing from the static graph — teach the "
+        f"analyzer or fix the code: {sorted(extras)}")
+    # subgraph of an acyclic graph; belt-and-braces on the union
+    assert locktrace.find_cycle(mapped | static_edges) is None
