@@ -660,6 +660,93 @@ def bench_cold_tier(n=120_000, hosts=8, batch=500):
              f"{n} pts")]
 
 
+def bench_quantile_sketch(n=120_000, hosts=8, batch=500, reps=4):
+    """ISSUE 9 acceptance: first-class quantiles from the rollup tiers.
+
+    Query side: windowed p95 served from the sketch-carrying rollup
+    windows vs the pre-sketch approach (full raw rescan + sorted
+    nearest-rank percentile per window) at >= 100k stored points.
+    Ingest side: the batched write path with sketches opted in vs the
+    scalar-only default — paired rounds, median ratio (same protocol as
+    bench_wal_ingest).  Bar: sketched ingest keeps >= 90% of
+    scalar-only throughput.
+
+    The point shape mirrors a LIKWID HPM sample: six derived-metric
+    fields per point, of which the two tail-sensitive ones (mfu, flops)
+    opt into sketches — ``sketch_fields`` is per-field opt-in precisely
+    so fleets pay the sketch cost only where quantiles matter."""
+    import math
+    import statistics
+
+    from repro.core import Database, MetricsRouter, RollupConfig, TSDBServer
+
+    cfg = RollupConfig(sketch_fields={"hpm": ("mfu", "flops")})
+    pts = [Point("hpm", {"hostname": f"h{i % hosts}", "jobid": "j"},
+                 {"mfu": 0.2 + (i % 100) / 500.0,
+                  "flops": float(50 + i % 400),
+                  "membw": float(100 + (i * 7) % 150),
+                  "clock": 2.4 + (i % 5) / 10.0,
+                  "power": 300.0 + (i % 40),
+                  "ipc": 0.5 + (i % 30) / 20.0},
+                 i * 1_000_000)
+           for i in range(n)]
+    db = Database("bench", cfg)
+    for i in range(0, n, 1000):
+        db.write(pts[i:i + 1000])
+    assert db.stored_points() >= 100_000
+    window = 10 * 10**9
+    q = 20
+
+    def run_raw_percentile():
+        # what a p95 cost before sketches: rescan every raw point, sort
+        # each window, take the nearest-rank element
+        for _ in range(q):
+            out = {}
+            for s in db.select("hpm", ["mfu"]):
+                g = s.tags.get("hostname", "")
+                for t, v in zip(s.times, s.values.get("mfu", ())):
+                    out.setdefault(g, {}).setdefault(
+                        t - t % window, []).append(v)
+            for g, wins in out.items():
+                for w0, vals in wins.items():
+                    vals.sort()
+                    wins[w0] = vals[min(len(vals) - 1,
+                                        max(0, math.ceil(0.95 * len(vals))
+                                            - 1))]
+
+    def run_sketch():
+        for _ in range(q):
+            db.aggregate("hpm", "mfu", agg="p95", window_ns=window,
+                         group_by_tag="hostname", use_rollups=True)
+
+    us_raw = _time(run_raw_percentile, q, reps=2)
+    us_sk = _time(run_sketch, q, reps=2)
+    out = [("quantile_raw_percentile", us_raw, f"{n} pts rescanned+sorted"),
+           ("quantile_sketch_rollup", us_sk,
+            f"{us_raw / us_sk:.1f}x vs raw-rescan percentile")]
+    # ingest cost of carrying sketches: paired rounds, median ratio
+    wall = {"scalar": [], "sketched": []}
+    for rep in range(reps + 1):             # round 0 = warmup
+        for label, rc in (("scalar", RollupConfig()), ("sketched", cfg)):
+            router = MetricsRouter(TSDBServer(rollup_config=rc))
+            router.job_start("j", "alice", [f"h{i}" for i in range(hosts)])
+            t0 = time.perf_counter()
+            for i in range(0, n, batch):
+                router.write(pts[i:i + batch])
+            if rep:
+                wall[label].append(time.perf_counter() - t0)
+    for label in ("scalar", "sketched"):
+        best = min(wall[label])
+        out.append((f"quantile_ingest_{label}", best / n * 1e6,
+                    f"{n / best:.0f} pts/s"))
+    ratio = statistics.median(s / k for s, k in
+                              zip(wall["scalar"], wall["sketched"]))
+    out.append(("quantile_ingest_retention", min(wall["sketched"]) / n * 1e6,
+                f"{ratio * 100:.0f}% of scalar-only ingest throughput "
+                "(median paired round; target >=90%)"))
+    return out
+
+
 def bench_detection(n=100_000):
     """Fig. 4 rule evaluation: offline series scan + streaming analyzer."""
     times = [i * 10**9 for i in range(n)]
@@ -805,7 +892,7 @@ def bench_monitoring_overhead(steps=30):
 ALL = [bench_line_protocol, bench_ingest, bench_batched_write_path,
        bench_sharded_write_path, bench_federated_query, bench_wire_ingest,
        bench_binary_ingest, bench_wal_ingest, bench_router_tagging,
-       bench_rollup_query,
+       bench_rollup_query, bench_quantile_sketch,
        bench_query_engine, bench_cold_tier, bench_detection,
        bench_analysis_overhead,
        bench_dashboard, bench_monitoring_overhead]

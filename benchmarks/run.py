@@ -2,7 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV for every LMS benchmark (one per
 paper claim — see bench_lms), then the dry-run roofline summary if the
-dry-run artifacts exist.
+dry-run artifacts exist.  Pass bench function names as arguments to run
+a subset (e.g. ``python -m benchmarks.run bench_quantile_sketch``).
 """
 
 from __future__ import annotations
@@ -15,8 +16,13 @@ def main() -> None:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     from benchmarks import bench_lms, roofline
 
+    only = set(sys.argv[1:])
+    benches = [b for b in bench_lms.ALL if not only or b.__name__ in only]
+    if only and not benches:
+        raise SystemExit(f"no benchmark matches {sorted(only)}")
+
     print("name,us_per_call,derived")
-    for bench in bench_lms.ALL:
+    for bench in benches:
         for name, us, derived in bench():
             print(f"{name},{us:.2f},{derived}")
             sys.stdout.flush()

@@ -4,20 +4,22 @@
 # that fails to import takes its whole file's tests with it silently),
 # the fast unit tier under a timeout, the bounded stress/property tier,
 # the bounded crash-injection tier (SIGKILL a writer subprocess
-# mid-write, recover, check invariants), then the dynamic race tier
+# mid-write, recover, check invariants), the dynamic race tier
 # (run the stack under repro.core.locktrace and cross-check observed
-# lock orders against the static lock graph).  See tests/README.md.
+# lock orders against the static lock graph), then the quantile-sketch
+# benchmark (rollup-served p95 vs raw rescan + the >=90% sketched-ingest
+# retention bar, printed for the reviewer).  See tests/README.md.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "[1/6] invariant analyzer (scripts/lms_lint.py src/repro/core)"
+echo "[1/7] invariant analyzer (scripts/lms_lint.py src/repro/core)"
 python scripts/lms_lint.py src/repro/core
 
-echo "[2/6] collection gate (pytest --collect-only)"
+echo "[2/7] collection gate (pytest --collect-only)"
 python -m pytest --collect-only -q tests/ > /dev/null
 
-echo "[3/6] fast unit tier (timeout ${CI_FAST_TIMEOUT:-600}s)"
+echo "[3/7] fast unit tier (timeout ${CI_FAST_TIMEOUT:-600}s)"
 timeout "${CI_FAST_TIMEOUT:-600}" python -m pytest -q \
     -m "not stress and not crash and not race" \
     tests/test_line_protocol.py \
@@ -33,22 +35,31 @@ timeout "${CI_FAST_TIMEOUT:-600}" python -m pytest -q \
     tests/test_analysis.py \
     tests/test_analysis_engine.py \
     tests/test_coldstore.py \
-    tests/test_analyzer.py
+    tests/test_analyzer.py \
+    tests/test_quantile_sketch.py
 
-echo "[4/6] stress/property tier (bounded; timeout ${CI_STRESS_TIMEOUT:-600}s)"
+echo "[4/7] stress/property tier (bounded; timeout ${CI_STRESS_TIMEOUT:-600}s)"
 # Bounded example counts keep CI deterministic-ish and quick; raise the
 # bounds locally to soak (LMS_STRESS_SCALE=10 LMS_PROPERTY_EXAMPLES=500).
 LMS_STRESS_SCALE="${LMS_STRESS_SCALE:-1}" \
 LMS_PROPERTY_EXAMPLES="${LMS_PROPERTY_EXAMPLES:-30}" \
 timeout "${CI_STRESS_TIMEOUT:-600}" python -m pytest -q -m stress tests/
 
-echo "[5/6] crash-injection tier (bounded; timeout ${CI_CRASH_TIMEOUT:-300}s)"
+echo "[5/7] crash-injection tier (bounded; timeout ${CI_CRASH_TIMEOUT:-300}s)"
 # Real SIGKILLs against a WAL writer subprocess; raise LMS_CRASH_ITERS
 # locally to soak (LMS_CRASH_ITERS=20).
 LMS_CRASH_ITERS="${LMS_CRASH_ITERS:-3}" \
 timeout "${CI_CRASH_TIMEOUT:-300}" python -m pytest -q -m crash tests/
 
-echo "[6/6] race tier (timeout ${CI_RACE_TIMEOUT:-300}s)"
+echo "[6/7] race tier (timeout ${CI_RACE_TIMEOUT:-300}s)"
 timeout "${CI_RACE_TIMEOUT:-300}" python -m pytest -q -m race tests/
+
+echo "[7/7] quantile-sketch benchmark (timeout ${CI_BENCH_TIMEOUT:-600}s)"
+# Prints the rollup-served p95 vs raw-rescan ratio and the sketched
+# ingest retention (target >=90% of scalar-only ingest) for the
+# reviewer; timing bars are advisory on shared CI hardware, so the gate
+# is that the benchmark runs to completion, not the ratio itself.
+timeout "${CI_BENCH_TIMEOUT:-600}" python -m benchmarks.run \
+    bench_quantile_sketch
 
 echo "ci_check: OK"

@@ -31,8 +31,12 @@ from repro.core.perf_groups import (GROUPS, HBM_BW, ICI_BW, PEAK_FLOPS,
                                     register_group)
 from repro.core.query import (QueryEngine, QueryResult, QuerySpec,
                               derived_rollup_series, make_plan)
-from repro.core.rollup import (DEFAULT_TIERS_NS, ROLLUP_AGGS, RollupConfig,
-                               SeriesRollups, WindowAgg)
+from repro.core.fingerprint import (FINGERPRINT_KIND, fingerprint_outliers,
+                                    fingerprint_point, job_fingerprint,
+                                    load_fingerprints)
+from repro.core.rollup import (DEFAULT_TIERS_NS, QUANTILE_AGGS, ROLLUP_AGGS,
+                               QuantileSketch, RollupConfig, SeriesRollups,
+                               SketchAgg, WindowAgg, known_agg, quantile_of)
 from repro.core.coldstore import ColdStore, ColdView
 from repro.core.httpd import HttpQueryClient
 from repro.core.ingest import BinarySink, IngestServer
@@ -51,15 +55,17 @@ __all__ = [
     "HttpQueryClient", "HttpSink", "ICI_BW", "JobInfo", "JobRegistry",
     "LMSHttpServer", "MetricsRouter", "MonitoringStack", "PEAK_FLOPS",
     "PerfGroup", "Point", "QueryEngine", "QueryResult", "QuerySpec",
+    "FINGERPRINT_KIND", "QUANTILE_AGGS", "QuantileSketch",
     "ROLLUP_AGGS", "RollupConfig",
-    "RooflineAnalyzer", "RooflineResult", "SeriesRollups",
+    "RooflineAnalyzer", "RooflineResult", "SeriesRollups", "SketchAgg",
     "ShardedDatabase", "StreamAnalyzer", "TSDBServer", "ThresholdRule",
     "UserMetric", "WindowAgg", "classify_job", "compile_formula",
     "decode_batch", "decode_line", "default_rules", "derive_all",
     "derived_rollup_series", "encode_batch", "encode_point",
-    "evaluate_rules_on_db", "formula_for", "load_alerts",
-    "load_job_report", "make_plan", "now_ns", "parse_group",
-    "register_group", "shard_index",
+    "evaluate_rules_on_db", "fingerprint_outliers", "fingerprint_point",
+    "formula_for", "job_fingerprint", "known_agg", "load_alerts",
+    "load_fingerprints", "load_job_report", "make_plan", "now_ns",
+    "parse_group", "quantile_of", "register_group", "shard_index",
 ]
 
 
@@ -82,13 +88,18 @@ class MonitoringStack:
                  persist_dir: Optional[str] = None, fsync: str = "batch",
                  recover: bool = True,
                  serve_http: bool = False, serve_ingest: bool = False,
-                 shards: int = 1, cold_tier: bool = False):
+                 shards: int = 1, cold_tier: bool = False,
+                 rollup_config: Optional[RollupConfig] = RollupConfig()):
         # cold_tier=True (requires persist_dir): retention seals expired
         # raw history into compressed immutable chunks instead of
         # dropping it — months of raw data at a fraction of the bytes,
         # still answering every query (repro.core.coldstore)
+        # rollup_config: e.g. RollupConfig(sketch_fields={"hpm": "*"})
+        # opts fields into quantile sketches so p50/p95/p99 are served
+        # from the rollup tiers; the default carries no sketches
         self.backend = TSDBServer(persist_dir=persist_dir, shards=shards,
-                                  fsync=fsync, cold=cold_tier)
+                                  fsync=fsync, cold=cold_tier,
+                                  rollup_config=rollup_config)
         # crash-safe durability: a restarted stack keeps serving the job
         # histories it had already collected (repro.core.wal)
         self.recovery_stats = self.backend.load_persisted() \

@@ -64,6 +64,8 @@ import warnings
 from dataclasses import dataclass
 from typing import Callable, Iterable, Optional
 
+from repro.core.fingerprint import (fingerprint_outliers, fingerprint_point,
+                                    job_fingerprint, load_fingerprints)
 from repro.core.line_protocol import Point, now_ns
 from repro.core.perf_groups import HBM_BW, ICI_BW, PEAK_FLOPS
 from repro.core.tsdb import _tags_key
@@ -627,7 +629,10 @@ class AnalysisEngine:
                  extend_persist_interval_s: float = 60.0,
                  tick_interval_s: float = 0.25,
                  auto_tick: bool = True,
-                 max_resolved_alerts: int = 10_000):
+                 max_resolved_alerts: int = 10_000,
+                 fingerprints: bool = True,
+                 fingerprint_sigma: float = 3.0,
+                 fingerprint_min_runs: int = 3):
         self.rules = rules if rules is not None else default_rules()
         self.on_finding = on_finding
         self.backend = backend
@@ -646,7 +651,11 @@ class AnalysisEngine:
         self._lock = threading.RLock()
         self.stats = {"ticks": 0, "windows_evaluated": 0,
                       "alerts_fired": 0, "alerts_resolved": 0,
-                      "reports_written": 0, "alerts_recovered": 0}
+                      "reports_written": 0, "alerts_recovered": 0,
+                      "fingerprints_written": 0, "fingerprint_outliers": 0}
+        self.fingerprints = bool(fingerprints)
+        self.fingerprint_sigma = float(fingerprint_sigma)
+        self.fingerprint_min_runs = int(fingerprint_min_runs)
         self._max_resolved = int(max_resolved_alerts)
         # background ticker: publishes mark dirty, the worker coalesces
         self._auto_tick = bool(auto_tick)
@@ -971,7 +980,54 @@ class AnalysisEngine:
                          "alerts_total": float(len(report["alerts"]))},
                         end_ns))
                     self.stats["reports_written"] += 1
+                self._fingerprint_job(db, job, jobid, end_ns, out, fired)
         self._emit(out, fired)
+
+    def _fingerprint_job(self, db, job, jobid: str, end_ns: int,
+                         out: list, fired: list):
+        """Fingerprint the finished job and apply the fleet rule: compare
+        its p95 quantile vector against its own past runs (same family —
+        jobname tag, else user) and flag >sigma deviations through the
+        normal alert surface.  History is read before this job's point is
+        emitted, so the new run never pollutes its own baseline.  Called
+        under self._lock; failures are counted, never allowed to block job
+        teardown."""
+        if not self.fingerprints:
+            return
+        try:
+            fp = job_fingerprint(db, jobid, self.report_measurements)
+            if not fp:
+                return
+            tags = getattr(job, "tags", None) or {}
+            family = tags.get("jobname") or getattr(job, "user", "") or ""
+            history = [e["fingerprint"] for e in load_fingerprints(db)
+                       if e["family"] == family and e["jobid"] != jobid]
+            out.append(fingerprint_point(jobid, family, fp, end_ns))
+            self.stats["fingerprints_written"] += 1
+            outliers = fingerprint_outliers(
+                fp, history, sigma=self.fingerprint_sigma,
+                min_runs=self.fingerprint_min_runs)
+            if not outliers:
+                return
+            ev = "; ".join(
+                f"{o['metric']} {o['quantile']}={o['value']:.6g} vs "
+                f"fleet mean {o['mean']:.6g} "
+                f"(z={o['z']:.1f}, {o['runs']} past runs)"
+                for o in outliers[:3])
+            a = Alert(rule="fingerprint_outlier", severity="warning",
+                      host="", jobid=jobid, start_ns=end_ns,
+                      last_ns=end_ns, end_ns=end_ns, state="resolved",
+                      evidence=ev)
+            self.alerts.append(a)
+            self._trim_alerts()
+            self.stats["alerts_fired"] += 1
+            self.stats["alerts_resolved"] += 1
+            self.stats["fingerprint_outliers"] += 1
+            out.append(self._alert_point(a, "resolved", end_ns))
+            fired.append(a)
+        except Exception:   # noqa: BLE001 - teardown must complete
+            self.stats["fingerprint_errors"] = \
+                self.stats.get("fingerprint_errors", 0) + 1
 
     # -- job footprint reports ------------------------------------------------
 

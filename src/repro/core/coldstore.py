@@ -9,6 +9,9 @@ configured (``TSDBServer(cold=True)``), the retention sweep instead
 *seals* the expired column prefixes into time-partitioned immutable
 chunks, so raw history and rollups both survive — and the query layer
 answers byte-identically whether the points are resident or sealed.
+Quantile queries too: a cold scan rebuilds per-window aggregates through
+``RollupConfig.new_agg``, so p50/p95/p99 over sealed history carry the
+same sketches (and the same rank-error bound) as the hot rollup path.
 
 Chunk file format (``cold/chunk-<seq>.chk``)::
 

@@ -1,0 +1,200 @@
+"""Per-job performance fingerprints — windowed metric quantiles per job.
+
+PerSyst (PAPERS.md, arxiv 2009.06061) aggregates site-wide performance
+properties via *quantiles* precisely because means hide pathological
+tails; the MPCDF job-monitoring system builds its per-job analysis on the
+same insight.  This module derives that statistical foundation for LMS: a
+job's *fingerprint* is a vector of per-metric quantiles (p50/p95/p99 by
+default) computed over the job's windowed rollup data, persisted as an
+``analysis``-measurement point so a fleet of past runs is queryable like
+any other series.
+
+How quantiles are obtained, in preference order:
+
+* **Sketch-exact** — fields opted into ``RollupConfig(sketch_fields=...)``
+  carry a mergeable :class:`repro.core.rollup.QuantileSketch` per rollup
+  window; merging every window of the job yields quantiles over *all raw
+  points* of the job (within the sketch's relative-accuracy bound), even
+  after retention dropped the raw points, and identically across shards
+  and HTTP federation (sketch merge is exact).
+* **Window-mean fallback** — unsketched fields fall back to the exact
+  nearest-rank quantile over the job's per-window means: deterministic
+  and retention-proof, but a distribution of window means rather than of
+  raw points (documented coarsening, not an error).
+* **Raw fallback** — rollup-disabled databases compute exact quantiles
+  from a raw scan.
+
+The fleet rule (``AnalysisEngine``): a finished job whose ``p95``
+fingerprint sits more than ``sigma`` (default 3) standard deviations from
+the distribution of its *own past runs* (same family: jobname tag, else
+user) is flagged through the normal alert surface (``/alerts``), see
+:func:`fingerprint_outliers`.
+
+Everything here is pure functions over the Database query surface — no
+locks, no threads; the caller (``AnalysisEngine``) provides exclusion.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from typing import Iterable, Optional
+
+from repro.core.line_protocol import Point
+from repro.core.rollup import QUANTILE_AGGS, quantile_of
+
+# tag value marking fingerprint points within the analysis measurement
+FINGERPRINT_KIND = "job_fingerprint"
+
+# default analysis-series measurement name (analysis.ANALYSIS_MEASUREMENT;
+# duplicated literal — analysis.py imports this module, not vice versa)
+_ANALYSIS_MEASUREMENT = "analysis"
+
+
+def _exact_quantile(vals: list, q: float) -> Optional[float]:
+    """Exact nearest-rank percentile (rank ``ceil(q*n) - 1``, 0-based) —
+    the same convention ``QuantileSketch.quantile`` approximates."""
+    if not vals:
+        return None
+    s = sorted(vals)
+    return s[min(len(s) - 1, max(0, math.ceil(q * len(s)) - 1))]
+
+
+def _numeric(vals: Iterable) -> list:
+    return [v for v in vals
+            if isinstance(v, (int, float)) and not isinstance(v, bool)
+            and v == v]
+
+
+def job_fingerprint(db, jobid: str,
+                    measurements: tuple = ("hpm", "system"),
+                    quantiles: tuple = QUANTILE_AGGS) -> dict:
+    """``{metric: {"p50": v, "p95": v, "p99": v}}`` for one job.
+
+    Works against any Database-shaped backend (local, sharded,
+    ``FederatedQuery`` — the partials it reads already federate).  The
+    first measurement claims a duplicated field name, like the engine's
+    job reports.  Metrics with no numeric data are omitted; an empty dict
+    means "no fingerprintable data".
+    """
+    tags = {"jobid": jobid}
+    rollups = getattr(db, "rollup_config", None) is not None
+    fp: dict = {}
+    for meas in measurements:
+        for fieldname in db.field_keys(meas):
+            if fieldname in fp:
+                continue
+            if rollups:
+                parts = db.rollup_window_partials(meas, fieldname,
+                                                  tags=tags)
+                total = None        # whole-job merged aggregate
+                means: list = []    # per-window means (fallback basis)
+                for wins in parts.values():
+                    for wa in wins.values():
+                        if not wa.count:
+                            continue
+                        if total is None:
+                            total = wa.fresh()
+                        total.merge(wa)
+                        mv = wa.value("mean")
+                        if mv is not None:
+                            means.append(mv)
+                if total is None:
+                    continue
+                qs = {}
+                for qname in quantiles:
+                    v = total.value(qname)      # sketch answer, or None
+                    if v is None:
+                        v = _exact_quantile(means, quantile_of(qname))
+                    if v is not None:
+                        qs[qname] = v
+                if qs:
+                    fp[fieldname] = qs
+            else:
+                vals: list = []
+                for s in db.select(meas, [fieldname], tags):
+                    vals.extend(_numeric(s.values.get(fieldname) or ()))
+                if vals:
+                    fp[fieldname] = {
+                        qn: _exact_quantile(vals, quantile_of(qn))
+                        for qn in quantiles}
+    return fp
+
+
+def fingerprint_point(jobid: str, family: str, fp: dict, ts: int,
+                      measurement: str = _ANALYSIS_MEASUREMENT) -> Point:
+    """The persisted form: one analysis-measurement point per finished
+    job, tagged for fleet queries (kind/jobid/family), carrying the whole
+    vector as a JSON blob plus one flattened numeric field per
+    (metric, quantile) — ``"<metric>.<quantile>"`` (dots, not colons:
+    line-protocol field names must stay separator-clean)."""
+    tags = {"kind": FINGERPRINT_KIND, "jobid": jobid}
+    if family:
+        tags["family"] = family
+    fields: dict = {"fingerprint": json.dumps(fp, sort_keys=True)}
+    for metric, qs in sorted(fp.items()):
+        for qname, v in sorted(qs.items()):
+            fields[f"{metric}.{qname}"] = float(v)
+    return Point(measurement, tags, fields, ts)
+
+
+def load_fingerprints(db, *, family: Optional[str] = None,
+                      jobid: Optional[str] = None,
+                      measurement: str = _ANALYSIS_MEASUREMENT) -> list:
+    """Past-run fingerprints, oldest first:
+    ``[{"jobid", "family", "ts", "fingerprint"}]``."""
+    tags = {"kind": FINGERPRINT_KIND}
+    if family:
+        tags["family"] = family
+    if jobid:
+        tags["jobid"] = jobid
+    out = []
+    for s in db.select(measurement, ["fingerprint"], tags):
+        col = s.values.get("fingerprint") or ()
+        for t, v in zip(s.times, col):
+            if not isinstance(v, str):
+                continue
+            try:
+                fp = json.loads(v)
+            except ValueError:
+                continue
+            out.append({"jobid": s.tags.get("jobid", ""),
+                        "family": s.tags.get("family", ""),
+                        "ts": t, "fingerprint": fp})
+    out.sort(key=lambda e: (e["ts"], e["jobid"]))
+    return out
+
+
+def fingerprint_outliers(fp: dict, history: list, *, sigma: float = 3.0,
+                         min_runs: int = 3, quantile: str = "p95") -> list:
+    """The fleet rule: metrics whose ``quantile`` value sits more than
+    ``sigma`` standard deviations from the job's own past runs.
+
+    ``history`` is a list of past fingerprint dicts (same family, this
+    job excluded).  A metric participates only with ``min_runs`` past
+    observations — a first or second run has no distribution to deviate
+    from.  The deviation scale is floored (relative 1e-9 of the mean) so
+    float jitter between byte-similar runs can never fire the rule on a
+    zero-variance history."""
+    out = []
+    for metric, qs in sorted(fp.items()):
+        v = qs.get(quantile)
+        if not isinstance(v, (int, float)):
+            continue
+        past = []
+        for h in history:
+            hv = h.get(metric)
+            hv = hv.get(quantile) if isinstance(hv, dict) else None
+            if isinstance(hv, (int, float)) and not isinstance(hv, bool):
+                past.append(hv)
+        if len(past) < min_runs:
+            continue
+        mu = sum(past) / len(past)
+        sd = math.sqrt(sum((p - mu) ** 2 for p in past) / len(past))
+        floor = max(sd, abs(mu) * 1e-9, 1e-12)
+        z = abs(v - mu) / floor
+        if z > sigma:
+            out.append({"metric": metric, "quantile": quantile,
+                        "value": v, "mean": mu, "sd": sd,
+                        "z": z, "runs": len(past)})
+    return out

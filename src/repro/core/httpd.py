@@ -87,6 +87,7 @@ from typing import Optional
 from repro.core.analysis import Alert, load_alerts, load_job_report
 from repro.core.line_protocol import Point, encode_batch
 from repro.core.router import MetricsRouter
+from repro.core.rollup import ROLLUP_AGGS, SCALAR_AGGS, quantile_of
 from repro.core.shard import (decode_partials, encode_partials,
                               finalize_scalar, finalize_windowed)
 from repro.core.tsdb import Series
@@ -255,7 +256,25 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
                 cfg = getattr(db, "rollup_config", None)
                 self._send(200, {"rollup_config": None if cfg is None else {
                     "tiers_ns": list(cfg.tiers_ns),
-                    "max_age_ns": cfg.max_age_ns}})
+                    "max_age_ns": cfg.max_age_ns,
+                    "sketch_fields": cfg.sketch_field_map(),
+                    "sketch_rel_acc": cfg.sketch_rel_acc,
+                    "sketch_max_bins": cfg.sketch_max_bins}})
+            elif what == "rollups":
+                # the aggregate family this instance serves: scalar aggs,
+                # tier layout, and per-measurement quantile-sketch opt-in
+                # (gamma/bin cap) — what HttpQueryClient validates a
+                # requested agg against before paying a round trip
+                cfg = getattr(db, "rollup_config", None)
+                self._send(200, {"rollups": {
+                    "aggs": list(ROLLUP_AGGS),
+                    "quantiles": "pNN",
+                    "tiers_ns": list(cfg.tiers_ns) if cfg else [],
+                    "sketch": None if cfg is None else {
+                        "fields": cfg.sketch_field_map(),
+                        "rel_acc": cfg.sketch_rel_acc,
+                        "gamma": cfg.sketch_gamma,
+                        "max_bins": cfg.sketch_max_bins}}})
             elif what == "point_count":
                 self._send(200, {"count": db.point_count()})
             elif what == "stored_points":
@@ -521,19 +540,60 @@ class HttpQueryClient:
         self.db = db
         self.timeout_s = timeout_s
         self._rollup_config = _UNSET
+        self._rollups_meta = _UNSET
 
     @property
     def rollup_config(self):
         """The remote database's rollup layout (fetched once, cached) —
         lets rollup-aware readers (dashboards, rule evaluation) treat a
-        remote instance exactly like a local database."""
+        remote instance exactly like a local database.  Sketch keys are
+        read with ``.get`` so older servers (plain tiers/max-age form)
+        still reconstruct."""
         if self._rollup_config is _UNSET:
             d = self._get("/meta", {"db": self.db,
                                     "what": "rollup_config"})["rollup_config"]
             from repro.core.rollup import RollupConfig
             self._rollup_config = None if d is None else RollupConfig(
-                tiers_ns=tuple(d["tiers_ns"]), max_age_ns=d["max_age_ns"])
+                tiers_ns=tuple(d["tiers_ns"]), max_age_ns=d["max_age_ns"],
+                sketch_fields=d.get("sketch_fields") or (),
+                sketch_rel_acc=d.get("sketch_rel_acc", 0.01),
+                sketch_max_bins=d.get("sketch_max_bins", 2048))
         return self._rollup_config
+
+    def rollups_meta(self):
+        """``/meta?what=rollups`` — the aggregate family the remote
+        serves — fetched once and cached; None against an older server
+        that predates the endpoint (validation is then skipped)."""
+        if self._rollups_meta is _UNSET:
+            try:
+                self._rollups_meta = self._get(
+                    "/meta", {"db": self.db, "what": "rollups"})["rollups"]
+            except ValueError:
+                self._rollups_meta = None
+        return self._rollups_meta
+
+    def _check_agg(self, agg: str, measurement: str, field: str):
+        """Fail fast on an agg the remote cannot serve — a clear local
+        ValueError instead of a remote 500/empty answer.  Scalar aggs are
+        checked against the served list; quantiles additionally require
+        the (measurement, field) to be sketch-enabled remotely."""
+        meta = self.rollups_meta()
+        if meta is None:            # pre-family server: no validation
+            return
+        if quantile_of(agg) is None:
+            if agg not in meta.get("aggs", SCALAR_AGGS):
+                raise ValueError(
+                    f"agg {agg!r} is not served by {self.url} "
+                    f"(served: {meta.get('aggs')})")
+            return
+        sketch = meta.get("sketch")
+        fields = (sketch or {}).get("fields", {}).get(measurement)
+        if fields != "*" and (not fields or field not in fields):
+            raise ValueError(
+                f"agg {agg!r} needs a quantile sketch on "
+                f"{measurement}.{field} at {self.url}; the remote "
+                f"sketches {((sketch or {}).get('fields')) or 'nothing'} "
+                f"— opt in via RollupConfig(sketch_fields=...)")
 
     def _get(self, path: str, params: dict) -> dict:
         qs = urllib.parse.urlencode(
@@ -636,6 +696,7 @@ class HttpQueryClient:
                   group_by_tag: Optional[str] = None,
                   window_ns: Optional[int] = None,
                   use_rollups: object = "auto"):
+        self._check_agg(agg, measurement, field)
         merged = self.aggregate_partials(
             measurement, field, tags=tags, t_min=t_min, t_max=t_max,
             group_by_tag=group_by_tag, window_ns=window_ns,
@@ -667,6 +728,7 @@ class HttpQueryClient:
                          t_max: Optional[int] = None,
                          group_by_tag: Optional[str] = None,
                          window_ns: Optional[int] = None):
+        self._check_agg(agg, measurement, field)
         return finalize_windowed(self.rollup_window_partials(
             measurement, field, tags=tags, t_min=t_min, t_max=t_max,
             group_by_tag=group_by_tag, window_ns=window_ns), agg)
@@ -676,6 +738,7 @@ class HttpQueryClient:
                       window_ns: Optional[int] = None,
                       t_min: Optional[int] = None,
                       t_max: Optional[int] = None) -> list:
+        self._check_agg(agg, measurement, field)
         params = self._query_params(measurement, field, tags, t_min, t_max,
                                     None, window_ns)
         params["rollup_series"] = "1"

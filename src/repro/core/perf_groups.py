@@ -27,6 +27,8 @@ import operator
 from dataclasses import dataclass, field
 from typing import Optional
 
+from repro.core.rollup import quantile_of
+
 # --------------------------------------------------------------------------
 # Hardware constants (assignment: TPU v5e-class chip)
 # --------------------------------------------------------------------------
@@ -93,11 +95,38 @@ def _build(node, names: list):
         op = _UNOPS[type(node.op)]
         operand = _build(node.operand, names)
         return lambda env: op(operand(env))
-    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
-            and node.func.id in _FUNCS:
-        func = _FUNCS[node.func.id]
-        args = [_build(a, names) for a in node.args]
-        return lambda env: func(*[a(env) for a in args])
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        if node.func.id in _FUNCS:
+            func = _FUNCS[node.func.id]
+            args = [_build(a, names) for a in node.args]
+            return lambda env: func(*[a(env) for a in args])
+        if quantile_of(node.func.id) is not None and len(node.args) == 1 \
+                and not node.keywords:
+            # a quantile call over one identifier — p95(flops),
+            # p99(hpm.step_time_s) — compiles to a *synthetic identifier*
+            # "pNN(ident)".  The query planner reduces that input's
+            # mergeable partials with the quantile agg and feeds the
+            # result back through env; there is no constant fallback
+            # (a quantile is data, never a HW constant).
+            arg = node.args[0]
+            if isinstance(arg, ast.Name):
+                inner = arg.id
+            elif isinstance(arg, ast.Attribute) and \
+                    isinstance(arg.value, ast.Name):
+                inner = f"{arg.value.id}.{arg.attr}"
+            else:
+                raise ValueError(
+                    f"{node.func.id}() takes one field or "
+                    f"measurement.field identifier")
+            ident = f"{node.func.id}({inner})"
+            if ident not in names:
+                names.append(ident)
+
+            def quantile_fn(env, ident=ident):
+                if ident in env:
+                    return float(env[ident])
+                raise KeyError(ident)
+            return quantile_fn
     raise ValueError(f"disallowed syntax: {ast.dump(node)}")
 
 

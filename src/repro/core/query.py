@@ -54,7 +54,7 @@ from typing import Iterable, Optional
 
 from repro.core.perf_groups import (HW_CONSTANTS, CompiledFormula,
                                     compile_formula, formula_for)
-from repro.core.rollup import ROLLUP_AGGS
+from repro.core.rollup import ROLLUP_AGGS, known_agg, quantile_of
 from repro.core.shard import (decode_partials, encode_partials,
                               merge_scalar_partials, merge_windowed_partials)
 from repro.core.tsdb import Series, _agg
@@ -150,9 +150,10 @@ class QuerySpec:
         object.__setattr__(self, "tags", tuple(
             sorted((str(k), str(v)) for k, v in tags)))
         for agg in (self.agg, self.order_agg):
-            if agg not in ROLLUP_AGGS:
+            if not known_agg(agg):
                 raise ValueError(f"unknown agg {agg!r} "
-                                 f"(expected one of {ROLLUP_AGGS})")
+                                 f"(expected one of {ROLLUP_AGGS} "
+                                 f"or a pNN quantile)")
         if self.window_ns is not None:
             object.__setattr__(self, "window_ns", int(self.window_ns))
             if self.window_ns <= 0:
@@ -240,6 +241,18 @@ def _resolve_ident(ident: str, default_measurement: str):
     return (default_measurement, ident)
 
 
+def _split_quantile_ident(ident: str):
+    """``"p95(hpm.flops)"`` -> ``("hpm.flops", "p95")`` — the synthetic
+    identifiers ``perf_groups`` emits for quantile calls; None for plain
+    identifiers."""
+    if not ident.endswith(")"):
+        return None
+    fn, _, rest = ident.partition("(")
+    if quantile_of(fn) is None:
+        return None
+    return rest[:-1], fn
+
+
 def make_plan(spec: QuerySpec, rollup_config=None) -> QueryPlan:
     """Compile a spec against a backend's tier layout.
 
@@ -268,16 +281,28 @@ def make_plan(spec: QuerySpec, rollup_config=None) -> QueryPlan:
         if expr is None:
             key = (spec.measurement, name)
             add_input(key)
-            outputs.append((name, None, ((name, key),)))
+            outputs.append((name, None, ((name, key, None),)))
             continue
         cf = compile_formula(expr)
         refs = []
         for ident in cf.names:
-            key = _resolve_ident(ident, spec.measurement)
+            qs = _split_quantile_ident(ident)
+            if qs is None:
+                key = _resolve_ident(ident, spec.measurement)
+                agg_override = None
+            else:
+                inner, agg_override = qs
+                key = _resolve_ident(inner, spec.measurement)
+                if key is None:
+                    raise ValueError(
+                        f"cannot take {agg_override} of constant {inner!r}")
             if key is None:
                 continue
             add_input(key)
-            refs.append((ident, key))
+            # 3-tuple refs: a per-ref agg override (quantile calls like
+            # p95(flops)) reduces the same merged partials with its own
+            # agg — the partials wire form stays agg-agnostic
+            refs.append((ident, key, agg_override))
         outputs.append((name, cf, tuple(refs)))
     use_rollups = False
     tier_ns = None
@@ -460,17 +485,30 @@ def evaluate_plan(plan: QueryPlan, collected: dict) -> QueryResult:
 def _evaluate_windowed_group(plan: QueryPlan, collected: dict,
                              g: str) -> dict:
     spec = plan.spec
-    # reduce each input's WindowAggs once per group; shared across outputs
-    vals_by_input = {}
-    for key in plan.inputs:
-        wins = collected.get(key, {}).get(g)
-        if wins:
-            vals_by_input[key] = {w0: wa.value(spec.agg)
-                                  for w0, wa in wins.items()}
+    # reduce each (input, agg) pair's WindowAggs once per group; shared
+    # across outputs.  Windows whose aggregate cannot answer (None: empty
+    # merge, quantile without a sketch / tainted) are skipped like gaps.
+    vals_by_input: dict = {}
+
+    def reduced(key, agg):
+        ck = (key, agg)
+        if ck not in vals_by_input:
+            wins = collected.get(key, {}).get(g)
+            m = None
+            if wins:
+                m = {}
+                for w0, wa in wins.items():
+                    v = wa.value(agg)
+                    if v is not None:
+                        m[w0] = v
+                m = m or None
+            vals_by_input[ck] = m
+        return vals_by_input[ck]
+
     entry = {}
     for name, cf, refs in plan.outputs:
         if cf is None:
-            vals = vals_by_input.get(refs[0][1])
+            vals = reduced(refs[0][1], spec.agg)
             if not vals:
                 continue
             starts = sorted(vals)
@@ -479,8 +517,8 @@ def _evaluate_windowed_group(plan: QueryPlan, collected: dict,
             continue
         starts: list = []
         seen = set()
-        for _, key in refs:
-            for w0 in vals_by_input.get(key, ()):
+        for _, key, agg_override in refs:
+            for w0 in reduced(key, agg_override or spec.agg) or ():
                 if w0 not in seen:
                     seen.add(w0)
                     starts.append(w0)
@@ -488,8 +526,8 @@ def _evaluate_windowed_group(plan: QueryPlan, collected: dict,
             continue
         starts.sort()
         cols = {}
-        for ident, key in refs:
-            vals = vals_by_input.get(key)
+        for ident, key, agg_override in refs:
+            vals = reduced(key, agg_override or spec.agg)
             if vals is not None:
                 cols[ident] = [vals.get(w0) for w0 in starts]
         derived = cf.eval_columns(cols, len(starts))
@@ -502,20 +540,30 @@ def _evaluate_windowed_group(plan: QueryPlan, collected: dict,
 
 def _evaluate_scalar_group(plan: QueryPlan, collected: dict, g: str) -> dict:
     spec = plan.spec
-    vals_by_input = {}
-    for key in plan.inputs:
-        wa = collected.get(key, {}).get(g)
-        if wa is not None and wa.count:
-            vals_by_input[key] = wa.value(spec.agg)
+    vals_by_input: dict = {}
+
+    def reduced(key, agg):
+        ck = (key, agg)
+        if ck not in vals_by_input:
+            wa = collected.get(key, {}).get(g)
+            v = None
+            if wa is not None and wa.count:
+                v = wa.value(agg)
+            vals_by_input[ck] = v
+        return vals_by_input[ck]
+
     entry = {}
     for name, cf, refs in plan.outputs:
         if cf is None:
-            v = vals_by_input.get(refs[0][1])
+            v = reduced(refs[0][1], spec.agg)
             if v is not None:
                 entry[name] = v
             continue
-        env = {ident: vals_by_input[key] for ident, key in refs
-               if key in vals_by_input}
+        env = {}
+        for ident, key, agg_override in refs:
+            v = reduced(key, agg_override or spec.agg)
+            if v is not None:
+                env[ident] = v
         try:
             v = cf.eval(env)
         except (KeyError, ZeroDivisionError, OverflowError):
@@ -663,17 +711,22 @@ class QueryEngine:
 # --------------------------------------------------------------------------
 
 
-def _expr_fields(expr: str) -> list:
+def _expr_inputs(expr: str) -> list:
+    """``[(ident, field, agg_override)]`` for every data input of a
+    per-series rule expression — ``agg_override`` is the quantile name
+    for ``pNN(field)`` calls, else None (use the caller's agg)."""
     cf = compile_formula(expr)
-    fields = []
+    inputs = []
     for ident in cf.names:
-        if "." in ident:
+        qs = _split_quantile_ident(ident)
+        fieldname, agg_override = (ident, None) if qs is None else qs
+        if "." in fieldname:
             raise ValueError(
                 f"per-series derivation cannot join measurements "
                 f"({ident!r}); use a QuerySpec with group-by instead")
-        if ident not in HW_CONSTANTS:
-            fields.append(ident)
-    return fields
+        if qs is not None or fieldname not in HW_CONSTANTS:
+            inputs.append((ident, fieldname, agg_override))
+    return inputs
 
 
 def derived_rollup_series(db, measurement: str, name: str, expr: str, *,
@@ -687,28 +740,32 @@ def derived_rollup_series(db, measurement: str, name: str, expr: str, *,
     single field — the shape ``AnalysisEngine`` consumes, so threshold
     rules may reference metrics that were never emitted at collection
     time (``ThresholdRule.expr``).  Windows missing an input (or hitting
-    a domain error) are skipped, like any gap."""
+    a domain error) are skipped, like any gap.  Quantile calls
+    (``p95(field)``) reduce that field's rollup windows with their own
+    agg — served from the window sketches when the field is opted into
+    ``RollupConfig(sketch_fields=...)``, absent otherwise."""
     cf = compile_formula(expr)
-    fields = _expr_fields(expr)
-    per_series: dict = {}       # tags_key -> (tags, {field: {w0: val}})
-    for fieldname in fields:
-        for s in db.rollup_series(measurement, fieldname, agg=agg,
+    inputs = _expr_inputs(expr)
+    per_series: dict = {}       # tags_key -> (tags, {ident: {w0: val}})
+    for ident, fieldname, agg_override in inputs:
+        for s in db.rollup_series(measurement, fieldname,
+                                  agg=agg_override or agg,
                                   tags=tags, window_ns=window_ns,
                                   t_min=t_min, t_max=t_max):
             key = tuple(sorted(s.tags.items()))
             entry = per_series.get(key)
             if entry is None:
                 entry = per_series[key] = (s.tags, {})
-            entry[1][fieldname] = dict(zip(s.times,
-                                           s.values.get(fieldname, ())))
+            entry[1][ident] = dict(zip(s.times,
+                                       s.values.get(fieldname, ())))
     out = []
     for key in sorted(per_series):
-        stags, by_field = per_series[key]
-        starts = sorted({w0 for vals in by_field.values() for w0 in vals})
+        stags, by_ident = per_series[key]
+        starts = sorted({w0 for vals in by_ident.values() for w0 in vals})
         if not starts:
             continue
-        cols = {f: [vals.get(w0) for w0 in starts]
-                for f, vals in by_field.items()}
+        cols = {i: [vals.get(w0) for w0 in starts]
+                for i, vals in by_ident.items()}
         derived = cf.eval_columns(cols, len(starts))
         times = [w0 for w0, v in zip(starts, derived) if v is not None]
         if times:
@@ -737,9 +794,15 @@ def derived_select_series(db, measurement: str, name: str, expr: str, *,
     input path.  Columns of one series normally share one timestamp
     list (one store) and align by index; if they ever differ (ingest
     raced between per-field fetches on a remote), alignment falls back
-    to the timestamp union."""
+    to the timestamp union.
+
+    A quantile call (``p95(field)``) degenerates to per-point identity
+    here: the quantile of a single raw point is that point.  Rules that
+    need real windowed quantiles belong on the rollup path
+    (:func:`derived_rollup_series`)."""
     cf = compile_formula(expr)
-    fields = _expr_fields(expr)
+    inputs = _expr_inputs(expr)
+    fields = sorted({f for _, f, _ in inputs})
     if not fields:          # constants-only formula: any series' clock
         return [Series(measurement, dict(s.tags), list(s.times),
                        {name: cf.eval_columns({}, len(s.times))})
@@ -759,12 +822,13 @@ def derived_select_series(db, measurement: str, name: str, expr: str, *,
         time_lists = [t for t, _ in by_field.values()]
         if all(t == time_lists[0] for t in time_lists[1:]):
             times0 = time_lists[0]
-            cols = {f: col for f, (_, col) in by_field.items()}
+            by_f = {f: col for f, (_, col) in by_field.items()}
         else:               # rare cross-fetch skew: align on the union
             times0 = sorted({t for ts, _ in by_field.values() for t in ts})
-            cols = {f: [m.get(t) for t in times0]
+            by_f = {f: [m.get(t) for t in times0]
                     for f, (ts, col) in by_field.items()
                     for m in (dict(zip(ts, col)),)}
+        cols = {ident: by_f[f] for ident, f, _ in inputs if f in by_f}
         derived = cf.eval_columns(cols, len(times0))
         times = [t for t, v in zip(times0, derived) if v is not None]
         if times:

@@ -23,18 +23,39 @@ Design notes
   multiple of a tier is covered by whole tier windows and merged results
   are **exactly** equal to a naive recompute from raw points.
 
-* **Incrementality.**  A :class:`WindowAgg` stores ``(count, sum, min,
-  max, last_t, last_v)``.  All of these are order-independent (``last``
-  keeps the lexicographically largest ``(t, v)`` pair, matching the raw
-  path's sort-then-take-last), so out-of-order ingest needs no special
-  casing: the point lands in whichever window its timestamp belongs to.
+* **Aggregate family.**  Window state is a *family* of mergeable
+  aggregates behind one interface — ``update(t, v)`` / ``merge(other)``
+  / ``value(agg)`` / ``state()`` / ``fresh()`` — with module-level
+  ``agg_from_state`` dispatching snapshot state back to the right member:
 
-* **Mergeability.**  Two ``WindowAgg``s combine losslessly (sums add,
-  mins min, ...), which is what lets a 60 s query window be served from
-  either the 60 s tier directly or from 60 merged 1 s windows, and what
-  lets per-series windows merge across a ``group_by_tag`` group.
-  ``mean`` is derived as ``sum / count`` at query time and is therefore
-  exact after any merge.
+  - :class:`WindowAgg` — the scalar base: ``(count, sum, min, max,
+    last_t, last_v)``.  All components are order-independent (``last``
+    keeps the lexicographically largest ``(t, v)`` pair, matching the raw
+    path's sort-then-take-last), so out-of-order ingest needs no special
+    casing.
+  - :class:`SketchAgg` — the scalar base plus a :class:`QuantileSketch`
+    (DDSketch-style fixed-gamma log-binned histogram), serving
+    ``p50``/``p95``/``p99`` (any ``pNN``) with relative error
+    ``<= sketch_rel_acc`` against the exact nearest-rank percentile.
+    Opt-in per (measurement, field) via ``RollupConfig(sketch_fields=...)``
+    so the default path pays no extra memory.
+
+* **Mergeability.**  Two aggregates combine losslessly (sums add, mins
+  min, sketch bins add bin-wise), which is what lets a 60 s query window
+  be served from either the 60 s tier directly or from 60 merged 1 s
+  windows, what lets per-series windows merge across a ``group_by_tag``
+  group, and what makes scatter-gather federation exact.  ``mean`` is
+  derived as ``sum / count`` at query time and is therefore exact after
+  any merge; an empty (or merged-empty) window yields ``None`` like
+  ``min``/``max`` instead of dividing by zero.
+
+* **Graceful degradation.**  A quantile asked of a plain scalar
+  :class:`WindowAgg` (field not sketched, or a partial from an
+  older-version peer) answers ``None`` rather than raising, and merging
+  sketch-less state into a :class:`SketchAgg` *taints* the sketch (its
+  quantiles turn ``None`` while the scalar components stay exact).
+  Mixed-version federation therefore degrades to "no quantile for that
+  window" instead of corrupting.
 
 * **Retention.**  Rollups live beside the raw columns and are *not*
   touched by raw-point trims; :meth:`SeriesRollups.trim` applies an
@@ -42,7 +63,8 @@ Design notes
 
 * **Types.**  Only real numbers are rolled up (bools and strings are
   excluded, matching ``Database.aggregate``'s numeric filter); event
-  series simply have no rollup state.
+  series simply have no rollup state.  Sketches additionally skip
+  non-finite values (NaN/inf carry no rank information).
 
 Thread-safety is inherited from the owning ``Database``: all mutation and
 query entry points are called under the database lock.
@@ -50,6 +72,10 @@ query entry points are called under the database lock.
 
 from __future__ import annotations
 
+import math
+import re
+
+from collections import Counter
 from dataclasses import dataclass
 from typing import Iterable, Optional, Tuple
 
@@ -58,22 +84,104 @@ from typing import Iterable, Optional, Tuple
 DEFAULT_TIERS_NS: Tuple[int, ...] = (
     1_000_000_000, 10_000_000_000, 60_000_000_000)
 
-ROLLUP_AGGS = ("mean", "min", "max", "sum", "count", "last")
+# Aggregates derivable from the scalar WindowAgg components alone.
+SCALAR_AGGS = ("mean", "min", "max", "sum", "count", "last")
+
+# Quantiles served from rollup tiers when the field carries a sketch
+# (RollupConfig.sketch_fields).  Any ``pNN``/``pNN.N`` spelling is
+# accepted by the query layers; these are the conventional members.
+QUANTILE_AGGS = ("p50", "p95", "p99")
+
+ROLLUP_AGGS = SCALAR_AGGS + QUANTILE_AGGS
+
+# per-rel_acc (gamma, log gamma) constants shared by all sketches
+_GAMMA_CACHE: dict = {}
+
+# per-rel_acc bounded value -> encoded-bin-key memo for the batched ingest
+# path: monitoring values are heavily quantized (utilizations, clocks,
+# temperatures repeat), so most points resolve their DDSketch bin with one
+# dict probe instead of a log/ceil chain
+_KEY_CACHE: dict = {}
+_KEY_CACHE_MAX = 32768
+
+# encoded-key sentinel for non-finite values (real encoded keys are
+# bounded by ~2*log(DBL_MAX)/log(gamma), far below this)
+_SKIP_KEY = 1 << 60
+
+
+def _encode_value(v: float, inv: float, kc: dict) -> int:
+    """Slow path of the fused ingest loop: first sighting of a value.
+    Returns ``bin_key << 1 | sign_bit`` (or ``_SKIP_KEY`` for non-finite
+    values) and memoises it — except for NaN, which can never be looked
+    up again (``NaN != NaN``) and would only pollute the cache."""
+    if 0.0 < v < math.inf:
+        c = math.ceil(math.log(v) * inv) << 1
+    elif -math.inf < v < 0.0:
+        c = (math.ceil(math.log(-v) * inv) << 1) | 1
+    else:
+        c = _SKIP_KEY
+    if v == v and len(kc) < _KEY_CACHE_MAX:
+        kc[v] = c
+    return c
+
+_QUANTILE_RE = re.compile(r"p(\d{1,2}(?:\.\d+)?)\Z")
+
+
+def quantile_of(agg: str) -> Optional[float]:
+    """``"p95"`` -> ``0.95`` (``"p99.9"`` -> ``0.999``); None if ``agg``
+    is not a quantile spelling.  Only ``0 < q < 1`` spellings parse —
+    ``p0``/``p100`` are min/max and have exact scalar aggregates."""
+    if not isinstance(agg, str):
+        return None
+    m = _QUANTILE_RE.match(agg)
+    if m is None:
+        return None
+    q = float(m.group(1)) / 100.0
+    return q if 0.0 < q < 1.0 else None
+
+
+def known_agg(agg: str) -> bool:
+    """True iff some member of the aggregate family can serve ``agg``."""
+    return agg in SCALAR_AGGS or quantile_of(agg) is not None
 
 
 @dataclass(frozen=True)
 class RollupConfig:
-    """Tier layout + rollup-side retention."""
+    """Tier layout, rollup-side retention, and per-field sketch opt-in."""
 
     tiers_ns: Tuple[int, ...] = DEFAULT_TIERS_NS
     # drop rollup windows older than this (None = keep forever)
     max_age_ns: Optional[int] = None
+    # quantile-sketch opt-in: {measurement: ("field", ...)} or
+    # {measurement: "*"} (all numeric fields).  Normalised to a sorted
+    # tuple-of-tuples so the config stays frozen/hashable.
+    sketch_fields: tuple = ()
+    # DDSketch relative accuracy alpha: answered quantiles are within
+    # alpha (relative) of the exact nearest-rank percentile.
+    sketch_rel_acc: float = 0.01
+    # bin-count cap per sketch; lowest-magnitude bins collapse beyond it
+    sketch_max_bins: int = 2048
 
     def __post_init__(self):
         tiers = tuple(sorted(int(t) for t in self.tiers_ns))
         if any(t <= 0 for t in tiers):
             raise ValueError("tier sizes must be positive")
         object.__setattr__(self, "tiers_ns", tiers)
+        if not 0.0 < self.sketch_rel_acc < 1.0:
+            raise ValueError("sketch_rel_acc must be in (0, 1)")
+        if self.sketch_max_bins < 8:
+            raise ValueError("sketch_max_bins must be >= 8")
+        sf = self.sketch_fields
+        items = sf.items() if isinstance(sf, dict) else tuple(sf or ())
+        norm = []
+        for meas, fields in items:
+            if fields == "*":
+                norm.append((str(meas), "*"))
+            else:
+                norm.append((str(meas),
+                             tuple(sorted(str(f) for f in fields))))
+        object.__setattr__(self, "sketch_fields", tuple(sorted(norm)))
+        object.__setattr__(self, "_sketch_map", dict(self.sketch_fields))
 
     def tier_for(self, window_ns: int) -> Optional[int]:
         """Coarsest tier that nests exactly into ``window_ns`` windows."""
@@ -83,11 +191,231 @@ class RollupConfig:
                 best = t
         return best
 
+    # -- sketch opt-in --------------------------------------------------------
+
+    @property
+    def sketch_gamma(self) -> float:
+        """Log-bin base: ``(1 + alpha) / (1 - alpha)``."""
+        a = self.sketch_rel_acc
+        return (1.0 + a) / (1.0 - a)
+
+    def sketched(self, measurement: Optional[str], field: str) -> bool:
+        if measurement is None:
+            return False
+        fields = self._sketch_map.get(measurement)
+        if fields is None:
+            return False
+        return fields == "*" or field in fields
+
+    def sketch_field_map(self) -> dict:
+        """``{measurement: "*" | [field, ...]}`` — the ``/meta`` form."""
+        return {m: ("*" if fs == "*" else list(fs))
+                for m, fs in self.sketch_fields}
+
+    def new_agg(self, measurement: Optional[str], field: str,
+                tier_ns: Optional[int] = None) -> "WindowAgg":
+        """Factory: the family member configured for this field.
+
+        ``tier_ns`` is the rollup tier the window belongs to, when it
+        belongs to one.  Sketch bins are maintained only on the finest
+        tier — coarser tiers answer quantiles by merging finest windows
+        at read time (:meth:`SeriesRollups.windows`) — so a coarser
+        ``tier_ns`` yields the scalar member even for sketched fields.
+        Callers outside the tier structure (cold-scan rebuilds, query-
+        side merge targets) omit it and get the full member."""
+        if tier_ns is not None and tier_ns != self.tiers_ns[0]:
+            return WindowAgg()
+        if self.sketched(measurement, field):
+            return SketchAgg(self.sketch_rel_acc, self.sketch_max_bins)
+        return WindowAgg()
+
+
+class QuantileSketch:
+    """DDSketch-style mergeable quantile sketch (fixed gamma).
+
+    Finite values land in log-spaced bins ``key = ceil(log_gamma |v|)``
+    (separate positive/negative bin maps plus an exact zero counter); a
+    bin's representative ``2 * gamma^key / (gamma + 1)`` is within
+    ``rel_acc`` (relative) of every value in the bin.  Bins are integer
+    counters, so merging is exact bin-wise addition — commutative and
+    associative — and identical point multisets yield identical bins no
+    matter how ingest was batched, sharded, or federated.  Beyond
+    ``max_bins`` the lowest-magnitude bins collapse upward (tail quantiles
+    keep their guarantee; extreme-low quantiles coarsen).  Non-finite
+    values are skipped.  ``tainted`` marks a sketch merged with sketch-less
+    (or differently-parameterised) state: its quantiles answer ``None``
+    while the surrounding scalar aggregate stays exact.
+    """
+
+    __slots__ = ("rel_acc", "max_bins", "gamma", "_lg", "zero",
+                 "pos", "neg", "tainted", "_pending")
+
+    def __init__(self, rel_acc: float = 0.01, max_bins: int = 2048):
+        self.rel_acc = rel_acc
+        self.max_bins = max_bins
+        # rollups create one sketch per (window, field) — thousands per
+        # series — so the per-rel_acc constants are cached module-wide
+        # rather than recomputed (math.log) on every window open
+        cached = _GAMMA_CACHE.get(rel_acc)
+        if cached is None:
+            g = (1.0 + rel_acc) / (1.0 - rel_acc)
+            cached = _GAMMA_CACHE[rel_acc] = (g, math.log(g))
+        self.gamma, self._lg = cached
+        self.zero = 0
+        self.pos: dict = {}
+        self.neg: dict = {}
+        self.tainted = False
+        # run-level (encoded-key list, zeros) deltas from the batched
+        # ingest path, counted and folded into pos/neg lazily on first
+        # read (defer/_flush): ingest pays one list append per run, and
+        # the flush counts keys with collections.Counter — a C loop —
+        # before touching the Python-level bin dicts once per *distinct*
+        # bin.  Every read entry point flushes first, so external
+        # semantics are unchanged.
+        self._pending: list = []
+
+    # -- write ---------------------------------------------------------------
+
+    def defer(self, keys: list, zeros: int):
+        """Queue a run-level delta: ``keys`` is a list of encoded bin
+        keys (``bin_key << 1 | sign_bit``), one per inserted value.  The
+        caller must not mutate the list afterwards."""
+        self._pending.append((keys, zeros))
+        if len(self._pending) > 64:
+            self._flush()
+
+    def _flush(self):
+        if not self._pending:
+            return
+        ctr: Counter = Counter()
+        up = ctr.update
+        for keys, zeros in self._pending:
+            self.zero += zeros
+            if keys:
+                up(keys)
+        self._pending.clear()
+        if ctr:
+            pos = self.pos
+            neg = self.neg
+            for c, cnt in ctr.items():
+                if c & 1:
+                    key = c >> 1
+                    neg[key] = neg.get(key, 0) + cnt
+                else:
+                    key = c >> 1
+                    pos[key] = pos.get(key, 0) + cnt
+            if len(pos) + len(neg) > self.max_bins:
+                self._collapse()
+
+    def insert(self, v: float, n: int = 1):
+        if not math.isfinite(v):
+            return
+        if v == 0:
+            self.zero += n
+            return
+        a = v if v > 0 else -v
+        key = math.ceil(math.log(a) / self._lg)
+        d = self.pos if v > 0 else self.neg
+        d[key] = d.get(key, 0) + n
+        if len(self.pos) + len(self.neg) > self.max_bins:
+            self._collapse()
+
+    def merge(self, other: "QuantileSketch"):
+        self._flush()
+        other._flush()
+        if other.tainted or other.rel_acc != self.rel_acc:
+            self.tainted = True
+        self.zero += other.zero
+        pos = self.pos
+        for k, c in other.pos.items():
+            pos[k] = pos.get(k, 0) + c
+        neg = self.neg
+        for k, c in other.neg.items():
+            neg[k] = neg.get(k, 0) + c
+        if len(pos) + len(neg) > self.max_bins:
+            self._collapse()
+
+    def _collapse(self):
+        while len(self.pos) + len(self.neg) > self.max_bins:
+            d = self.pos if len(self.pos) >= len(self.neg) else self.neg
+            if len(d) < 2:
+                d = self.neg if d is self.pos else self.pos
+            ks = sorted(d)
+            k0, k1 = ks[0], ks[1]
+            d[k1] = d.get(k1, 0) + d.pop(k0)
+
+    # -- query ---------------------------------------------------------------
+
+    def count(self) -> int:
+        self._flush()
+        return self.zero + sum(self.pos.values()) + sum(self.neg.values())
+
+    def _rep(self, key: int) -> float:
+        try:
+            return 2.0 * self.gamma ** key / (self.gamma + 1.0)
+        except OverflowError:
+            return math.inf
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Value at quantile ``q`` using the exact nearest-rank convention
+        (rank ``ceil(q*n) - 1``, 0-based) — the same convention the raw
+        rescan path uses, so sketch answers are directly comparable."""
+        if self.tainted:
+            return None
+        n = self.count()          # flushes pending run deltas
+        if n == 0:
+            return None
+        rank = min(n - 1, max(0, math.ceil(q * n) - 1))
+        acc = 0
+        # ascending value order: most-negative first (largest |v| bin),
+        # then zero, then positives by ascending bin
+        for k in sorted(self.neg, reverse=True):
+            acc += self.neg[k]
+            if acc > rank:
+                return -self._rep(k)
+        acc += self.zero
+        if acc > rank:
+            return 0.0
+        for k in sorted(self.pos):
+            acc += self.pos[k]
+            if acc > rank:
+                return self._rep(k)
+        return self._rep(max(self.pos)) if self.pos else 0.0
+
+    # -- snapshot / wire state ------------------------------------------------
+
+    def to_state(self) -> dict:
+        """JSON-safe dict — rides both WAL snapshots and the federation
+        wire form (string bin keys: JSON objects)."""
+        self._flush()
+        return {"a": self.rel_acc, "b": self.max_bins, "z": self.zero,
+                "t": 1 if self.tainted else 0,
+                "p": {str(k): c for k, c in self.pos.items()},
+                "n": {str(k): c for k, c in self.neg.items()}}
+
+    @classmethod
+    def from_state(cls, d: dict) -> "QuantileSketch":
+        sk = cls(float(d["a"]), int(d["b"]))
+        sk.zero = int(d["z"])
+        sk.tainted = bool(d.get("t"))
+        sk.pos = {int(k): int(c) for k, c in d["p"].items()}
+        sk.neg = {int(k): int(c) for k, c in d["n"].items()}
+        return sk
+
 
 class WindowAgg:
-    """Incremental aggregate state for one (tier, window, field)."""
+    """Scalar member of the aggregate family — one (tier, window, field).
+
+    The family interface is ``update(t, v)`` / ``merge(other)`` /
+    ``value(agg)`` / ``state()`` / ``fresh()`` (an empty aggregate of the
+    same kind and parameters, used by every merge site so re-bucketing
+    and scatter-gather preserve the member kind); ``agg_from_state``
+    is the module-level inverse of ``state()``.
+    """
 
     __slots__ = ("count", "sum", "min", "max", "last_t", "last_v")
+
+    kind = "scalar"
 
     def __init__(self):
         self.count = 0
@@ -96,6 +424,10 @@ class WindowAgg:
         self.max = None
         self.last_t = None
         self.last_v = None
+
+    def fresh(self) -> "WindowAgg":
+        """Empty aggregate of the same kind/parameters (merge identity)."""
+        return WindowAgg()
 
     def update(self, t: int, v: float):
         self.count += 1
@@ -122,8 +454,12 @@ class WindowAgg:
             self.last_t, self.last_v = other.last_t, other.last_v
 
     def value(self, agg: str):
+        """Finalise ``agg``; ``None`` = "this aggregate cannot answer"
+        (empty window for ``mean``/``min``/``max``/``last``, any quantile
+        for a sketch-less or tainted aggregate) — query layers skip
+        ``None`` windows rather than fabricating values."""
         if agg == "mean":
-            return self.sum / self.count
+            return self.sum / self.count if self.count else None
         if agg == "min":
             return self.min
         if agg == "max":
@@ -134,6 +470,8 @@ class WindowAgg:
             return float(self.count)
         if agg == "last":
             return self.last_v
+        if quantile_of(agg) is not None:
+            return None
         raise ValueError(f"agg {agg!r} not served by rollups")
 
     # -- snapshot state (repro.core.wal) -------------------------------------
@@ -145,9 +483,96 @@ class WindowAgg:
 
     @classmethod
     def from_state(cls, s: list) -> "WindowAgg":
-        wa = cls()
-        wa.count, wa.sum, wa.min, wa.max, wa.last_t, wa.last_v = s
-        return wa
+        """Back-compat alias for 6-element scalar state; prefer the
+        family-dispatching :func:`agg_from_state`."""
+        return agg_from_state(s)
+
+
+class SketchAgg(WindowAgg):
+    """Scalar aggregate + quantile sketch: serves ``pNN`` from rollups."""
+
+    __slots__ = ("sketch",)
+
+    kind = "sketch"
+
+    def __init__(self, rel_acc: float = 0.01, max_bins: int = 2048):
+        super().__init__()
+        self.sketch = QuantileSketch(rel_acc, max_bins)
+
+    def fresh(self) -> "SketchAgg":
+        return SketchAgg(self.sketch.rel_acc, self.sketch.max_bins)
+
+    def update(self, t: int, v: float):
+        super().update(t, v)
+        self.sketch.insert(v)
+
+    def merge(self, other: "WindowAgg"):
+        super().merge(other)
+        osk = getattr(other, "sketch", None)
+        if osk is not None:
+            self.sketch.merge(osk)
+        elif other.count:
+            # sketch-less state merged in (older peer / unsketched
+            # field): quantiles are no longer exact -> taint
+            self.sketch.tainted = True
+
+    def value(self, agg: str):
+        q = quantile_of(agg)
+        if q is not None:
+            return self.sketch.quantile(q)
+        return super().value(agg)
+
+    def state(self) -> list:
+        return [self.count, self.sum, self.min, self.max,
+                self.last_t, self.last_v, self.sketch.to_state()]
+
+
+def agg_from_state(s: list) -> WindowAgg:
+    """Snapshot-state dispatch: 6-element lists are the (pre-family)
+    scalar form, a 7th element is the sketch state — old snapshots
+    restore as plain scalars and keep answering exactly."""
+    if len(s) > 6:
+        sk = QuantileSketch.from_state(s[6])
+        wa = SketchAgg(sk.rel_acc, sk.max_bins)
+        wa.sketch = sk
+    else:
+        wa = WindowAgg()
+    wa.count, wa.sum, wa.min, wa.max, wa.last_t, wa.last_v = s[:6]
+    return wa
+
+
+def finalize_scalar(merged: dict, agg: str) -> dict:
+    """``group -> aggregate`` to ``group -> value``, skipping groups whose
+    aggregate cannot answer (empty, or quantile without a sketch)."""
+    out = {}
+    for g, wa in merged.items():
+        if not wa.count:
+            continue
+        v = wa.value(agg)
+        if v is not None:
+            out[g] = v
+    return out
+
+
+def finalize_windowed(merged: dict, agg: str) -> dict:
+    """``group -> {w0 -> aggregate}`` to ``group -> (times, values)``,
+    skipping windows whose aggregate cannot answer."""
+    out = {}
+    for g, wins in merged.items():
+        times = []
+        values = []
+        for w0 in sorted(wins):
+            wa = wins[w0]
+            if not wa.count:
+                continue
+            v = wa.value(agg)
+            if v is None:
+                continue
+            times.append(w0)
+            values.append(v)
+        if times:
+            out[g] = (times, values)
+    return out
 
 
 def _is_numeric(v) -> bool:
@@ -157,10 +582,13 @@ def _is_numeric(v) -> bool:
 class SeriesRollups:
     """All rollup state for one series: field -> tier -> windows."""
 
-    __slots__ = ("config", "_fields")
+    __slots__ = ("config", "measurement", "_fields")
 
-    def __init__(self, config: RollupConfig):
+    def __init__(self, config: RollupConfig,
+                 measurement: Optional[str] = None):
         self.config = config
+        # which family member each field gets (RollupConfig.new_agg)
+        self.measurement = measurement
         # field -> {tier_ns -> {window_start -> WindowAgg}}
         self._fields: dict = {}
 
@@ -178,7 +606,8 @@ class SeriesRollups:
                 w0 = ts - ts % tier_ns
                 agg = wins.get(w0)
                 if agg is None:
-                    agg = wins[w0] = WindowAgg()
+                    agg = wins[w0] = self.config.new_agg(
+                        self.measurement, k, tier_ns)
                 agg.update(ts, v)
 
     def observe_columns(self, times: list, cols: dict):
@@ -190,7 +619,13 @@ class SeriesRollups:
         ingest pays no per-point restructuring.  Points of one window are
         contiguous in a sorted batch, so each window's run is aggregated
         in local variables and merged into its ``WindowAgg`` once —
-        per-window instead of per-point method-call cost.
+        per-window instead of per-point method-call cost.  Sketched
+        fields resolve each value's DDSketch bin key inline (one bounded
+        value->key memo probe for the common repeated-value case) and
+        hand the run's key list to the finest-tier sketch for lazy
+        Counter-based folding; coarser tiers carry no sketch at all —
+        quantile reads merge finest windows instead (:meth:`windows`).
+        Unsketched fields pay nothing new.
         """
         for k, col in cols.items():
             # numeric filter once per column; tier passes then run over
@@ -212,7 +647,21 @@ class SeriesRollups:
             if tiers is None:
                 tiers = {t: {} for t in self.config.tiers_ns}
                 self._fields[k] = tiers
+            sketched = self.config.sketched(self.measurement, k)
+            if sketched:
+                acc = self.config.sketch_rel_acc
+                cached = _GAMMA_CACHE.get(acc)
+                if cached is None:
+                    g = (1.0 + acc) / (1.0 - acc)
+                    cached = _GAMMA_CACHE[acc] = (g, math.log(g))
+                inv = 1.0 / cached[1]
+                kc = _KEY_CACHE.get(acc)
+                if kc is None:
+                    kc = _KEY_CACHE[acc] = {}
+                kc_get = kc.get
+                fin_tier = self.config.tiers_ns[0]
             for tier_ns, wins in tiers.items():
+                fin_sketch = sketched and tier_ns == fin_tier
                 i = 0
                 while i < n:
                     w0 = tl[i] - tl[i] % tier_ns
@@ -226,14 +675,39 @@ class SeriesRollups:
                     mn = v0
                     mx = v0
                     j = i
-                    while j < n and tl[j] < end:
-                        v = vl[j]
-                        s += v
-                        if v < mn:
-                            mn = v
-                        if v > mx:
-                            mx = v
-                        j += 1
+                    if fin_sketch:
+                        # fused pass: the finest tier resolves each
+                        # value's DDSketch bin key alongside the scalar
+                        # stats — usually one memo probe; _encode_value
+                        # handles first sightings and non-finite values
+                        run_keys: list = []
+                        ra = run_keys.append
+                        zeros = 0
+                        while j < n and tl[j] < end:
+                            v = vl[j]
+                            s += v
+                            if v < mn:
+                                mn = v
+                            if v > mx:
+                                mx = v
+                            if v == 0.0:
+                                zeros += 1
+                            else:
+                                c = kc_get(v)
+                                if c is None:
+                                    c = _encode_value(v, inv, kc)
+                                if c != _SKIP_KEY:
+                                    ra(c)
+                            j += 1
+                    else:
+                        while j < n and tl[j] < end:
+                            v = vl[j]
+                            s += v
+                            if v < mn:
+                                mn = v
+                            if v > mx:
+                                mx = v
+                            j += 1
                     # "last" = lexicographic (t, v) max: times ascend, so
                     # take max v among the run's final-timestamp ties
                     lt, lv = tl[j - 1], vl[j - 1]
@@ -244,7 +718,8 @@ class SeriesRollups:
                         p -= 1
                     agg = wins.get(w0)
                     if agg is None:
-                        agg = wins[w0] = WindowAgg()
+                        agg = wins[w0] = self.config.new_agg(
+                            self.measurement, k, tier_ns)
                     agg.count += j - i
                     agg.sum += s
                     if agg.min is None or mn < agg.min:
@@ -254,6 +729,8 @@ class SeriesRollups:
                     if agg.last_t is None or \
                             (lt, lv) >= (agg.last_t, agg.last_v):
                         agg.last_t, agg.last_v = lt, lv
+                    if fin_sketch:
+                        agg.sketch.defer(run_keys, zeros)
                     i = j
 
     # -- query ---------------------------------------------------------------
@@ -263,7 +740,8 @@ class SeriesRollups:
 
     def windows(self, field: str, window_ns: int,
                 t_min: Optional[int] = None,
-                t_max: Optional[int] = None) -> dict:
+                t_max: Optional[int] = None, *,
+                quantile: bool = False) -> dict:
         """``window_start -> WindowAgg`` for the requested window size.
 
         ``window_ns`` must be a multiple of some tier (see
@@ -271,6 +749,20 @@ class SeriesRollups:
         the coarser requested windows by merging.  ``t_min``/``t_max``
         filter at *window* granularity: a window is included iff it lies
         inside the epoch-aligned [t_min, t_max] window range.
+
+        ``quantile=True`` asks for windows whose aggregates carry sketch
+        bins.  Sketch bins are maintained only on the *finest* tier (a
+        write-path economy — the ingest hot loop touches one sketch per
+        value, not one per tier), so sketched fields are then decomposed
+        to the finest tier: tiers nest, so merging finest windows
+        reproduces every coarser tier's scalars while carrying the
+        quantile bins along.  All tiers share one retention
+        (``RollupConfig.max_age_ns``), so the finest tier lives exactly
+        as long as the coarser ones.  Scalar reads (the default) stay on
+        the coarsest serving tier — fewer windows merged, and the scalar
+        accumulation order is *identical* to a sketch-free config, so
+        enabling sketches never perturbs a scalar answer, not even in
+        the last ulp.
         """
         tiers = self._fields.get(field)
         if tiers is None:
@@ -279,6 +771,10 @@ class SeriesRollups:
         if tier_ns is None:
             raise ValueError(f"window {window_ns} not served by tiers "
                              f"{self.config.tiers_ns}")
+        fin = self.config.tiers_ns[0]
+        if quantile and tier_ns != fin and window_ns % fin == 0 \
+                and self.config.sketched(self.measurement, field):
+            tier_ns = fin
         lo = None if t_min is None else t_min - t_min % window_ns
         hi = None if t_max is None else t_max - t_max % window_ns
         out: dict = {}
@@ -288,7 +784,7 @@ class SeriesRollups:
                 continue
             cur = out.get(q0)
             if cur is None:
-                cur = out[q0] = WindowAgg()
+                cur = out[q0] = agg.fresh()
             cur.merge(agg)
         return out
 
@@ -308,13 +804,16 @@ class SeriesRollups:
     def restore_state(self, state: dict):
         """Inverse of :meth:`dump_state`.  Tiers are reconciled against the
         *current* config: dumped tiers no longer configured are dropped,
-        newly configured tiers start empty (they fill from new writes)."""
+        newly configured tiers start empty (they fill from new writes).
+        State kind wins over config: a pre-family 6-element scalar state
+        restores as a scalar even for a now-sketched field (its quantiles
+        answer ``None``; new windows pick up sketches)."""
         for field, tiers in state.items():
             restored = {t: {} for t in self.config.tiers_ns}
             for tier_ns, wins in tiers.items():
                 tier_ns = int(tier_ns)
                 if tier_ns in restored:
-                    restored[tier_ns] = {int(w0): WindowAgg.from_state(s)
+                    restored[tier_ns] = {int(w0): agg_from_state(s)
                                          for w0, s in wins.items()}
             self._fields[field] = restored
 
@@ -350,12 +849,15 @@ class SeriesRollups:
 
 
 def merge_window_maps(maps: Iterable[dict]) -> dict:
-    """Merge per-series ``window_start -> WindowAgg`` maps (group_by)."""
+    """Merge per-series ``window_start -> WindowAgg`` maps (group_by).
+    The first aggregate seen for a window decides the member kind (its
+    ``fresh()``), so sketch-carrying maps merge into sketch-carrying
+    results and mixed maps degrade via tainting."""
     out: dict = {}
     for m in maps:
         for w0, agg in m.items():
             cur = out.get(w0)
             if cur is None:
-                cur = out[w0] = WindowAgg()
+                cur = out[w0] = agg.fresh()
             cur.merge(agg)
     return out

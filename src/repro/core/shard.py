@@ -43,8 +43,18 @@ import zlib
 from typing import Iterable, List, Optional
 
 from repro.core.line_protocol import Point
-from repro.core.rollup import RollupConfig, WindowAgg, merge_window_maps
+from repro.core.rollup import (QuantileSketch, RollupConfig, SketchAgg,
+                               WindowAgg, finalize_scalar, finalize_windowed,
+                               merge_window_maps)
 from repro.core.tsdb import Database, _tags_key
+
+__all__ = [
+    "FederatedQuery", "ShardedDatabase", "shard_index",
+    "merge_scalar_partials", "merge_windowed_partials",
+    "finalize_scalar", "finalize_windowed",
+    "windowagg_to_dict", "windowagg_from_dict",
+    "encode_partials", "decode_partials",
+]
 
 
 def shard_index(measurement: str, tags_key: tuple, n_shards: int) -> int:
@@ -76,7 +86,10 @@ def merge_scalar_partials(parts: Iterable[dict]) -> dict:
         if len(aggs) == 1:
             out[g] = aggs[0]
             continue
-        cur = out[g] = WindowAgg()
+        # fresh() of the first partial: the merge product keeps the
+        # aggregate-family kind (a sketch-carrying partial merges into a
+        # sketch-carrying result; mixed kinds degrade via tainting)
+        cur = out[g] = aggs[0].fresh()
         for agg in aggs:
             cur.merge(agg)
     return out
@@ -93,32 +106,37 @@ def merge_windowed_partials(parts: Iterable[dict]) -> dict:
             for g, maps in grouped.items()}
 
 
-def finalize_scalar(merged: dict, agg: str) -> dict:
-    """``{group: WindowAgg}`` -> ``Database.aggregate`` scalar shape."""
-    return {g: wa.value(agg) for g, wa in merged.items() if wa.count}
-
-
-def finalize_windowed(merged: dict, agg: str) -> dict:
-    """``{group: window_map}`` -> ``Database.aggregate`` windowed shape."""
-    out = {}
-    for g, wins in merged.items():
-        if not wins:
-            continue
-        starts = sorted(wins)
-        out[g] = (starts, [wins[w].value(agg) for w in starts])
-    return out
+# finalize_scalar / finalize_windowed — the finalize half of the gather —
+# are canonical in repro.core.rollup (every query layer shares the same
+# None-skipping semantics) and re-exported here for the gather-side API.
 
 
 # -- wire form (httpd /query?partials=1) ------------------------------------
 
 
 def windowagg_to_dict(wa: WindowAgg) -> dict:
-    return {"count": wa.count, "sum": wa.sum, "min": wa.min, "max": wa.max,
-            "last_t": wa.last_t, "last_v": wa.last_v}
+    """Versioned wire form: the six scalar keys are the v1 form every
+    peer understands; sketch-carrying aggregates add a ``"sketch"`` key
+    that old peers simply ignore (their merge of the scalar keys stays
+    exact, quantiles degrade to None via tainting on the asking side)."""
+    d = {"count": wa.count, "sum": wa.sum, "min": wa.min, "max": wa.max,
+         "last_t": wa.last_t, "last_v": wa.last_v}
+    sk = getattr(wa, "sketch", None)
+    if sk is not None:
+        d["sketch"] = sk.to_state()
+    return d
 
 
 def windowagg_from_dict(d: dict) -> WindowAgg:
-    wa = WindowAgg()
+    """Inverse of :func:`windowagg_to_dict`; plain 6-key dicts from
+    older-version peers decode as scalar aggregates."""
+    sk = d.get("sketch")
+    if sk is not None:
+        sketch = QuantileSketch.from_state(sk)
+        wa = SketchAgg(sketch.rel_acc, sketch.max_bins)
+        wa.sketch = sketch
+    else:
+        wa = WindowAgg()
     wa.count = d["count"]
     wa.sum = d["sum"]
     wa.min = d["min"]

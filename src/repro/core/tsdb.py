@@ -34,6 +34,7 @@ layer combines across shards and across remote LMS instances.
 from __future__ import annotations
 
 import bisect
+import math
 import operator
 import os
 import random
@@ -44,7 +45,8 @@ from typing import Iterable, Optional
 
 from repro.core.line_protocol import Point, now_ns
 from repro.core.rollup import (ROLLUP_AGGS, RollupConfig, SeriesRollups,
-                               WindowAgg, merge_window_maps)
+                               WindowAgg, finalize_scalar, finalize_windowed,
+                               known_agg, merge_window_maps, quantile_of)
 
 
 @dataclass
@@ -140,7 +142,7 @@ class Database:
                 store = self._meas[meas].get(key)
                 if store is None:
                     store = _SeriesStore(dict(tags_of[(meas, key)]),
-                                         self.rollup_config)
+                                         self.rollup_config, meas)
                     self._meas[meas][key] = store
                 cap = store.extend(items)
                 self._count += len(items)
@@ -175,7 +177,7 @@ class Database:
                 store = self._meas[meas].get(key)
                 if store is None:
                     store = _SeriesStore(dict(tags_of[(meas, key)]),
-                                         self.rollup_config)
+                                         self.rollup_config, meas)
                     self._meas[meas][key] = store
                 store.extend_columns(times, cols)
                 self._count += len(times)
@@ -206,7 +208,8 @@ class Database:
         keys are not yet present (fresh recovery)."""
         with self._lock:
             for e in entries:
-                store = _SeriesStore(dict(e["tags"]), self.rollup_config)
+                store = _SeriesStore(dict(e["tags"]), self.rollup_config,
+                                     e["m"])
                 store.times = list(e["times"])
                 store.values = defaultdict(
                     list, {k: list(col) for k, col in e["values"].items()})
@@ -357,7 +360,17 @@ class Database:
 
         Without ``window_ns``: scalar per group (dict group -> value).
         With ``window_ns``: dict group -> (window_starts, values).
-        agg: mean | max | min | sum | count | last.
+        agg: mean | max | min | sum | count | last | pNN (quantiles).
+
+        Quantile aggs (``p50``/``p95``/``p99``/any ``pNN``) always route
+        through the mergeable-partials path and finalize locally, so a
+        local answer is *by construction* identical to the sharded and
+        HTTP-federated answers (those also merge partials).  Quantiles are
+        served from rollup sketches for fields opted in via
+        ``RollupConfig(sketch_fields=...)``; for unsketched fields the
+        partials carry no sketch and the result is empty rather than an
+        error (``HttpQueryClient`` validates against ``/meta?what=rollups``
+        to fail fast instead).
 
         ``use_rollups`` (windowed form only — the scalar form always
         rescans raw): "auto" serves from the rollup tiers whenever the
@@ -368,6 +381,14 @@ class Database:
         window, rather than silently degrading to the retention-truncated
         raw data; False forces the raw rescan.
         """
+        if quantile_of(agg) is not None:
+            parts = self.aggregate_partials(
+                measurement, field, tags=tags, t_min=t_min, t_max=t_max,
+                group_by_tag=group_by_tag, window_ns=window_ns,
+                use_rollups=use_rollups)
+            if window_ns is None:
+                return finalize_scalar(parts, agg)
+            return finalize_windowed(parts, agg)
         if self._serve_from_rollups(window_ns, agg, t_min, t_max,
                                     use_rollups):
             return self.rollup_aggregate(
@@ -422,6 +443,30 @@ class Database:
         ``mean`` merges as (sum, count), ``last`` as the lexicographic
         (t, v) max, matching the raw path's sort-then-take-last.
         """
+        # Scalar + forced rollups: merge every rollup window of the
+        # finest tier into one whole-range partial per group.  The auto
+        # path keeps the raw scan (scalar specs historically scan raw),
+        # but use_rollups=True means "answer from the tiers" — the only
+        # form that survives raw retention, e.g. whole-job p95 after the
+        # raw points are gone (range filtering is window-granular, like
+        # every forced rollup read).
+        if window_ns is None and use_rollups is True:
+            if self.rollup_config is None:
+                raise ValueError("rollups disabled for this database; "
+                                 "use use_rollups='auto' for a raw scan")
+            wparts = self.rollup_window_partials(
+                measurement, field, tags=tags, t_min=t_min, t_max=t_max,
+                group_by_tag=group_by_tag)
+            scalars: dict = {}
+            for g, wins in wparts.items():
+                total = None
+                for wa in wins.values():
+                    if total is None:
+                        total = wa.fresh()
+                    total.merge(wa)
+                if total is not None and total.count:
+                    scalars[g] = total
+            return scalars
         # agg=None: every ROLLUP_AGGS aggregate finalizes from WindowAgg
         # state, so servability only depends on tier nesting + alignment
         if self._serve_from_rollups(window_ns, None, t_min, t_max,
@@ -431,7 +476,11 @@ class Database:
                 group_by_tag=group_by_tag, window_ns=window_ns)
         # copy the matching slices under the lock (select), build the
         # partial state lock-free: shard locks stay held for O(copy), not
-        # O(scan) — the same hygiene as the raw aggregate() path
+        # O(scan) — the same hygiene as the raw aggregate() path.  The
+        # config factory picks the family member, so sketched fields carry
+        # sketches even on raw rescans (including cold-sealed data, which
+        # select() reads back) and quantiles federate from any path.
+        cfg = self.rollup_config
         out: dict = {}
         for s in self.select(measurement, [field], tags, t_min, t_max):
             g = s.tags.get(group_by_tag, "") if group_by_tag else ""
@@ -442,7 +491,8 @@ class Database:
                 if window_ns is None:
                     agg = out.get(g)
                     if agg is None:
-                        agg = out[g] = WindowAgg()
+                        agg = out[g] = cfg.new_agg(measurement, field) \
+                            if cfg is not None else WindowAgg()
                 else:
                     wins = out.get(g)
                     if wins is None:
@@ -450,7 +500,8 @@ class Database:
                     w0 = t - t % window_ns
                     agg = wins.get(w0)
                     if agg is None:
-                        agg = wins[w0] = WindowAgg()
+                        agg = wins[w0] = cfg.new_agg(measurement, field) \
+                            if cfg is not None else WindowAgg()
                 agg.update(t, v)
         return out
 
@@ -459,11 +510,19 @@ class Database:
                                t_min: Optional[int] = None,
                                t_max: Optional[int] = None,
                                group_by_tag: Optional[str] = None,
-                               window_ns: Optional[int] = None) -> dict:
+                               window_ns: Optional[int] = None,
+                               quantile: bool = True) -> dict:
         """``{group: {window_start: WindowAgg}}`` from the rollup tiers —
         the mergeable form of :meth:`rollup_aggregate` (window-granularity
         range filtering, survives raw retention).  The returned WindowAggs
-        are fresh merge products, safe to hand across threads/shards."""
+        are fresh merge products, safe to hand across threads/shards.
+
+        ``quantile`` (default True): partials are federation currency and
+        the consumer's agg is usually unknown here, so sketched fields
+        decompose to the finest tier and carry their quantile bins (see
+        ``SeriesRollups.windows``).  Agg-aware callers serving a *scalar*
+        aggregate pass False to stay on the coarsest serving tier — the
+        accumulation order then matches a sketch-free config exactly."""
         if self.rollup_config is None:
             return {}
         if window_ns is None:
@@ -475,7 +534,7 @@ class Database:
                     continue
                 g = store.tags.get(group_by_tag, "") if group_by_tag else ""
                 groups[g].append(store.rollups.windows(
-                    field, window_ns, t_min, t_max))
+                    field, window_ns, t_min, t_max, quantile=quantile))
             return {g: merge_window_maps(maps)
                     for g, maps in groups.items()}
 
@@ -505,7 +564,7 @@ class Database:
     def _rollup_serves(self, window_ns: int, agg: str,
                        t_min: Optional[int], t_max: Optional[int],
                        force: bool) -> bool:
-        if self.rollup_config is None or agg not in ROLLUP_AGGS or \
+        if self.rollup_config is None or not known_agg(agg) or \
                 self.rollup_config.tier_for(window_ns) is None:
             return False
         if force:
@@ -530,14 +589,9 @@ class Database:
         """
         parts = self.rollup_window_partials(
             measurement, field, tags=tags, t_min=t_min, t_max=t_max,
-            group_by_tag=group_by_tag, window_ns=window_ns)
-        out = {}
-        for g, merged in parts.items():
-            if not merged:
-                continue
-            starts = sorted(merged)
-            out[g] = (starts, [merged[w].value(agg) for w in starts])
-        return out
+            group_by_tag=group_by_tag, window_ns=window_ns,
+            quantile=quantile_of(agg) is not None)
+        return finalize_windowed(parts, agg)
 
     def rollup_series(self, measurement: str, field: str, *,
                       agg: str = "mean", tags: Optional[dict] = None,
@@ -559,13 +613,23 @@ class Database:
             for store in self._stores(measurement, tags):
                 if store.rollups is None:
                     continue
-                wins = store.rollups.windows(field, window_ns, t_min, t_max)
+                wins = store.rollups.windows(
+                    field, window_ns, t_min, t_max,
+                    quantile=quantile_of(agg) is not None)
                 if not wins:
                     continue
-                starts = sorted(wins)
+                starts = []
+                vals = []
+                for w in sorted(wins):
+                    v = wins[w].value(agg)
+                    if v is None:     # empty window / quantile sans sketch
+                        continue
+                    starts.append(w)
+                    vals.append(v)
+                if not starts:
+                    continue
                 out.append(Series(measurement, dict(store.tags), starts,
-                                  {field: [wins[w].value(agg)
-                                           for w in starts]}))
+                                  {field: vals}))
             return out
 
     def rollup_window_count(self, measurement: str, field: str, *,
@@ -759,6 +823,13 @@ def _agg(vals: list, agg: str):
         return float(len(vals))
     if agg == "last":
         return vals[-1]
+    q = quantile_of(agg)
+    if q is not None:
+        # exact nearest-rank percentile (rank ceil(q*n)-1, 0-based) — the
+        # convention QuantileSketch.quantile approximates, so raw-rescan
+        # ranking (query order_agg) and sketch answers are comparable
+        s = sorted(vals)
+        return s[min(len(s) - 1, max(0, math.ceil(q * len(s)) - 1))]
     raise ValueError(f"unknown agg {agg!r}")
 
 
@@ -768,11 +839,12 @@ class _SeriesStore:
     __slots__ = ("tags", "times", "values", "rollups")
 
     def __init__(self, tags: dict,
-                 rollup_config: Optional[RollupConfig] = None):
+                 rollup_config: Optional[RollupConfig] = None,
+                 measurement: Optional[str] = None):
         self.tags = tags
         self.times: list = []
         self.values: dict = defaultdict(list)
-        self.rollups = SeriesRollups(rollup_config) \
+        self.rollups = SeriesRollups(rollup_config, measurement) \
             if rollup_config is not None else None
 
     def append(self, ts: int, fields: dict):

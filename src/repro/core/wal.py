@@ -47,9 +47,12 @@ Layout (one :class:`DurableStore` per named database)::
 
 * **Snapshot + compaction** (:meth:`DurableStore.snapshot`): under a
   write barrier (all shard WAL locks), rotate every shard's segment and
-  capture the live column stores plus rollup window state; the snapshot
-  is written atomically (tmp + fsync + rename) and every segment it
-  covers is deleted.  Recovery cost is O(live data), not O(all-time
+  capture the live column stores plus rollup window state (including
+  quantile-sketch bins for fields opted in via
+  ``RollupConfig(sketch_fields=...)`` — ``WindowAgg.state()`` is the
+  single serialization point, so p50/p95/p99 answers are restart-exact
+  too); the snapshot is written atomically (tmp + fsync + rename) and
+  every segment it covers is deleted.  Recovery cost is O(live data), not O(all-time
   writes), and :meth:`DurableStore.enforce_retention` drops whole
   expired segments by compacting through a snapshot (so rollup windows
   survive recovery exactly like they survive in-memory retention).

@@ -1,0 +1,564 @@
+"""Mergeable quantile sketches + the pluggable aggregate family.
+
+What this module holds as properties (ISSUE 9):
+
+* rank-accuracy — sketch p50/p95/p99 within 2% *relative value error* of
+  the exact nearest-rank answer on adversarial distributions (constants,
+  heavy tails, negatives, counter resets, zero-mixed);
+* merge algebra — sketch merge is commutative and associative (bin-wise
+  integer addition), so any batching/sharding order gives the same bins;
+* parity by construction — p95 answers are identical local vs sharded
+  (1-8 shards) vs HTTP-federated, survive raw retention and cold sealing,
+  and are restart-exact through a WAL snapshot;
+* versioned wire form — old 6-field scalar states/dicts still decode and
+  a sketchless peer degrades gracefully (scalars exact, quantiles None);
+* the empty-window mean regression (``value("mean")`` on count 0 is
+  ``None``, never ZeroDivisionError) through /query and /query/v2;
+* /meta?what=rollups + HttpQueryClient fail-fast validation;
+* the per-job fingerprint fleet rule end-to-end through /alerts.
+"""
+
+import json
+import math
+import random
+import urllib.request
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import (MonitoringStack, Point, QuerySpec, RollupConfig,
+                        now_ns)
+from repro.core.httpd import HttpQueryClient, LMSHttpServer
+from repro.core.query import QueryEngine
+from repro.core.rollup import (QUANTILE_AGGS, QuantileSketch, SCALAR_AGGS,
+                               SketchAgg, WindowAgg, agg_from_state,
+                               quantile_of)
+from repro.core.router import MetricsRouter
+from repro.core.shard import (ShardedDatabase, windowagg_from_dict,
+                              windowagg_to_dict)
+from repro.core.tsdb import Database, TSDBServer
+
+S = 10 ** 9
+CFG = RollupConfig(sketch_fields={"m": "*"})
+TIER = CFG.tiers_ns[0]
+
+
+def _exact_q(vals, q):
+    s = sorted(vals)
+    return s[min(len(s) - 1, max(0, math.ceil(q * len(s)) - 1))]
+
+
+def _stream(rng, n, hosts=2):
+    return [Point("m", {"hostname": f"h{rng.randrange(hosts)}"},
+                  {"v": rng.lognormvariate(0, 2) - 0.5},
+                  rng.randrange(0, 200) * S)
+            for _ in range(n)]
+
+
+def _write_in_batches(db, pts, rng):
+    pts = list(pts)
+    while pts:
+        k = rng.randrange(1, min(64, len(pts)) + 1)
+        db.write(pts[:k])
+        pts = pts[k:]
+
+
+# -- satellite 1: empty-window mean regression --------------------------------
+
+
+def test_mean_of_empty_window_is_none():
+    assert WindowAgg().value("mean") is None
+    # count-0 state (pre-refactor snapshots can carry these)
+    wa = agg_from_state([0, 0.0, None, None, None, None])
+    assert wa.value("mean") is None
+    assert wa.value("p95") is None      # quantile of sketchless: None
+
+
+def _db_with_empty_window(backend):
+    """Install a series whose rollups hold a count-0 window next to a
+    real one — the shape an old snapshot (or a buggy writer) produces."""
+    db = backend.db("global")
+    tier = db.rollup_config.tiers_ns[0]
+    db.restore_series([{
+        "m": "m", "tags": {"hostname": "h0"},
+        "times": [5 * S], "values": {"v": [3.0]},
+        "rollups": {"v": {str(tier): {
+            "0": [1, 3.0, 3.0, 3.0, 5 * S, 3.0],
+            str(tier): [0, 0.0, None, None, None, None]}}}}])
+    return db
+
+
+def test_empty_window_mean_through_query_endpoints():
+    backend = TSDBServer()
+    router = MetricsRouter(backend)
+    db = _db_with_empty_window(backend)
+    tier = db.rollup_config.tiers_ns[0]
+    # local: the empty window is skipped, never a ZeroDivisionError
+    out = db.aggregate("m", "v", agg="mean", window_ns=tier,
+                       use_rollups=True)
+    assert out[""] == ([0], [pytest.approx(3.0)])
+    with LMSHttpServer(router) as srv:
+        # /query (GET form)
+        with urllib.request.urlopen(
+                f"{srv.url}/query?m=m&field=v&agg=mean"
+                f"&window_ns={tier}&rollups=force") as r:
+            got = json.load(r)["result"]
+        assert got[""] == [[0], [3.0]]
+        # /query/v2 (QuerySpec pushdown)
+        client = HttpQueryClient(srv.url)
+        res = client.query(QuerySpec("m", ("v",), window_ns=tier))
+        m = res.groups[""]["v"]
+        assert m["times"] == [0]
+        assert m["values"] == pytest.approx([3.0])
+
+
+# -- rank accuracy on adversarial distributions -------------------------------
+
+
+def _dist(name, rng, n=4000):
+    if name == "constant":
+        return [7.25] * n
+    if name == "heavy_tail":
+        return [rng.paretovariate(1.3) for _ in range(n)]
+    if name == "negative":
+        return [-abs(rng.lognormvariate(2, 1.5)) for _ in range(n)]
+    if name == "counter_reset":
+        # monotone counter that wraps to 0 every ~500 samples
+        out, c = [], 0.0
+        for i in range(n):
+            c = 0.0 if i % 500 == 499 else c + rng.random() * 10
+            out.append(c)
+        return out
+    if name == "zero_mixed":
+        return [0.0 if rng.random() < 0.3
+                else rng.gauss(0, 100) for _ in range(n)]
+    raise AssertionError(name)
+
+
+def _assert_rank_close(approx, exact, rel=0.02):
+    assert approx == pytest.approx(exact, rel=rel, abs=1e-9)
+
+
+@pytest.mark.parametrize("dist", ["constant", "heavy_tail", "negative",
+                                  "counter_reset", "zero_mixed"])
+def test_sketch_rank_error_within_2pct(dist):
+    rng = random.Random(hash(dist) & 0xffff)
+    vals = _dist(dist, rng)
+    sk = QuantileSketch(CFG.sketch_rel_acc, CFG.sketch_max_bins)
+    for v in vals:
+        sk.insert(v)
+    assert sk.count() == len(vals)
+    for qname in QUANTILE_AGGS:
+        q = quantile_of(qname)
+        _assert_rank_close(sk.quantile(q), _exact_q(vals, q))
+
+
+def test_sketch_skips_non_finite():
+    sk = QuantileSketch(0.01, 2048)
+    for v in (1.0, float("nan"), float("inf"), float("-inf"), 2.0, 3.0):
+        sk.insert(v)
+    assert sk.count() == 3
+    _assert_rank_close(sk.quantile(0.5), 2.0)
+
+
+def test_sketch_bin_cap_collapses_not_grows():
+    sk = QuantileSketch(0.01, max_bins=16)
+    rng = random.Random(3)
+    vals = [rng.lognormvariate(0, 6) for _ in range(5000)]
+    for v in vals:
+        sk.insert(v)
+    assert len(sk.pos) <= 16
+    assert sk.count() == 5000
+    # collapse eats the *smallest* keys, folding their mass upward — so
+    # accuracy degrades (the documented trade for bounded memory) but the
+    # structure stays sane: monotone, positive, biased toward the tail,
+    # never under-reporting the high quantiles
+    assert sk.quantile(0.99) >= sk.quantile(0.5) > 0
+    assert sk.quantile(0.99) >= _exact_q(vals, 0.99) * 0.98
+    # a production-sized budget keeps the same stream within the bound
+    big = QuantileSketch(0.01, max_bins=2048)
+    for v in vals:
+        big.insert(v)
+    _assert_rank_close(big.quantile(0.99), _exact_q(vals, 0.99))
+
+
+# -- merge algebra -------------------------------------------------------------
+
+
+def _merged(sketches):
+    out = QuantileSketch(CFG.sketch_rel_acc, CFG.sketch_max_bins)
+    for s in sketches:
+        out.merge(s)
+    return out
+
+
+def _sketch_of(vals):
+    sk = QuantileSketch(CFG.sketch_rel_acc, CFG.sketch_max_bins)
+    for v in vals:
+        sk.insert(v)
+    return sk
+
+
+def _state_key(sk):
+    st8 = sk.to_state()
+    return (st8["z"], tuple(sorted(st8["p"].items())),
+            tuple(sorted(st8["n"].items())))
+
+
+def test_sketch_merge_commutative_associative():
+    rng = random.Random(11)
+    chunks = [[rng.gauss(0, 50) for _ in range(rng.randrange(1, 400))]
+              for _ in range(5)]
+    sks = [_sketch_of(c) for c in chunks]
+    orders = [sks, sks[::-1], [sks[2], sks[0], sks[4], sks[1], sks[3]]]
+    keys = {_state_key(_merged(o)) for o in orders}
+    assert len(keys) == 1               # bins identical, any merge order
+    # associativity: ((a+b)+c) == (a+(b+c)) at the bin level
+    ab = _merged(sks[:2]); ab.merge(sks[2])
+    bc = _merged(sks[1:3])
+    a_bc = _merged([sks[0]]); a_bc.merge(bc)
+    assert _state_key(ab) == _state_key(a_bc)
+    flat = [v for c in chunks for v in c]
+    for qname in QUANTILE_AGGS:
+        q = quantile_of(qname)
+        _assert_rank_close(_merged(sks).quantile(q), _exact_q(flat, q))
+
+
+def test_mixed_version_merge_degrades_gracefully():
+    """Merging a sketchless peer's partial keeps scalars exact and turns
+    quantiles into None — never a wrong number."""
+    sk = SketchAgg(0.01, 2048)
+    for i in range(100):
+        sk.update(i * S, float(i))
+    old = WindowAgg()                   # what an old peer federates
+    for i in range(50):
+        old.update(i * S, 1000.0 + i)
+    merged = sk.fresh()
+    merged.merge(sk)
+    merged.merge(old)
+    assert merged.count == 150
+    assert merged.value("max") == 1049.0
+    assert merged.value("mean") == pytest.approx(
+        (sum(range(100)) + sum(1000.0 + i for i in range(50))) / 150)
+    assert merged.value("p95") is None  # tainted, not fabricated
+
+
+# -- property tier (hypothesis; skips cleanly when not installed) -------------
+
+
+_floats = st.floats(min_value=-1e9, max_value=1e9,
+                    allow_nan=False, allow_infinity=False, width=32)
+
+
+@pytest.mark.stress
+@settings(max_examples=50, deadline=None)
+@given(st.lists(_floats, min_size=1, max_size=300),
+       st.integers(min_value=0, max_value=2 ** 32 - 1))
+def test_property_merge_order_invariant(vals, seed):
+    rng = random.Random(seed)
+    cuts = sorted(rng.randrange(len(vals) + 1) for _ in range(3))
+    parts = [vals[a:b] for a, b in
+             zip([0] + cuts, cuts + [len(vals)])]
+    sks = [_sketch_of(p) for p in parts]
+    shuffled = sks[:]
+    rng.shuffle(shuffled)
+    assert _state_key(_merged(sks)) == _state_key(_merged(shuffled))
+    assert _state_key(_merged(sks)) == _state_key(_sketch_of(vals))
+
+
+@pytest.mark.stress
+@settings(max_examples=50, deadline=None)
+@given(st.lists(_floats, min_size=1, max_size=500))
+def test_property_rank_error_bound(vals):
+    sk = _sketch_of(vals)
+    for qname in QUANTILE_AGGS:
+        q = quantile_of(qname)
+        _assert_rank_close(sk.quantile(q), _exact_q(vals, q))
+
+
+# -- scalar aggregates must not move ------------------------------------------
+
+
+def test_scalar_aggs_byte_identical_with_and_without_sketches():
+    rng = random.Random(21)
+    pts = _stream(rng, 1200)
+    plain = Database("plain")
+    sketched = Database("sk", CFG)
+    plain.write(pts)
+    sketched.write(pts)
+    for agg in SCALAR_AGGS:
+        assert sketched.aggregate("m", "v", agg=agg,
+                                  group_by_tag="hostname") == \
+            plain.aggregate("m", "v", agg=agg, group_by_tag="hostname")
+        assert sketched.aggregate("m", "v", agg=agg, window_ns=10 * S) == \
+            plain.aggregate("m", "v", agg=agg, window_ns=10 * S)
+    # quantiles on an unsketched database: empty result, not an error
+    assert plain.aggregate("m", "v", agg="p95") == {}
+
+
+# -- federation / retention / cold / restart parity ---------------------------
+
+
+@pytest.mark.parametrize("shards", list(range(1, 9)))
+def test_p95_local_sharded_http_identical(shards):
+    rng = random.Random(shards)
+    pts = _stream(rng, 600)
+    ref = Database("ref", CFG)
+    sh = ShardedDatabase("s", shards=shards, rollup_config=CFG)
+    ref.write(pts)
+    _write_in_batches(sh, pts, random.Random(7 + shards))
+    for qname in QUANTILE_AGGS:
+        want = ref.aggregate("m", "v", agg=qname, group_by_tag="hostname")
+        assert sh.aggregate("m", "v", agg=qname,
+                            group_by_tag="hostname") == want
+        assert sh.aggregate("m", "v", agg=qname, window_ns=10 * S) == \
+            ref.aggregate("m", "v", agg=qname, window_ns=10 * S)
+    # the scalar p95 matches the exact raw answer within the rank bound
+    by_host: dict = {}
+    for p in pts:
+        by_host.setdefault(p.tags["hostname"], []).append(p.fields["v"])
+    got = sh.aggregate("m", "v", agg="p95", group_by_tag="hostname")
+    for h, vals in by_host.items():
+        _assert_rank_close(got[h], _exact_q(vals, 0.95))
+
+
+def test_p95_http_federated_equals_local():
+    backend = TSDBServer(rollup_config=CFG)
+    router = MetricsRouter(backend)
+    rng = random.Random(5)
+    pts = _stream(rng, 500)
+    backend.db("global").write(pts)
+    ref = Database("ref", CFG)
+    ref.write(pts)
+    with LMSHttpServer(router) as srv:
+        client = HttpQueryClient(srv.url)
+        assert client.rollup_config.sketched("m", "v")
+        for win in (None, 10 * S):
+            assert client.aggregate("m", "v", agg="p95",
+                                    group_by_tag="hostname",
+                                    window_ns=win) == \
+                ref.aggregate("m", "v", agg="p95",
+                              group_by_tag="hostname", window_ns=win)
+
+
+def test_p95_survives_retention_served_from_rollups():
+    rng = random.Random(13)
+    pts = _stream(rng, 2000, hosts=1)
+    vals = [p.fields["v"] for p in pts]
+    db = Database("d", CFG)
+    db.write(pts)
+    exact = {q: _exact_q(vals, quantile_of(q)) for q in QUANTILE_AGGS}
+    db.enforce_retention(max_points_per_series=4)
+    assert db.stored_points() <= 4
+    for qname, want in exact.items():
+        out = db.aggregate("m", "v", agg=qname, use_rollups=True)
+        _assert_rank_close(out[""], want)
+
+
+def test_p95_over_cold_sealed_raw_scan(tmp_path):
+    """A raw rescan over cold-sealed history rebuilds sketch-carrying
+    aggregates (RollupConfig.new_agg), so use_rollups=False answers the
+    same quantiles as the hot path did."""
+    server = TSDBServer(persist_dir=str(tmp_path), cold=True,
+                        rollup_config=CFG)
+    rng = random.Random(17)
+    now = now_ns()
+    pts = [Point("m", {"hostname": "h0"}, {"v": rng.paretovariate(1.5)},
+                 now - (800 - i) * S) for i in range(800)]
+    vals = [p.fields["v"] for p in pts]
+    server.write(pts, "global")
+    db = server.db("global")
+    hot = db.aggregate("m", "v", agg="p95", use_rollups=False)[""]
+    report = server.enforce_retention(max_age_ns=400 * S)
+    assert report["global"]["points_sealed"] > 0    # older half sealed
+    cold = db.aggregate("m", "v", agg="p95", use_rollups=False)[""]
+    assert cold == hot
+    _assert_rank_close(cold, _exact_q(vals, 0.95))
+    server.close()
+
+
+@pytest.mark.parametrize("shards", [1, 3, 8])
+def test_snapshot_recover_quantiles_restart_exact(tmp_path, shards):
+    cfg = CFG
+    a = TSDBServer(persist_dir=str(tmp_path), shards=shards,
+                   rollup_config=cfg)
+    rng = random.Random(shards + 40)
+    pts = _stream(rng, 700)
+    a.write(pts, "global")
+    before = {(q, w): a.db("global").aggregate(
+        "m", "v", agg=q, group_by_tag="hostname", window_ns=w)
+        for q in QUANTILE_AGGS for w in (None, 10 * S)}
+    a.snapshot()
+    a.close()
+    b = TSDBServer(persist_dir=str(tmp_path), shards=shards,
+                   rollup_config=cfg)
+    b.load_persisted()
+    for (q, w), want in before.items():
+        assert b.db("global").aggregate(
+            "m", "v", agg=q, group_by_tag="hostname",
+            window_ns=w) == want
+    b.close()
+
+
+# -- versioned wire form -------------------------------------------------------
+
+
+def test_wire_form_versioning():
+    # old 6-element state list decodes as a scalar aggregate
+    wa = agg_from_state([3, 6.0, 1.0, 3.0, 2 * S, 3.0])
+    assert type(wa) is WindowAgg and wa.count == 3
+    # sketch-carrying state round-trips
+    sk = SketchAgg(0.01, 2048)
+    for i in range(200):
+        sk.update(i * S, float(i + 1))
+    back = agg_from_state(sk.state())
+    assert back.state() == sk.state()
+    assert back.value("p95") == sk.value("p95")
+    # HTTP dict form: scalar dicts carry no sketch key (old peers can
+    # ignore nothing), sketch dicts round-trip, old dicts still decode
+    plain_d = windowagg_to_dict(WindowAgg())
+    assert "sketch" not in plain_d
+    d = windowagg_to_dict(sk)
+    assert "sketch" in d
+    rt = windowagg_from_dict(json.loads(json.dumps(d)))
+    assert rt.value("p95") == sk.value("p95") and rt.count == sk.count
+    old_d = {k: v for k, v in d.items() if k != "sketch"}
+    old_wa = windowagg_from_dict(old_d)
+    assert type(old_wa) is WindowAgg and old_wa.count == sk.count
+
+
+# -- quantiles in the query/rules layer ---------------------------------------
+
+
+def test_p95_in_queryspec_expression():
+    db = Database("d", RollupConfig(sketch_fields={"hpm": ["flops"]}))
+    rng = random.Random(9)
+    flops = [abs(rng.gauss(100, 30)) for _ in range(300)]
+    db.write([Point("hpm", {"hostname": "h0"}, {"flops": v}, i * S)
+              for i, v in enumerate(flops)])
+    spec = QuerySpec("hpm", ("tail=p95(flops) / 1e3",), window_ns=60 * S,
+                     group_by="hostname")
+    res = QueryEngine(db).query(spec)
+    m = res.groups["h0"]["tail"]
+    assert len(m["times"]) == 5
+    for w0, got in zip(m["times"], m["values"]):
+        window = flops[w0 // S:(w0 + 60 * S) // S]
+        _assert_rank_close(got, _exact_q(window, 0.95) / 1e3)
+
+
+def test_p95_in_threshold_rule_expr():
+    from repro.core.analysis import ThresholdRule, evaluate_rules_on_db
+    db = Database("d", RollupConfig(sketch_fields={"hpm": "*"}))
+    # 1-in-10 steps stalls at 40s from t=30s on: the per-window p95 sees
+    # the stall (40.0) while the per-window mean smears it to ~4.9
+    pts = []
+    for sec in range(120):
+        for k in range(10):
+            bad = 40.0 if (sec >= 30 and k == 9) else 1.0
+            pts.append(Point("hpm", {"hostname": "h0"},
+                             {"step_time_s": bad},
+                             sec * S + k * (S // 10)))
+    db.write(pts)
+    tail = ThresholdRule("tail_latency", "hpm", "p95_step", ">", 10.0,
+                         min_duration_s=30, expr="p95(step_time_s)")
+    mean = ThresholdRule("mean_latency", "hpm", "step_time_s", ">", 10.0,
+                         min_duration_s=30)
+    findings = evaluate_rules_on_db(db, [tail, mean], use_rollups=True)
+    assert any(f.rule == "tail_latency" for f in findings)
+    assert not any(f.rule == "mean_latency" for f in findings)
+    hit = next(f for f in findings if f.rule == "tail_latency")
+    assert hit.duration_s >= 30
+
+
+# -- /meta family + client fail-fast ------------------------------------------
+
+
+def test_meta_rollups_and_client_validation():
+    backend = TSDBServer(rollup_config=CFG)
+    router = MetricsRouter(backend)
+    backend.db("global").write([Point("m", {"hostname": "h"},
+                                      {"v": 1.0, "u": 2.0}, S)])
+    with LMSHttpServer(router) as srv:
+        with urllib.request.urlopen(
+                f"{srv.url}/meta?what=rollups") as r:
+            meta = json.load(r)["rollups"]
+        assert set(meta["aggs"]) >= set(SCALAR_AGGS) | set(QUANTILE_AGGS)
+        assert meta["tiers_ns"] == list(CFG.tiers_ns)
+        assert meta["sketch"]["gamma"] == pytest.approx(CFG.sketch_gamma)
+        assert meta["sketch"]["fields"] == {"m": "*"}
+        client = HttpQueryClient(srv.url)
+        with pytest.raises(ValueError, match="median"):
+            client.aggregate("m", "v", agg="median")
+        # p95 on a measurement with no sketches: fail fast client-side
+        with pytest.raises(ValueError, match="sketch_fields"):
+            client.aggregate("hpm", "mfu", agg="p95")
+        # sketched field passes validation and answers (within the
+        # sketch's 1% relative value accuracy)
+        _assert_rank_close(client.aggregate("m", "v", agg="p95")[""], 1.0)
+        # old servers (no rollups meta): validation is skipped, not fatal
+        client2 = HttpQueryClient(srv.url)
+        client2._rollups_meta = None
+        _assert_rank_close(client2.aggregate("m", "v", agg="p95")[""], 1.0)
+
+
+# -- job fingerprints + the fleet rule ----------------------------------------
+
+
+def _run_fp_job(stack, jid, scale):
+    hosts = ["h0", "h1"]
+    with stack.job(jid, user="alice", hosts=hosts,
+                   tags={"jobname": "train"}):
+        agents = [stack.host_agent(h, hlo_flops=5e14, model_flops=4e14,
+                                   hlo_bytes=2e11, collective_bytes=1e10,
+                                   tokens_per_step=1024) for h in hosts]
+        t0 = now_ns()
+        for step in range(25):
+            for a in agents:
+                a.collect_step(step=step, step_time_s=5.0 * scale,
+                               extra_events={"data_wait_s": 0.1},
+                               ts=t0 + step * 5 * S)
+
+
+def test_fingerprint_fleet_rule_end_to_end(tmp_path):
+    """Four healthy runs of a job family build the baseline; a fifth,
+    pathological run (>3 sigma off the family's p95 fingerprint) is
+    flagged through the normal /alerts surface."""
+    stack = MonitoringStack.inprocess(
+        out_dir=str(tmp_path), serve_http=True,
+        rollup_config=RollupConfig(sketch_fields={"hpm": "*",
+                                                  "system": "*"}))
+    for i in range(4):
+        _run_fp_job(stack, f"j{i}", 1.0)
+    assert not [a for a in stack.analysis.alerts
+                if a.rule == "fingerprint_outlier"]
+    _run_fp_job(stack, "jbad", 40.0)
+    hits = [a for a in stack.analysis.alerts
+            if a.rule == "fingerprint_outlier"]
+    assert len(hits) == 1 and hits[0].jobid == "jbad"
+    assert stack.analysis.stats["fingerprints_written"] == 5
+    assert stack.analysis.stats["fingerprint_outliers"] == 1
+    with urllib.request.urlopen(f"{stack.http.url}/alerts") as r:
+        rows = [a for a in json.load(r)["alerts"]
+                if a["rule"] == "fingerprint_outlier"]
+    assert rows and rows[0]["jobid"] == "jbad"
+    assert "p95" in rows[0]["evidence"]
+
+
+def test_fingerprint_persisted_and_loadable(tmp_path):
+    from repro.core import job_fingerprint, load_fingerprints
+    stack = MonitoringStack.inprocess(
+        out_dir=str(tmp_path),
+        rollup_config=RollupConfig(sketch_fields={"hpm": "*"}))
+    _run_fp_job(stack, "j1", 1.0)
+    db = stack.backend.db("global")
+    fps = load_fingerprints(db, family="train")
+    assert [e["jobid"] for e in fps] == ["j1"]
+    fp = fps[0]["fingerprint"]
+    assert "mfu" in fp and set(fp["mfu"]) == set(QUANTILE_AGGS)
+    # recomputing from the rollups reproduces the persisted vector
+    live = job_fingerprint(db, "j1")
+    assert live["mfu"] == pytest.approx(fp["mfu"])
