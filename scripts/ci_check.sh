@@ -6,9 +6,11 @@
 # the bounded crash-injection tier (SIGKILL a writer subprocess
 # mid-write, recover, check invariants), the dynamic race tier
 # (run the stack under repro.core.locktrace and cross-check observed
-# lock orders against the static lock graph), then the quantile-sketch
-# benchmark (rollup-served p95 vs raw rescan + the >=90% sketched-ingest
-# retention bar, printed for the reviewer).  See tests/README.md.
+# lock orders against the static lock graph), then the benchmarks
+# (quantile sketches: rollup-served p95 vs raw rescan + the >=90%
+# sketched-ingest retention bar; markers: <=5% instrumented-step
+# overhead + rollup-served roofline query speedup — printed for the
+# reviewer).  See tests/README.md.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -36,7 +38,8 @@ timeout "${CI_FAST_TIMEOUT:-600}" python -m pytest -q \
     tests/test_analysis_engine.py \
     tests/test_coldstore.py \
     tests/test_analyzer.py \
-    tests/test_quantile_sketch.py
+    tests/test_quantile_sketch.py \
+    tests/test_marker.py
 
 echo "[4/7] stress/property tier (bounded; timeout ${CI_STRESS_TIMEOUT:-600}s)"
 # Bounded example counts keep CI deterministic-ish and quick; raise the
@@ -54,12 +57,14 @@ timeout "${CI_CRASH_TIMEOUT:-300}" python -m pytest -q -m crash tests/
 echo "[6/7] race tier (timeout ${CI_RACE_TIMEOUT:-300}s)"
 timeout "${CI_RACE_TIMEOUT:-300}" python -m pytest -q -m race tests/
 
-echo "[7/7] quantile-sketch benchmark (timeout ${CI_BENCH_TIMEOUT:-600}s)"
-# Prints the rollup-served p95 vs raw-rescan ratio and the sketched
-# ingest retention (target >=90% of scalar-only ingest) for the
-# reviewer; timing bars are advisory on shared CI hardware, so the gate
-# is that the benchmark runs to completion, not the ratio itself.
+echo "[7/7] benchmarks (timeout ${CI_BENCH_TIMEOUT:-600}s)"
+# bench_quantile_sketch prints the rollup-served p95 vs raw-rescan
+# ratio and the sketched ingest retention (target >=90% of scalar-only
+# ingest); bench_marker_roofline prints the marked-vs-unmarked train
+# step delta (<=5% bar) and the rollup-served roofline query speedup.
+# Timing bars are advisory on shared CI hardware, so the gate is that
+# the benchmarks run to completion, not the ratios themselves.
 timeout "${CI_BENCH_TIMEOUT:-600}" python -m benchmarks.run \
-    bench_quantile_sketch
+    bench_quantile_sketch bench_marker_roofline
 
 echo "ci_check: OK"

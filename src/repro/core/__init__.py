@@ -24,6 +24,10 @@ from repro.core.httpd import HttpSink, LMSHttpServer
 from repro.core.jobs import JobInfo, JobRegistry
 from repro.core.line_protocol import (Point, decode_batch, decode_line,
                                       encode_batch, encode_point, now_ns)
+from repro.core.marker import (CALIB_REGION, MARKER_MEASUREMENT,
+                               MarkerSession, calibrate, low_roofline_rule,
+                               register_roofline_group, roofline_group_text,
+                               roofline_peaks, roofline_spec)
 from repro.core.perf_groups import (GROUPS, HBM_BW, ICI_BW, PEAK_FLOPS,
                                     CompiledFormula, PerfGroup,
                                     compile_formula, derive_all,
@@ -48,6 +52,7 @@ from repro.core.wal import DurableStore, SegmentedWal, import_legacy_jsonl
 
 __all__ = [
     "ANALYSIS_MEASUREMENT", "Alert", "AnalysisEngine", "BinarySink",
+    "CALIB_REGION", "MARKER_MEASUREMENT", "MarkerSession",
     "ColdStore", "ColdView", "CompiledFormula",
     "DEFAULT_TIERS_NS", "DEFAULT_TREE", "Database", "DashboardAgent",
     "DurableStore", "FederatedQuery", "Finding", "GROUPS", "HBM_BW",
@@ -59,13 +64,17 @@ __all__ = [
     "ROLLUP_AGGS", "RollupConfig",
     "RooflineAnalyzer", "RooflineResult", "SeriesRollups", "SketchAgg",
     "ShardedDatabase", "StreamAnalyzer", "TSDBServer", "ThresholdRule",
-    "UserMetric", "WindowAgg", "classify_job", "compile_formula",
+    "UserMetric", "WindowAgg", "calibrate", "classify_job",
+    "compile_formula",
     "decode_batch", "decode_line", "default_rules", "derive_all",
     "derived_rollup_series", "encode_batch", "encode_point",
     "evaluate_rules_on_db", "fingerprint_outliers", "fingerprint_point",
     "formula_for", "job_fingerprint", "known_agg", "load_alerts",
-    "load_fingerprints", "load_job_report", "make_plan", "now_ns",
-    "parse_group", "quantile_of", "register_group", "shard_index",
+    "load_fingerprints", "load_job_report", "low_roofline_rule",
+    "make_plan", "now_ns",
+    "parse_group", "quantile_of", "register_group",
+    "register_roofline_group", "roofline_group_text", "roofline_peaks",
+    "roofline_spec", "shard_index",
 ]
 
 
@@ -159,6 +168,14 @@ class MonitoringStack:
 
     def host_agent(self, hostname: str, **consts) -> HostAgent:
         return HostAgent(self.router, hostname, consts or None)
+
+    def marker_session(self, host: Optional[str] = None,
+                       **tags) -> MarkerSession:
+        """A :class:`MarkerSession` (repro.core.marker) emitting through a
+        fresh UserMetric into this stack — region points arrive as the
+        ``marker`` measurement and get the live job's tags from the
+        router like any other metric."""
+        return self.usermetric(host=host, **tags).markers
 
     # -- job lifecycle --------------------------------------------------------------
 

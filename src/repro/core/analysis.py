@@ -232,9 +232,16 @@ class _Stretch:
 # translated to TPU-job metrics (DESIGN.md §2).  Thresholds are config knobs.
 def default_rules(*, mfu_floor: float = 0.02, mem_floor_gbs: float = 1.0,
                   idle_timeout_s: float = 60.0,
-                  straggler_skew: float = 0.15) -> list:
+                  straggler_skew: float = 0.15,
+                  roofline_floor: float = 0.05) -> list:
+    # query-time derived rule over the marker measurement: regions without
+    # flops/bytes counters produce no derived windows at all (the query
+    # layer skips them), so the rule can only fire on instrumented regions
+    from repro.core.marker import low_roofline_rule
     clear = idle_timeout_s / 4          # hysteresis: see ThresholdRule
     return [
+        low_roofline_rule(roofline_floor, min_duration_s=idle_timeout_s,
+                          clear_duration_s=clear),
         ThresholdRule("compute_break", "hpm", "mfu", "<", mfu_floor,
                       idle_timeout_s, "critical",
                       "FP rate below threshold for too long -> break in "

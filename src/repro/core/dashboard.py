@@ -41,6 +41,7 @@ from typing import Optional
 
 from repro.core.analysis import ANALYSIS_MEASUREMENT, load_alerts
 from repro.core.jobs import JobInfo
+from repro.core.marker import MARKER_MEASUREMENT, roofline_spec
 from repro.core.query import QueryEngine, QuerySpec
 from repro.core.tsdb import TSDBServer
 
@@ -176,10 +177,24 @@ class DashboardAgent:
                                                "field": fieldname}))
             if panels_out:
                 rows_out.append({"title": row_title, "panels": panels_out})
+        # marker regions get a dedicated roofline row (below), not the
+        # generic per-field timeseries treatment
+        if MARKER_MEASUREMENT in available:
+            rows_out.append({"title": "Roofline", "panels": [{
+                "type": "roofline",
+                "title": "Per-region roofline (marker regions)",
+                "datasource": db_name,
+                # a full /query/v2 QuerySpec: the panel, the low_roofline
+                # rule and any CLI consumer all execute the *same* spec
+                "targets": [{"query_v2":
+                             roofline_spec(job.job_id).to_dict()}],
+                "gridPos": {"h": 8, "w": 24},
+            }]})
         # app-level metrics beyond the defaults (paper §IV: extra metrics may
         # be available with application-level monitoring); the engine's own
         # analysis measurement is rendered as the header, not as panels
         extra = sorted(available - {"hpm", "system", "job_event",
+                                    MARKER_MEASUREMENT,
                                     ANALYSIS_MEASUREMENT})
         for meas in extra:
             panels_out = [
@@ -313,6 +328,44 @@ class DashboardAgent:
                 f'<text x="2" y="{h-2}" font-size="10">{vmin:.4g}</text>'
                 f'</svg>')
 
+    def _roofline_html(self, db, spec_dict: dict,
+                       db_name: Optional[str] = None) -> str:
+        """Per-region roofline table: executes the panel's embedded
+        /query/v2 spec through the shared engine (derived ROOFLINE
+        metrics evaluated over the rollup tiers, cached against the
+        ingest watermark) and reduces each region's windows to totals
+        (time/calls; window agg is "sum") and window means (ratios)."""
+        res = self._engine(db, db_name).query(
+            QuerySpec.from_dict(spec_dict))
+
+        def _col(g, metric):
+            return [v for v in (g.get(metric) or {}).get("values", ())
+                    if v is not None]
+
+        def _fmt(v, spec="{:.3g}"):
+            return spec.format(v) if v is not None else "&mdash;"
+
+        rows = ["<table border='1' cellpadding='4'>"
+                "<tr><th>region</th><th>calls</th><th>time (s)</th>"
+                "<th>intensity (flop/B)</th><th>achieved GFLOP/s</th>"
+                "<th>roofline frac</th></tr>"]
+        for region in sorted(res.groups):
+            g = res.groups[region]
+            tot = {m: sum(_col(g, m)) for m in ("time_s", "calls")}
+            mean = {}
+            for m in ("intensity", "achieved_gflops", "roofline_frac"):
+                vals = _col(g, m)
+                mean[m] = sum(vals) / len(vals) if vals else None
+            rows.append(
+                f"<tr><td>{html.escape(region)}</td>"
+                f"<td>{tot['calls']:.0f}</td>"
+                f"<td>{tot['time_s']:.3g}</td>"
+                f"<td>{_fmt(mean['intensity'])}</td>"
+                f"<td>{_fmt(mean['achieved_gflops'])}</td>"
+                f"<td>{_fmt(mean['roofline_frac'], '{:.1%}')}</td></tr>")
+        rows.append("</table>")
+        return "\n".join(rows)
+
     def render_html(self, job: JobInfo, dash: dict,
                     db_name: str = "global") -> str:
         db = self.backend.db(db_name)
@@ -333,6 +386,12 @@ class DashboardAgent:
             parts.append(f"<h3>{html.escape(row['title'])}</h3>")
             for panel in row["panels"]:
                 tgt = panel["targets"][0]
+                if "query_v2" in tgt:
+                    parts.append(
+                        f"<div><b>{html.escape(panel['title'])}</b><br>"
+                        f"{self._roofline_html(db, tgt['query_v2'], db_name)}"
+                        "</div>")
+                    continue
                 ts, vs = self._series_for(db, tgt["measurement"],
                                           tgt["field"], job.job_id,
                                           db_name=db_name)

@@ -315,6 +315,18 @@ class LMSRequestHandler(BaseHTTPRequestHandler):
                     if hasattr(db, "cold_time_range") else None
                 self._send(200, {"cold": None if view is None else dict(
                     view.stats(), time_range=list(rng) if rng else None)})
+            elif what == "roofline":
+                # the ROOFLINE perf group as this instance resolves it
+                # (formula text a QuerySpec would embed), plus the latest
+                # calibration point, if any ("_calib" marker convention)
+                from repro.core.marker import roofline_peaks
+                from repro.core.perf_groups import GROUPS
+                grp = GROUPS["ROOFLINE"]
+                peaks = roofline_peaks(db)
+                self._send(200, {"roofline": {
+                    "metrics": dict(sorted(grp.metrics)),
+                    "calibrated": None if peaks is None else
+                    {"peak_flops": peaks[0], "peak_bw": peaks[1]}}})
             else:
                 self._send(400, {"error": f"unknown meta {what!r}"})
         elif url.path == "/alerts":

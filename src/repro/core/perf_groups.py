@@ -272,6 +272,40 @@ def parse_group(text: str) -> PerfGroup:
     return PerfGroup(name, events, metrics, desc)
 
 
+# ROOFLINE: per-region roofline placement over marker work counters
+# (repro.core.marker).  The template is shared with the calibrated
+# re-registration path: without measured peaks the formulas reference the
+# symbolic PEAK_FLOPS / HBM_BW names (HW_CONSTANTS fallback at eval
+# time); with peaks they are baked in as numeric literals, so the
+# resolved formula text itself carries the calibration inside any
+# QuerySpec that references @ROOFLINE.* metrics.
+_ROOFLINE_TEMPLATE = """
+GROUP ROOFLINE
+DESC marker-region roofline placement from work counters ({why})
+EVENTSET
+  flops
+  bytes
+  time_s
+METRICS
+  intensity           flops / bytes
+  achieved_gflops     flops / time_s / 1e9
+  attainable_gflops   min({pf}, {bw} * flops / bytes) / 1e9
+  roofline_frac       flops / time_s / min({pf}, {bw} * flops / bytes)
+"""
+
+
+def roofline_group_text(peak_flops: Optional[float] = None,
+                        peak_bw: Optional[float] = None) -> str:
+    """The ROOFLINE group text, with measured peaks baked in when given."""
+    if peak_flops is None and peak_bw is None:
+        return _ROOFLINE_TEMPLATE.format(pf="PEAK_FLOPS", bw="HBM_BW",
+                                         why="hardware-constant peaks")
+    pf = float(PEAK_FLOPS if peak_flops is None else peak_flops)
+    bw = float(HBM_BW if peak_bw is None else peak_bw)
+    return _ROOFLINE_TEMPLATE.format(pf=repr(pf), bw=repr(bw),
+                                     why="calibrated peaks")
+
+
 # The built-in groups (TPU analogues of the paper's §V metric list).
 _GROUP_TEXTS = [
     """
@@ -304,10 +338,13 @@ _GROUP_TEXTS = [
     DESC interconnect (collective) traffic — the QPI/network analogue
     EVENTSET
       collective_bytes
+      wire_bytes
       step_time_s
     METRICS
       ici_gb_per_s        collective_bytes / step_time_s / 1e9
       ici_bw_util         collective_bytes / step_time_s / ICI_BW
+      ici_wire_gb_per_s   wire_bytes / step_time_s / 1e9
+      ici_wire_bw_util    wire_bytes / step_time_s / ICI_BW
     """,
     """
     GROUP GOODPUT
@@ -321,6 +358,7 @@ _GROUP_TEXTS = [
       data_stall_frac     data_wait_s / step_time_s
       steps_per_s         1.0 / step_time_s
     """,
+    roofline_group_text(),
 ]
 
 GROUPS = {g.name: g for g in (parse_group(t) for t in _GROUP_TEXTS)}

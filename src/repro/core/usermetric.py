@@ -53,6 +53,7 @@ class UserMetric:
         self._join_timeouts = 0
         self._stop = threading.Event()
         self._thread = None
+        self._markers = None            # lazy MarkerSession (see .markers)
         if auto_flush_thread:
             self._thread = threading.Thread(target=self._flush_loop,
                                             daemon=True)
@@ -75,17 +76,43 @@ class UserMetric:
         self._push(Point(name, self._tags(tags), {"event": text},
                          ts if ts is not None else now_ns()))
 
+    @property
+    def markers(self):
+        """Lazy per-emitter marker session (``repro.core.marker``): exact
+        nested/concurrent region accounting emitted through this
+        UserMetric as the ``marker`` measurement."""
+        with self._lock:
+            mk = self._markers
+        if mk is None:
+            from repro.core.marker import MarkerSession
+            mk = MarkerSession(self)
+            with self._lock:
+                if self._markers is None:
+                    self._markers = mk
+                mk = self._markers
+        return mk
+
     def region(self, name: str, tags: Optional[dict] = None):
-        """Context manager timing a code region -> <name>_time_s metric."""
+        """Context manager timing a code region.
+
+        Routed through the marker subsystem (exact call counts and
+        inclusive/exclusive time under nesting and reentrancy — the old
+        inline implementation allocated a throwaway class per call and
+        only emitted a duration); the legacy per-call ``<name>_time_s``
+        point is still emitted for backward compatibility.
+        """
         um = self
+        inner = self.markers.region(name)
 
         class _Region:
             def __enter__(self):
-                self.t0 = time.monotonic()
+                inner.__enter__()
                 return self
 
             def __exit__(self, *exc):
-                um.metric(f"{name}_time_s", time.monotonic() - self.t0, tags)
+                inner.__exit__(*exc)
+                self.seconds = inner.seconds
+                um.metric(f"{name}_time_s", inner.seconds, tags)
                 return False
         return _Region()
 
@@ -113,7 +140,12 @@ class UserMetric:
 
     def flush(self):
         """Explicit flush: sink failures re-buffer AND raise, so batch
-        scripts that call ``flush()``/``close()`` see the error."""
+        scripts that call ``flush()``/``close()`` see the error.  Pending
+        marker-region deltas are drained into the buffer first."""
+        with self._lock:
+            mk = self._markers
+        if mk is not None:
+            mk.flush()
         self._flush(raise_errors=True)
 
     def _flush(self, raise_errors: bool):

@@ -136,3 +136,26 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         interpret=interpret,
         name="flash_attention",
     )(q, k, v)
+
+
+def cost_estimate(q_shape, kv_heads: int, itemsize: int, *,
+                  causal: bool = True, window: int = 0,
+                  bk: int = 128) -> dict:
+    """Analytic per-call ``{flops, bytes}`` for one flash_attention call
+    (the marker-region roofline fallback when HLO cost analysis is
+    unavailable — e.g. interpret-mode lowering).
+
+    FLOPs: the two MXU contractions, 2*S_q*S_kv*D each for QK^T and PV;
+    causal masking skips roughly half the key blocks, a sliding window
+    of w keeps ~(w+bk) keys per query.  Bytes: one read of q/k/v + one
+    write of o (HBM traffic of a single-pass fused kernel).
+    """
+    b, h, s, d = q_shape
+    frac = 1.0
+    if window and window > 0:
+        frac = min(1.0, (window + bk) / s)
+    elif causal:
+        frac = 0.5
+    flops = 4.0 * b * h * s * s * d * frac
+    elems = b * s * d * (2 * h + 2 * kv_heads)          # q + o + k + v
+    return {"flops": flops, "bytes": float(elems * itemsize)}

@@ -52,3 +52,17 @@ def rmsnorm(x, scale, *, eps: float = 1e-5, bn: int = 256,
         name="rmsnorm",
     )(xf, scale)
     return out.reshape(orig_shape)
+
+
+def cost_estimate(x_shape, itemsize: int) -> dict:
+    """Analytic per-call ``{flops, bytes}`` for one rmsnorm call (the
+    marker-region roofline fallback).  Bandwidth-bound by design: ~4
+    VPU ops per element (square, mean-accumulate, rsqrt-scale, gain)
+    against one read + one write of x plus the scale vector.
+    """
+    numel = 1
+    for dim in x_shape:
+        numel *= int(dim)
+    d = int(x_shape[-1])
+    return {"flops": 4.0 * numel,
+            "bytes": float((2 * numel + d) * itemsize)}

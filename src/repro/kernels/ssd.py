@@ -100,3 +100,24 @@ def ssd_scan(x, a, b, c, *, chunk: int = 128, interpret: bool = False):
         interpret=interpret,
         name="ssd_scan",
     )(x, a, b, c)
+
+
+def cost_estimate(x_shape, state_n: int, itemsize: int, *,
+                  chunk: int = 128) -> dict:
+    """Analytic per-call ``{flops, bytes}`` for one ssd_scan call (the
+    marker-region roofline fallback when HLO cost analysis is
+    unavailable).
+
+    Per chunk of C steps the kernel runs four contractions: the
+    within-chunk attention pair (c@b^T then p@x, 2*C^2*(N+P)) and the
+    inter-chunk state pair (c@S and b^T@xw, 2*C*N*P each).  Bytes: one
+    read of x/a/b/c + one write of y.
+    """
+    bsz, h, l, p = x_shape
+    n = state_n
+    c = min(chunk, l)
+    nc = l // max(c, 1)
+    per_chunk = 2.0 * c * c * (n + p) + 4.0 * c * n * p
+    flops = float(bsz * h * nc * per_chunk)
+    elems = bsz * h * l * (2 * p + 2 * n + 1)           # x + y + b + c + a
+    return {"flops": flops, "bytes": float(elems * itemsize)}

@@ -11,6 +11,7 @@ job (paper's "jobs" are agnostic to what runs inside).
 from __future__ import annotations
 
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Callable, Optional
@@ -67,12 +68,18 @@ class ServingEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
-                 max_len: int = 256, usermetric=None, jit: bool = True):
+                 max_len: int = 256, usermetric=None, markers=None,
+                 jit: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.um = usermetric
+        # marker regions (repro.core.marker) for the request phases —
+        # default to the usermetric's session so serving phases land in
+        # the same per-region roofline view as training
+        self.markers = markers if markers is not None else (
+            usermetric.markers if usermetric is not None else None)
         self._queue: list = []
         self._next_rid = 0
         prefill, decode = make_serve_fns(cfg)
@@ -107,16 +114,20 @@ class ServingEngine:
         for i, r in enumerate(reqs):                 # right-align prompts
             toks[i, plen - len(r.prompt):] = r.prompt
 
+        m = self.markers
         t0 = time.monotonic()
-        cache = init_cache(self.cfg, b, self.max_len)
-        last_logits, cache = self.prefill(self.params, jnp.asarray(toks),
-                                          cache)
-        next_tok = jnp.argmax(last_logits, axis=-1)
+        with (m.region("serve:prefill",
+                       counters={"tokens": float(b * plen)})
+              if m else nullcontext()):
+            cache = init_cache(self.cfg, b, self.max_len)
+            last_logits, cache = self.prefill(self.params,
+                                              jnp.asarray(toks), cache)
+            next_tok = jnp.argmax(last_logits, axis=-1)
+            tk0 = np.asarray(next_tok)       # sync: real prefill time
         prefill_s = time.monotonic() - t0
         self._metric("serve_prefill", {"batch": b, "prompt_len": plen,
                                        "prefill_time_s": prefill_s})
         now = time.monotonic()
-        tk0 = np.asarray(next_tok)
         for i, r in enumerate(reqs):
             r.first_token_at = now
             r.output.append(int(tk0[i]))
@@ -124,18 +135,22 @@ class ServingEngine:
         max_new = max(r.max_new_tokens for r in reqs)
         pos = plen
         t_dec = time.monotonic()
-        for step in range(max_new - 1):
-            logits, cache = self.decode(self.params, cache,
-                                        next_tok[:, None],
-                                        jnp.int32(pos))
-            next_tok = jnp.argmax(logits, axis=-1)
-            pos += 1
-            tk = np.asarray(next_tok)
-            for i, r in enumerate(reqs):
-                if len(r.output) < r.max_new_tokens:
-                    r.output.append(int(tk[i]))
+        dec_region = m.region("serve:decode") if m else nullcontext()
+        with dec_region:
+            for step in range(max_new - 1):
+                logits, cache = self.decode(self.params, cache,
+                                            next_tok[:, None],
+                                            jnp.int32(pos))
+                next_tok = jnp.argmax(logits, axis=-1)
+                pos += 1
+                tk = np.asarray(next_tok)
+                for i, r in enumerate(reqs):
+                    if len(r.output) < r.max_new_tokens:
+                        r.output.append(int(tk[i]))
+            n_tok = sum(len(r.output) for r in reqs)
+            if m:
+                dec_region.add(tokens=float(n_tok - b))
         decode_s = time.monotonic() - t_dec
-        n_tok = sum(len(r.output) for r in reqs)
         self._metric("serve_decode", {
             "batch": b, "new_tokens": n_tok,
             "decode_time_s": decode_s,
@@ -148,6 +163,11 @@ class ServingEngine:
                 "ttft_s": r.first_token_at - r.submitted_at,
                 "latency_s": r.finished_at - r.submitted_at,
                 "new_tokens": len(r.output)}, rid=str(r.rid))
+            if m:
+                # externally-timed: a request's latency spans queueing,
+                # not a code block on this thread
+                m.record("serve:request", r.finished_at - r.submitted_at,
+                         counters={"tokens": float(len(r.output))})
             done.append(r)
         return done
 

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import math
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -51,13 +52,42 @@ class TrainResult:
     resumed_from: Optional[int]
 
 
+def compiled_step_constants(compiled, *, model_flops: float,
+                            tokens_per_step: float) -> dict:
+    """HPM step constants from one compiled step artifact.
+
+    ``cost_analysis_dict`` (XLA's own cost analysis) supplies flops/bytes
+    but reports nothing for collectives, so the collective operand/wire
+    bytes come from the trip-count-aware HLO walk (``analyze_hlo``) over
+    the same artifact — per device, matching the other constants.
+    """
+    from repro.launch.hlo_analysis import analyze_hlo, cost_analysis_dict
+    ca = cost_analysis_dict(compiled)
+    try:
+        per_dev = analyze_hlo(compiled.as_text())["per_device"]
+    except Exception:
+        per_dev = {}
+    return {
+        "hlo_flops": float(ca.get("flops", 0.0))
+        or float(per_dev.get("flops", 0.0)),
+        "hlo_bytes": float(ca.get("bytes accessed", 0.0))
+        or float(per_dev.get("bytes", 0.0)),
+        "collective_bytes": float(
+            per_dev.get("collective_operand_bytes", 0.0)),
+        "wire_bytes": float(per_dev.get("collective_wire_bytes", 0.0)),
+        "model_flops": model_flops,
+        "tokens_per_step": tokens_per_step,
+    }
+
+
 def train(model_cfg: ModelConfig, train_cfg: TrainConfig,
           shape: ShapeConfig, *, stack: Optional[MonitoringStack] = None,
           hosts: Optional[list] = None, jit: bool = True,
           pc=None, mesh=None, in_shardings=None,
           fail_at_step: Optional[int] = None,
           step_callback: Optional[Callable] = None,
-          user: str = "user", job_id: Optional[str] = None) -> TrainResult:
+          user: str = "user", job_id: Optional[str] = None,
+          markers: bool = True) -> TrainResult:
     """Run (or resume) a monitored training job on the current devices."""
     stack = stack or MonitoringStack.inprocess(out_dir="lms_out")
     hosts = hosts or [f"host{i}" for i in range(jax.process_count())]
@@ -97,6 +127,11 @@ def train(model_cfg: ModelConfig, train_cfg: TrainConfig,
     model_flops = 6 * _active_params(model_cfg) * tokens_per_step
     agent = stack.host_agent(host)
     um = stack.usermetric(host=host)
+    # marker regions (repro.core.marker): per-phase attribution of the
+    # loop itself — data_wait / train_step / checkpoint — emitted as the
+    # ``marker`` measurement for the per-region roofline query
+    mk = um.markers if (markers and train_cfg.monitor) else None
+    step_counters: dict = {}
     halted = {"reason": None}
 
     @stack.on_finding
@@ -126,25 +161,40 @@ def train(model_cfg: ModelConfig, train_cfg: TrainConfig,
                          np_batch.items()}
                 if jit and not compiled_consts_set:
                     # one-time (pre-execution, params still alive despite
-                    # donation): compiled-artifact HPM constants -> agent
-                    from repro.launch.hlo_analysis import cost_analysis_dict
+                    # donation): compiled-artifact HPM constants -> agent,
+                    # including the real per-device collective operand /
+                    # wire bytes from the HLO walk (the seed hardcoded
+                    # collective_bytes=0.0 and starved the ICI group)
                     try:
-                        ca = cost_analysis_dict(train_step.lower(
-                            params, opt_state, batch, step_idx).compile())
+                        consts = compiled_step_constants(
+                            train_step.lower(params, opt_state, batch,
+                                             step_idx).compile(),
+                            model_flops=model_flops,
+                            tokens_per_step=tokens_per_step)
                     except Exception:
-                        ca = {}
-                    agent.set_step_constants(
-                        hlo_flops=float(ca.get("flops", 0.0)),
-                        hlo_bytes=float(ca.get("bytes accessed", 0.0)),
-                        collective_bytes=0.0,
-                        model_flops=model_flops,
-                        tokens_per_step=tokens_per_step)
+                        consts = {"model_flops": model_flops,
+                                  "tokens_per_step": tokens_per_step}
+                    agent.set_step_constants(**consts)
+                    # static per-call work counters seeding the
+                    # train_step marker region's roofline operands
+                    step_counters = {
+                        k: v for k, v in
+                        (("flops", consts.get("hlo_flops", 0.0)),
+                         ("bytes", consts.get("hlo_bytes", 0.0)))
+                        if v and v > 0.0}
                     compiled_consts_set = True
 
+                if mk:
+                    mk.record("data_wait", data_wait)
                 t0 = time.monotonic()
-                params, opt_state, metrics = train_step(
-                    params, opt_state, batch, step_idx)
-                loss = float(metrics["loss"])
+                with (mk.region("train_step", counters=step_counters or
+                                None) if mk else nullcontext()):
+                    # fwd + bwd + optimizer update are one fused jitted
+                    # step (donated buffers) — not separable into
+                    # sub-regions without splitting the compiled artifact
+                    params, opt_state, metrics = train_step(
+                        params, opt_state, batch, step_idx)
+                    loss = float(metrics["loss"])
                 step_time = time.monotonic() - t0
 
                 # LMS per-step emission
@@ -169,9 +219,11 @@ def train(model_cfg: ModelConfig, train_cfg: TrainConfig,
                     step_callback(step, metrics)
                 if ckpt and step % train_cfg.ckpt_interval == 0 and \
                         not math.isnan(loss):
-                    ckpt.save(step, {"params": params,
-                                     "opt_state": opt_state},
-                              {"arch": model_cfg.name, "step": step})
+                    with (mk.region("checkpoint") if mk
+                          else nullcontext()):
+                        ckpt.save(step, {"params": params,
+                                         "opt_state": opt_state},
+                                  {"arch": model_cfg.name, "step": step})
                     um.event("run_state", f"checkpoint at {step}")
                 if fail_at_step is not None and step >= fail_at_step:
                     um.event("run_state", f"injected failure at {step}")
@@ -180,6 +232,9 @@ def train(model_cfg: ModelConfig, train_cfg: TrainConfig,
                     um.event("run_state", f"halt: {halted['reason']}")
                     break
             um.event("run_state", "finished")
+            # flush inside the job bracket so marker points are enriched
+            # with the live job's tags (jobid/username) by the router
+            um.flush()
     finally:
         um.flush()
         loader.close()

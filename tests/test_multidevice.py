@@ -163,3 +163,47 @@ def test_elastic_restart_smaller_mesh(tmp_path):
         assert len(emb.sharding.device_set) == 4
         print("ELASTIC OK")
     """)
+
+
+def test_compiled_step_constants_sharded_collectives():
+    """Regression (marker PR satellite): the seed's train loop hardcoded
+    collective_bytes=0.0 into the HPM step constants.  A model-sharded
+    step compiles all-reduces/all-gathers; compiled_step_constants must
+    surface their operand and wire bytes from the HLO walk."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config, TrainConfig, ShapeConfig
+        from repro.launch.mesh import make_mesh_for
+        from repro.launch.steps import build_train_bundle
+        from repro.models.transformer import init_model_params, model_specs
+        from repro.parallel.sharding import shardings_for_specs, TRAIN_RULES
+        from repro.train.optim import get_optimizer
+        from repro.train.loop import compiled_step_constants
+        from repro.data import SyntheticTokenSource
+
+        cfg = get_config("lms-demo", smoke=True)
+        tcfg = TrainConfig(learning_rate=5e-3, warmup_steps=1)
+        shape = ShapeConfig("t", seq_len=32, global_batch=8, kind="train")
+        mesh = make_mesh_for(8, model=2)
+        bundle = build_train_bundle(cfg, shape, tcfg, mesh)
+        params = init_model_params(cfg, 0)
+        opt = get_optimizer(tcfg)
+        opt_state = opt.init(params)
+        psh = shardings_for_specs(model_specs(cfg), TRAIN_RULES, mesh)
+        params = jax.device_put(params, psh)
+        step = jax.jit(bundle.fn, in_shardings=bundle.in_shardings)
+        t = SyntheticTokenSource(cfg.vocab_size, seed=0).batch(0, 8, 32)
+        batch = {"tokens": jnp.asarray(t[:, :-1]),
+                 "labels": jnp.asarray(t[:, 1:])}
+        with mesh:
+            compiled = step.lower(params, opt_state, batch,
+                                  jnp.int32(0)).compile()
+        consts = compiled_step_constants(compiled, model_flops=1.0,
+                                         tokens_per_step=8 * 32)
+        assert consts["hlo_flops"] > 0
+        assert consts["collective_bytes"] > 0, consts
+        assert consts["wire_bytes"] > 0, consts
+        print("COLLECTIVE_BYTES", consts["collective_bytes"],
+              consts["wire_bytes"])
+    """)
+    assert "COLLECTIVE_BYTES" in out

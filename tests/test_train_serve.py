@@ -138,3 +138,33 @@ def test_straggler_finding_triggers_elastic_halt(tmp_path):
     ev = stack.backend.db("global").select("run_state")
     texts = [v for s in ev for v in s.values["event"]]
     assert any("halt: straggler:peer-h9" in t for t in texts)
+
+
+def test_train_markers_roofline_end_to_end(tmp_path):
+    """ROADMAP item 3 acceptance: train with markers on, then one
+    roofline QuerySpec answers per-region fractions from the TSDB."""
+    from repro.core.marker import MARKER_MEASUREMENT, roofline_spec
+
+    cfg = get_config("lms-demo", smoke=True)
+    tcfg = TrainConfig(total_steps=6, warmup_steps=1)
+    stack = MonitoringStack.inprocess(out_dir=str(tmp_path))
+    try:
+        r = train(cfg, tcfg, TINY, stack=stack, job_id="mk-e2e")
+        assert r.steps_run == 6
+        db = stack.backend.db("global")
+        regions = set(db.tag_values(MARKER_MEASUREMENT, "region"))
+        assert {"train_step", "data_wait"} <= regions
+        # marker points get job enrichment like every other measurement
+        s = db.select(MARKER_MEASUREMENT, ["time_s"],
+                      tags={"region": "train_step"})[0]
+        assert s.tags.get("jobid") == "mk-e2e"
+        # the one canonical spec, served by the query engine
+        res = stack.backend.query_engine("global").query(
+            roofline_spec("mk-e2e"))
+        g = res.groups["train_step"]
+        fracs = [v for v in g["roofline_frac"]["values"] if v is not None]
+        assert fracs and all(f > 0.0 for f in fracs)
+        # data_wait carries no flops/bytes: timing only, no roofline
+        assert "roofline_frac" not in res.groups["data_wait"]
+    finally:
+        stack.close()
